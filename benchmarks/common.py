@@ -1,0 +1,29 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+ROWS: List[Dict] = []
+
+
+def timed(fn: Callable, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, seconds: float, **derived):
+    ROWS.append(dict(name=name, us_per_call=seconds * 1e6, **derived))
+    extra = " ".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{seconds * 1e6:.1f},{extra}", flush=True)
+
+
+def datasets(small_only: bool = False):
+    names = ["di_af", "fr", "di_st"] if small_only else [
+        "di_af", "de_ti", "fr", "di_st", "it", "digg"]
+    return names

@@ -1,0 +1,38 @@
+"""Butterfly counting throughput (alg.1 analogue): numpy oracle vs jnp
+dense matmul vs the Pallas kernel (interpret mode on this container)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import counting, ref
+from repro.core.graph import powerlaw_bipartite
+from repro.kernels import ops
+
+from .common import emit, timed
+
+
+def run(small: bool = True):
+    sizes = [(200, 100, 1000)] if small else [
+        (200, 100, 1000), (600, 300, 4000), (1200, 600, 9000)]
+    for n_u, n_v, m in sizes:
+        g = powerlaw_bipartite(n_u, n_v, m, seed=7)
+        A = jnp.asarray(g.adjacency())
+
+        (bu, _), t_ref = timed(ref.vertex_butterflies_ref, g)
+        out, t_jnp = timed(
+            lambda: np.asarray(counting.vertex_butterflies(A)), repeat=3)
+        out_k, t_kern = timed(
+            lambda: np.asarray(ops.vertex_butterflies(A, interpret=True)),
+            repeat=1)
+        assert np.array_equal(np.rint(out).astype(np.int64), bu)
+        assert np.array_equal(np.rint(out_k).astype(np.int64), bu)
+        emit(f"count.{n_u}x{n_v}.oracle", t_ref)
+        emit(f"count.{n_u}x{n_v}.jnp_mxu", t_jnp,
+             speedup=round(t_ref / max(t_jnp, 1e-9), 1))
+        emit(f"count.{n_u}x{n_v}.pallas_interp", t_kern,
+             note="interpret-mode;compiled-on-TPU-target")
+
+
+if __name__ == "__main__":
+    run(small=False)

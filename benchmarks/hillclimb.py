@@ -1,0 +1,134 @@
+"""§Perf hillclimb driver.
+
+Each iteration = (cell, hypothesis, cfg overrides).  Re-derives the
+roofline terms with the override applied and appends a structured record
+(hypothesis → change → before → after → verdict) to
+experiments/perf/hillclimb.json.
+
+Run AFTER the baseline roofline sweep:
+    PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # before first jax init
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import json  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PERF = os.path.join(ROOT, "experiments", "perf")
+BASE = os.path.join(ROOT, "experiments", "roofline", "results.json")
+
+# (cell, tag, hypothesis, overrides, expected-effect-field)
+ITERATIONS = [
+    # ---- cell A: attention-dominated causal prefill -----------------
+    ("codeqwen1_5_7b", "prefill_32k", "causal_skip",
+     "causal attention computes the full S² block grid; skipping the "
+     "upper-triangular kv blocks should cut attention FLOPs ~2x -> "
+     "compute term down ~30-45% on this attention-heavy 32k prefill",
+     dict(attn_causal_skip=True)),
+    ("codeqwen1_5_7b", "prefill_32k", "causal_skip+bq1024",
+     "smaller q/kv blocks tighten the diagonal waste of block-causal "
+     "skipping (finer triangle) at slightly worse MXU utilization; "
+     "expect a further few % off the compute term",
+     dict(attn_causal_skip=True, attn_block_q=1024, attn_block_k=1024)),
+    # ---- cell B: memory-bound train cell ----------------------------
+    ("tinyllama_1_1b", "train_4k", "dots_remat",
+     "full remat recomputes every matmul in the bwd pass (8ND vs 6ND); "
+     "saving dot outputs should cut the compute term ~25% and bytes "
+     "~15-20% at higher live memory",
+     dict(remat_policy="dots")),
+    ("tinyllama_1_1b", "train_4k", "dots+chunked_loss",
+     "the [b,s,32k-vocab] logits+softmax dominates temp bytes; chunked "
+     "CE (512-token chunks) should cut bytes_accessed and temp memory "
+     "with no FLOP change",
+     dict(remat_policy="dots", loss_chunk=512)),
+    ("tinyllama_1_1b", "train_4k", "dots+chunk+causal_skip",
+     "stack all three exact levers; expect compounded compute+memory "
+     "drop",
+     dict(remat_policy="dots", loss_chunk=512, attn_causal_skip=True)),
+    # ---- cell C: MLA decode (representative of deepseek's mechanism) --
+    ("deepseek_v2_236b", "decode_32k", "mla_absorb",
+     "naive MLA decode re-expands the compressed cache to k_nope/v "
+     "[b,S,H,128] every step (O(S·lora·H·(dn+dv)) flops + bytes); "
+     "absorbing W_uk into q and W_uv into the output acts on the "
+     "compressed cache directly -> expect ~100x fewer attention flops "
+     "and an order of magnitude off the memory term",
+     dict(mla_absorb=True)),
+    # ---- cell D: most collective-bound — xlstm decode ----------------
+    ("xlstm_1_3b", "decode_32k", "shard_state_dim",
+     "xlstm has only 4 heads, so the [G,M,B,4,1024,1024] matrix memory "
+     "cannot shard over model=16 and is replicated -> every step "
+     "all-reduces the full state.  Sharding the 1024-wide feature dim "
+     "over model instead should collapse the collective term by ~16x",
+     dict(shard_state_dim=True)),
+    # ---- cell E: worst roofline fraction — whisper train -------------
+    ("whisper_large_v3", "train_4k", "chunk+dots",
+     "whisper train is the worst-fraction cell (useful 0.35, memory "
+     "bound): the 51866-vocab logits over 4096 tokens dominate bytes "
+     "and full remat doubles matmul work; chunked CE + dots policy "
+     "should cut memory and compute terms together",
+     dict(remat_policy="dots", loss_chunk=512)),
+    # ---- round 2 on whisper: decoder self-attn is causal -------------
+    ("whisper_large_v3", "train_4k", "chunk+dots+causal_skip",
+     "whisper's decoder self-attention is causal (encoder/cross are "
+     "not): block-skipping there should shave the remaining compute "
+     "term a further ~10-15% on top of chunk+dots",
+     dict(remat_policy="dots", loss_chunk=512, attn_causal_skip=True)),
+    # ---- round 3: sequence parallelism on the prefill cell -----------
+    ("codeqwen1_5_7b", "prefill_32k", "causal_skip+seq_shard",
+     "with 32k-token activations, sharding the sequence dim over "
+     "'model' at layer boundaries (SP) splits norm/residual bytes 16x; "
+     "attention must re-gather seq, so collectives should rise — net "
+     "memory win if bytes drop > collective growth",
+     dict(attn_causal_skip=True, seq_shard=True)),
+]
+
+
+def main():
+    from repro.launch.roofline import roofline_cell
+
+    os.makedirs(PERF, exist_ok=True)
+    out_path = os.path.join(PERF, "hillclimb.json")
+    results = []
+    if os.path.exists(out_path):
+        results = json.load(open(out_path))
+    done = {(r["arch"], r["shape"], r["tag"]) for r in results}
+
+    base = {}
+    if os.path.exists(BASE):
+        for r in json.load(open(BASE)):
+            if r["status"] == "ok":
+                base[(r["arch"], r["shape"])] = r
+
+    cache = {}
+    for arch, shape, tag, hypothesis, ov in ITERATIONS:
+        if (arch, shape, tag) in done:
+            continue
+        rec = roofline_cell(arch, shape, use_cache=cache,
+                            extra_overrides=ov, tag=tag)
+        rec["hypothesis"] = hypothesis
+        rec["overrides"] = {k: str(v) for k, v in ov.items()}
+        b = base.get((arch, shape))
+        if b and rec["status"] == "ok":
+            rec["delta"] = {
+                k: round(rec[k] / max(b[k], 1e-30) - 1, 4)
+                for k in ("t_compute_s", "t_memory_s", "t_collective_s")
+            }
+            print(f"[hillclimb] {arch} {shape} {tag}: "
+                  f"compute {b['t_compute_s']:.2e}->"
+                  f"{rec['t_compute_s']:.2e} "
+                  f"mem {b['t_memory_s']:.2e}->{rec['t_memory_s']:.2e} "
+                  f"coll {b['t_collective_s']:.2e}->"
+                  f"{rec['t_collective_s']:.2e}", flush=True)
+        results.append(rec)
+        with open(out_path, "w") as f:
+            json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

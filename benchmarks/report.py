@@ -1,0 +1,100 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+results written by repro.launch.dryrun / repro.launch.roofline.
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRY = os.path.join(ROOT, "experiments", "dryrun", "results.json")
+ROOF = os.path.join(ROOT, "experiments", "roofline", "results.json")
+
+
+def _fmt(x, unit=""):
+    if x is None:
+        return "-"
+    if abs(x) >= 1e12:
+        return f"{x/1e12:.2f}T{unit}"
+    if abs(x) >= 1e9:
+        return f"{x/1e9:.2f}G{unit}"
+    if abs(x) >= 1e6:
+        return f"{x/1e6:.2f}M{unit}"
+    return f"{x:.3g}{unit}"
+
+
+def dryrun_table() -> str:
+    if not os.path.exists(DRY):
+        return "_dry-run results not yet generated_\n"
+    rs = json.load(open(DRY))
+    lines = [
+        "| arch | shape | mesh | status | HLO flops/dev (scan-once) | "
+        "bytes/dev | collective B/dev | temp B/dev | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rs, key=lambda r: (r["arch"], r["shape"],
+                                       r.get("multi_pod", False))):
+        mesh = "2×16×16" if r.get("multi_pod") else "16×16"
+        if r["status"] == "ok":
+            coll = sum(r["collective_bytes"].values())
+            tmp = r.get("mem", {}).get("temp_bytes")
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ok | "
+                f"{_fmt(r['flops'])} | {_fmt(r['bytes_accessed'])} | "
+                f"{_fmt(coll)} | {_fmt(tmp)} | "
+                f"{r['time_compile_s']} |")
+        elif r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | "
+                f"SKIP ({r['reason'][:60]}…) | - | - | - | - | - |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | ERROR | - | - "
+                f"| - | - | - |")
+    ok = sum(r["status"] == "ok" for r in rs)
+    sk = sum(r["status"] == "skipped" for r in rs)
+    er = len(rs) - ok - sk
+    lines.append("")
+    lines.append(f"**{ok} compiled, {sk} documented skips, {er} errors** "
+                 f"(skips = long_500k on pure full-attention archs, "
+                 f"per DESIGN.md §4).")
+    return "\n".join(lines) + "\n"
+
+
+def roofline_table() -> str:
+    if not os.path.exists(ROOF):
+        return "_roofline results not yet generated_\n"
+    rs = json.load(open(ROOF))
+    lines = [
+        "| arch | shape | t_compute | t_memory | t_collective | "
+        "bottleneck | MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{r['t_compute_s']:.2e}s | {r['t_memory_s']:.2e}s | "
+                f"{r['t_collective_s']:.2e}s | **{r['bottleneck']}** | "
+                f"{r['useful_flop_ratio']:.2f} | "
+                f"{r['roofline_fraction']:.2f} |")
+        elif r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"skip | - | - |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                         f"ERROR | - | - |")
+    return "\n".join(lines) + "\n"
+
+
+def main():
+    print("## §Dry-run\n")
+    print(dryrun_table())
+    print("\n## §Roofline\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+``python -m benchmarks.run [--full]`` prints ``name,us_per_call,derived``
+CSV rows.  --full runs the larger dataset sweeps used for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module names")
+    args = ap.parse_args()
+    small = not args.full
+
+    from . import (counting, optimizations, p_sweep, scaling,
+                   tip_decomposition, wing_decomposition)
+    mods = dict(
+        counting=counting,
+        wing=wing_decomposition,
+        tip=tip_decomposition,
+        p_sweep=p_sweep,
+        optimizations=optimizations,
+        scaling=scaling,
+    )
+    picks = args.only.split(",") if args.only else list(mods)
+    print("name,us_per_call,derived")
+    for name in picks:
+        mods[name].run(small=small)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Fig. 8/11 analogue: multi-device scaling of distributed PBNG.
+
+One physical core backs all host devices here, so wall-clock speedup is
+not observable; we report the *structural* scaling quantities instead:
+per-device work (link-shard size, FD partitions per device) and the
+synchronization count, which is device-count-invariant — exactly the
+property that gave the paper its 19.7× on real cores.  Wall time is
+reported for completeness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import emit
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = """
+import json, time
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.graph import powerlaw_bipartite
+from repro.core.beindex import build_beindex
+from repro.core.distributed import distributed_wing_decomposition
+n = {n_dev}
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("peel",))
+g = powerlaw_bipartite(300, 150, 1400, seed=4)
+be = build_beindex(g)
+t0 = time.time()
+theta, stats = distributed_wing_decomposition(g, mesh, P_parts=32, be=be)
+dt = time.time() - t0
+stats.update(wall_s=dt, links_per_dev=-(-be.n_links // n),
+             theta_sum=int(theta.sum()))
+print(json.dumps(stats))
+"""
+
+
+def run(small: bool = True):
+    devs = (1, 4) if small else (1, 2, 4, 8, 16)
+    base = None
+    for n in devs:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = os.path.join(ROOT, "src")
+        out = subprocess.run(
+            [sys.executable, "-c", textwrap.dedent(_SCRIPT.format(n_dev=n))],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        stats = json.loads(out.stdout.strip().splitlines()[-1])
+        if base is None:
+            base = stats["theta_sum"]
+        assert stats["theta_sum"] == base, "device count changed results!"
+        emit(f"scaling.wing.dev{n}", stats["wall_s"],
+             rho_cd=stats["rho_cd"], links_per_dev=stats["links_per_dev"],
+             parts_per_dev=-(-stats["n_parts"] // n))
+
+
+if __name__ == "__main__":
+    run(small=False)

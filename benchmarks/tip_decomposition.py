@@ -1,0 +1,33 @@
+"""Table 4 reproduction: tip decomposition — time, traversal work and ρ
+for both vertex sets of each proxy dataset."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ref
+from repro.core.graph import paper_proxy_dataset
+from repro.core.peel import tip_decomposition
+
+from .common import emit, timed
+
+
+def run(small: bool = True):
+    names = ["di_af", "fr"] if small else [
+        "di_af", "fr", "di_st", "it", "digg", "lj"]
+    for name in names:
+        g = paper_proxy_dataset(name)
+        for side in ("u", "v"):
+            res, t = timed(tip_decomposition, g, side=side, P=12)
+            s = res.stats
+            emit(f"tip.{name}{side.upper()}.pbng", t,
+                 rho=s.rho_cd + s.rho_fd_max, rho_cd=s.rho_cd,
+                 rho_parb=s.rho_fd_total, recounts=s.recounts,
+                 sync_reduction=round(s.sync_reduction, 1))
+            if g.m <= 3000:
+                _, t_bup = timed(ref.bup_tip_ref, g, side)
+                emit(f"tip.{name}{side.upper()}.bup", t_bup,
+                     kind="sequential-oracle")
+
+
+if __name__ == "__main__":
+    run(small=False)

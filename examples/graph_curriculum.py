@@ -1,0 +1,46 @@
+"""PBNG → LM bridge: wing-decompose a user×item graph, build a
+dense-subgraph curriculum, and train a small LM on link prediction —
+the paper's recommendation-system application end to end.
+
+    PYTHONPATH=src python examples/graph_curriculum.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.configs import get_config
+from repro.core import powerlaw_bipartite
+from repro.data import curriculum_sequences, sequence_batches
+from repro.models.config import reduced
+from repro.train import TrainConfig, make_train_step
+from repro.train.optimizer import adamw_init, AdamWConfig
+
+# 1. interaction graph -> density-ordered training sequences
+g = powerlaw_bipartite(n_u=200, n_v=100, m=1200, seed=3)
+seqs = curriculum_sequences(g, n_levels=4, P=8, max_len=32)
+print(f"curriculum: {len(seqs)} sequences from {g.m} interactions "
+      f"(densest first)")
+
+# 2. a small LM whose vocabulary is the node set
+cfg = reduced(get_config("tinyllama_1_1b"),
+              vocab=g.n_u + g.n_v, max_seq=32, n_layers=2)
+params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+opt = adamw_init(params)
+step = jax.jit(make_train_step(
+    cfg, TrainConfig(opt=AdamWConfig(lr=1e-2, total_steps=200))))
+
+# 3. train on the curriculum (dense cores first)
+losses = []
+epochs = 3
+for epoch in range(epochs):
+    for batch in sequence_batches(seqs, batch=16, seq_len=31):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+print(f"link-prediction loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+      f"over {len(losses)} steps")
+assert losses[-1] < losses[0], "training diverged"
+print("curriculum training ✓")

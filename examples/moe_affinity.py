@@ -1,0 +1,35 @@
+"""MoE routing analysis with PBNG: tip-decompose the token×expert graph
+of a (reduced) DBRX MoE layer to find densely co-activated expert
+groups — offline diagnostics for expert placement.
+
+    PYTHONPATH=src python examples/moe_affinity.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.configs import get_config
+from repro.core.analysis import moe_affinity, routing_graph
+from repro.models.config import reduced
+
+cfg = reduced(get_config("dbrx_132b"))
+params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
+
+# route a batch of tokens through layer-0's router
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+router = params["blocks"]["ffn"]["router"][0]
+logits = jnp.einsum("bsd,de->bse", x, router).reshape(-1, cfg.n_experts)
+_, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+assignments = np.asarray(idx)
+print(f"routed {assignments.shape[0]} tokens to top-{cfg.top_k} of "
+      f"{cfg.n_experts} experts")
+
+g = routing_graph(assignments, cfg.n_experts)
+tips = moe_affinity(assignments, cfg.n_experts, P=4)
+order = np.argsort(-tips)
+print("expert co-activation tip numbers (densest first):")
+for e in order:
+    print(f"  expert {e:2d}: tip={tips[e]:6d}")
+print("experts in the same high-tip core are EP-shard co-location "
+      "candidates")

@@ -1,0 +1,44 @@
+"""Quickstart: decompose a bipartite network with PBNG in ~30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    powerlaw_bipartite,
+    tip_decomposition,
+    wing_decomposition,
+    ref,
+)
+
+# A user×item interaction graph with realistic degree skew.
+g = powerlaw_bipartite(n_u=300, n_v=120, m=1500, seed=42)
+print(f"graph: |U|={g.n_u} |V|={g.n_v} |E|={g.m} "
+      f"butterflies={ref.butterfly_count_total(g)}")
+
+# --- wing decomposition (edge peeling): the dense-subgraph hierarchy
+res = wing_decomposition(g, P=32, engine="beindex")
+theta = res.theta
+print(f"wing numbers: max={theta.max()} "
+      f"levels={np.unique(theta).size}")
+print(f"synchronization: {res.stats.rho_cd} global rounds (CD; FD is "
+      f"sync-free) vs {res.stats.rho_fd_total} level-by-level rounds "
+      f"-> {res.stats.sync_reduction:.1f}x reduction; "
+      f"FD critical path {res.stats.rho_fd_max} rounds on "
+      f"{res.stats.p_effective} independent partitions")
+
+# densest community core = edges at the top wing-number level
+top = g.edges[theta >= np.quantile(theta, 0.95)]
+print(f"densest 5% core: {top.shape[0]} edges touching "
+      f"{np.unique(top[:, 0]).size} users / "
+      f"{np.unique(top[:, 1]).size} items")
+
+# --- tip decomposition (vertex peeling): per-user density
+res_u = tip_decomposition(g, side="u", P=8)
+print(f"tip numbers (users): max={res_u.theta.max()}")
+
+# cross-check against the sequential oracle on a subsample
+g_small = powerlaw_bipartite(60, 30, 220, seed=7)
+assert np.array_equal(
+    wing_decomposition(g_small, P=4).theta, ref.bup_wing_ref(g_small))
+print("PBNG ≡ bottom-up peeling: verified ✓")

@@ -1,0 +1,23 @@
+"""End-to-end training driver example: a reduced TinyLlama on synthetic
+data for a few hundred steps, with checkpointing and auto-resume.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+import types
+
+from repro.launch.train import run
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--arch", default="tinyllama_1_1b")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_quickstart_ckpt")
+a = ap.parse_args()
+
+args = types.SimpleNamespace(
+    arch=a.arch, reduced=True, steps=a.steps, batch=8, seq=128,
+    lr=3e-3, microbatches=1, seed=0, log_every=20,
+    ckpt_dir=a.ckpt_dir, ckpt_every=100, resume="auto", crash_at=None,
+)
+sys.exit(run(args))

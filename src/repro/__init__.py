@@ -1,0 +1,7 @@
+"""repro — PBNG (parallel bipartite network peeling) as a production
+JAX framework, plus the assigned-architecture training/serving stack.
+
+Subpackages: core (the paper), kernels (Pallas), models, configs,
+sharding, train, data, serve, launch.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,52 @@
+"""PBNG core — parallel peeling of bipartite networks (the paper's contribution).
+
+Public API:
+    BipartiteGraph, random_bipartite, powerlaw_bipartite, paper_proxy_dataset
+    build_beindex, BEIndex
+    tip_decomposition, wing_decomposition      (two-phased PBNG)
+    distributed_wing_decomposition             (shard_map, multi-device)
+    ref                                        (pure-python oracles)
+"""
+from .graph import (
+    BipartiteGraph,
+    from_tsv,
+    random_bipartite,
+    powerlaw_bipartite,
+    paper_proxy_dataset,
+    PAPER_PROXIES,
+)
+from .beindex import BEIndex, build_beindex
+from .peel import (
+    PeelResult,
+    PeelStats,
+    tip_decomposition,
+    wing_decomposition,
+    wing_decomposition_bepc,
+    bup_levels,
+)
+from .distributed import (
+    distributed_tip_decomposition,
+    distributed_wing_decomposition,
+)
+from . import counting, ref
+
+__all__ = [
+    "BipartiteGraph",
+    "random_bipartite",
+    "powerlaw_bipartite",
+    "paper_proxy_dataset",
+    "PAPER_PROXIES",
+    "BEIndex",
+    "build_beindex",
+    "PeelResult",
+    "PeelStats",
+    "tip_decomposition",
+    "wing_decomposition",
+    "bup_levels",
+    "wing_decomposition_bepc",
+    "from_tsv",
+    "distributed_tip_decomposition",
+    "distributed_wing_decomposition",
+    "counting",
+    "ref",
+]

@@ -1,0 +1,625 @@
+"""Distributed PBNG — shard_map peeling for multi-device meshes.
+
+Maps the paper's two phases onto an SPMD mesh:
+
+* **CD** (coarse): the BE-Index *links* are sharded across devices; each
+  round every device computes its partial bloom-death counts and per-edge
+  losses with ``segment_sum`` and a single ``psum`` combines them.  One
+  collective per peeling round — the JAX statement of "little
+  synchronization".  Supports / frontier masks are replicated (O(m), tiny
+  next to the index).
+
+* **FD** (fine): partitions are padded to a common size, stacked on a
+  leading axis and `shard_map`-ped over the ``peel`` mesh axis.  The
+  per-partition while_loop contains **no collectives at all** — the HLO
+  proves the paper's "no global synchronization" claim structurally.
+
+Used by ``launch/peel.py`` for the production-mesh dry-run and by the
+multi-device tests (spawned with forced host device counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .beindex import BEIndex, build_beindex
+from .graph import BipartiteGraph
+
+__all__ = [
+    "ShardedWingState",
+    "shard_links",
+    "cd_round_sharded",
+    "pack_fd_partitions",
+    "fd_peel_sharded",
+    "distributed_wing_decomposition",
+    "distributed_tip_decomposition",
+]
+
+
+# =====================================================================
+# CD — link-sharded rounds, one psum per round
+# =====================================================================
+@dataclasses.dataclass
+class ShardedWingState:
+    le: jax.Array          # (L_pad,) link -> edge, sharded
+    lt: jax.Array          # (L_pad,) link -> twin
+    lb: jax.Array          # (L_pad,) link -> bloom
+    alive_link: jax.Array  # (L_pad,) sharded
+    k_alive: jax.Array     # (nb,) replicated
+    support: jax.Array     # (m,) replicated
+    nb: int
+    m: int
+
+
+def shard_links(be: BEIndex, m: int, n_dev: int) -> ShardedWingState:
+    """Pad link arrays to a multiple of n_dev.  Pad links point at a
+    sentinel dead bloom/edge and start dead."""
+    L = be.n_links
+    pad = (-L) % max(n_dev, 1)
+    def padded(x, fill):
+        return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+    le = padded(be.link_edge, m)        # sentinel edge m
+    lt = padded(be.link_twin, m)
+    lb = padded(be.link_bloom, be.nb)   # sentinel bloom nb
+    alive = np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])
+    return ShardedWingState(
+        le=jnp.asarray(le), lt=jnp.asarray(lt), lb=jnp.asarray(lb),
+        alive_link=jnp.asarray(alive),
+        k_alive=jnp.asarray(be.bloom_k.astype(np.int32)),
+        support=jnp.asarray(be.edge_support(m).astype(np.int32)),
+        nb=be.nb, m=m,
+    )
+
+
+def _cd_round_body(peeled_pad, alive_link, k_alive, support_pad,
+                   le, lt, lb, *, nb: int, m: int, axis: str):
+    """Runs per-shard under shard_map; one psum for c, one for loss."""
+    pe = peeled_pad[le]
+    pt = peeled_pad[lt]
+    pair_dies = alive_link & (pe | pt)
+    canon = le < lt
+    c_local = jax.ops.segment_sum(
+        (pair_dies & canon).astype(jnp.int32), lb, num_segments=nb + 1
+    )
+    c = jax.lax.psum(c_local, axis)
+    widow = alive_link & ~pe & pt
+    surv = alive_link & ~pair_dies
+    contrib = jnp.where(widow, k_alive[lb] - 1, 0) + jnp.where(surv, c[lb], 0)
+    loss_local = jax.ops.segment_sum(contrib, le, num_segments=m + 1)
+    loss = jax.lax.psum(loss_local, axis)
+    support_pad = support_pad - loss
+    k_alive = k_alive - c[:nb]
+    alive_link = alive_link & ~pair_dies
+    return alive_link, k_alive, support_pad
+
+
+def make_cd_round(mesh: Mesh, axis: str, nb: int, m: int):
+    """Build the jitted, shard_map-ped CD round for a given mesh."""
+    body = partial(_cd_round_body, nb=nb, m=m, axis=axis)
+    spec_l = P(axis)
+    spec_r = P()
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_r, spec_l, spec_r, spec_r, spec_l, spec_l, spec_l),
+        out_specs=(spec_l, spec_r, spec_r),
+    )
+    return jax.jit(fn)
+
+
+def cd_round_sharded(round_fn, st: ShardedWingState, peeled: jax.Array
+                     ) -> ShardedWingState:
+    """One CD peeling round. ``peeled`` is the (m,) frontier mask."""
+    peeled_pad = jnp.concatenate([peeled, jnp.zeros((1,), bool)])
+    support_pad = jnp.concatenate([st.support, jnp.zeros((1,), jnp.int32)])
+    alive_link, k_alive, support_pad = round_fn(
+        peeled_pad, st.alive_link, st.k_alive, support_pad,
+        st.le, st.lt, st.lb,
+    )
+    return dataclasses.replace(
+        st, alive_link=alive_link, k_alive=k_alive, support=support_pad[:-1]
+    )
+
+
+# =====================================================================
+# CD variant — bloom-aligned link sharding (§Perf optimization)
+# =====================================================================
+# Baseline CD needs TWO psums per round: dying-pair counts c_B (blooms
+# straddle shards) then per-edge losses.  If every bloom's links live on
+# ONE shard, c_B and k_alive become shard-local state and a round costs
+# a single psum (the loss) — half the collectives, and bloom bookkeeping
+# never crosses the interconnect.
+def shard_links_bloom_aligned(be: BEIndex, m: int, n_dev: int) -> dict:
+    order = np.argsort(be.link_bloom, kind="stable")
+    le, lt, lb = (be.link_edge[order], be.link_twin[order],
+                  be.link_bloom[order])
+    counts = np.bincount(lb, minlength=be.nb)
+    # greedy balance blooms over shards by link count (LPT-flavoured)
+    shard_of = np.zeros(be.nb, dtype=np.int64)
+    load = np.zeros(n_dev, dtype=np.int64)
+    for bid in np.argsort(-counts, kind="stable"):
+        s = int(np.argmin(load))
+        shard_of[bid] = s
+        load[s] += counts[bid]
+    Lmax = int(load.max()) if n_dev else 1
+    Lmax = max(Lmax, 1)
+    # local bloom ids per shard
+    nb_local = np.zeros(n_dev, dtype=np.int64)
+    loc_bloom = np.zeros(be.nb, dtype=np.int64)
+    for bid in range(be.nb):
+        s = shard_of[bid]
+        loc_bloom[bid] = nb_local[s]
+        nb_local[s] += 1
+    Bmax = max(int(nb_local.max()), 1)
+
+    le_s = np.full((n_dev, Lmax), m, np.int32)
+    lt_s = np.full((n_dev, Lmax), m, np.int32)
+    lb_s = np.full((n_dev, Lmax), Bmax, np.int32)
+    alive = np.zeros((n_dev, Lmax), bool)
+    k0 = np.zeros((n_dev, Bmax), np.int32)
+    fill = np.zeros(n_dev, dtype=np.int64)
+    off = np.zeros(be.nb + 1, dtype=np.int64)
+    np.cumsum(counts, out=off[1:])
+    for bid in range(be.nb):
+        s = shard_of[bid]
+        n = counts[bid]
+        a, b = off[bid], off[bid + 1]
+        f = fill[s]
+        le_s[s, f: f + n] = le[a:b]
+        lt_s[s, f: f + n] = lt[a:b]
+        lb_s[s, f: f + n] = loc_bloom[bid]
+        alive[s, f: f + n] = True
+        k0[s, loc_bloom[bid]] = be.bloom_k[bid]
+        fill[s] += n
+    return dict(le=le_s, lt=lt_s, lb=lb_s, alive=alive, k0=k0,
+                Bmax=Bmax, m=m)
+
+
+def make_cd_round_bloom(mesh: Mesh, axis: str, Bmax: int, m: int):
+    """One-psum CD round over bloom-aligned shards."""
+
+    def body(peeled_pad, alive_link, k_alive, support_pad, le, lt, lb):
+        # all per-shard [1, ...] blocks (leading shard axis split)
+        pe = peeled_pad[le]
+        pt = peeled_pad[lt]
+        pair_dies = alive_link & (pe | pt)
+        canon = le < lt
+        c = jax.ops.segment_sum(
+            (pair_dies & canon).astype(jnp.int32).reshape(-1),
+            lb.reshape(-1), num_segments=Bmax + 1)  # LOCAL — no psum
+        widow = alive_link & ~pe & pt
+        surv = alive_link & ~pair_dies
+        contrib = jnp.where(widow, k_alive.reshape(-1)[lb] - 1, 0) \
+            + jnp.where(surv, c[lb], 0)
+        loss = jax.ops.segment_sum(
+            contrib.reshape(-1), le.reshape(-1), num_segments=m + 1)
+        loss = jax.lax.psum(loss, axis)          # the ONLY collective
+        support_pad = support_pad - loss
+        k_alive = k_alive - c[:Bmax].reshape(k_alive.shape)
+        alive_link = alive_link & ~pair_dies
+        return alive_link, k_alive, support_pad
+
+    spec_l = P(axis)
+    spec_r = P()
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_r, spec_l, spec_l, spec_r, spec_l, spec_l, spec_l),
+        out_specs=(spec_l, spec_l, spec_r),
+    )
+    return jax.jit(fn)
+
+
+# =====================================================================
+# FD — partition-stacked, communication-free shard_map
+# =====================================================================
+def pack_fd_partitions(
+    g: BipartiteGraph, be: BEIndex, part: np.ndarray, sup_init: np.ndarray,
+    n_parts: int, pad_to: Optional[int] = None,
+) -> dict:
+    """Build [n_parts_padded, ...] stacked local sub-indices (alg.5).
+
+    Local ids per partition; twins outside the partition map to a
+    sentinel never-peeled slot.  Everything padded so partitions stack.
+    """
+    ple = part[be.link_edge]
+    plt_ = part[be.link_twin]
+    canon_full = be.link_edge < be.link_twin
+    per = []
+    for i in range(n_parts):
+        mine_idx = np.where(part == i)[0]
+        loc = np.full(g.m, -1, dtype=np.int64)
+        loc[mine_idx] = np.arange(mine_idx.size)
+        pair_ge = (ple >= i) & (plt_ >= i)
+        # only links anchored at a local (peelable) edge; cross-partition
+        # pairs therefore appear exactly once
+        keep = pair_ge & (ple == i)
+        k_init = np.zeros(be.nb, dtype=np.int64)
+        np.add.at(k_init, be.link_bloom[pair_ge & canon_full], 1)
+        kl_e, kl_t, kl_b = (be.link_edge[keep], be.link_twin[keep],
+                            be.link_bloom[keep])
+        twin_local = part[kl_t] == i
+        # count each dying pair once: both-local pairs via id order,
+        # cross pairs via their single link
+        canon = np.where(twin_local, kl_e < kl_t, True)
+        blooms = np.unique(kl_b)
+        bloc = np.full(be.nb + 1, 0, dtype=np.int64)
+        if blooms.size:
+            bloc[blooms] = np.arange(blooms.size)
+        per.append(dict(
+            edges=mine_idx,
+            le=loc[kl_e], lt=np.where(twin_local, loc[kl_t], -1),
+            lb=bloc[kl_b], canon=canon,
+            k0=k_init[blooms],
+            sup0=sup_init[mine_idx],
+        ))
+    Lmax = max((p["le"].size for p in per), default=1) or 1
+    Emax = max((p["edges"].size for p in per), default=1) or 1
+    Bmax = max((p["k0"].size for p in per), default=1) or 1
+    if pad_to:
+        Lmax, Emax, Bmax = (max(Lmax, pad_to), max(Emax, pad_to),
+                            max(Bmax, pad_to))
+
+    def pk(key, size, fill, dtype=np.int32):
+        out = np.full((n_parts, size), fill, dtype=dtype)
+        for i, p in enumerate(per):
+            x = p[key]
+            out[i, : x.size] = x
+        return out
+
+    # sentinel local edge id = Emax (extra never-peeled slot)
+    le = pk("le", Lmax, Emax)
+    lt = np.where(pk("lt", Lmax, -1) < 0, Emax,
+                  pk("lt", Lmax, -1)).astype(np.int32)
+    canon = pk("canon", Lmax, 0, dtype=bool)
+    alive0 = np.zeros((n_parts, Lmax), dtype=bool)
+    for i, p in enumerate(per):
+        alive0[i, : p["le"].size] = True
+    mine = np.zeros((n_parts, Emax), dtype=bool)
+    sup0 = np.zeros((n_parts, Emax), dtype=np.int32)
+    gids = np.zeros((n_parts, Emax), dtype=np.int32)
+    for i, p in enumerate(per):
+        mine[i, : p["edges"].size] = True
+        sup0[i, : p["edges"].size] = p["sup0"]
+        gids[i, : p["edges"].size] = p["edges"]
+    k0 = pk("k0", Bmax, 0)
+    return dict(
+        le=le, lt=lt, lb=pk("lb", Lmax, Bmax - 1), alive0=alive0,
+        canon=canon, k0=k0, sup0=sup0, mine=mine, gids=gids,
+        sizes=(Lmax, Emax, Bmax),
+    )
+
+
+def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
+    """Peel one partition bottom-up — pure lax.while_loop, NO collectives."""
+    Emax = mine.shape[0]
+    Bmax = k0.shape[0]
+    BIG = jnp.int32(2 ** 30)
+
+    def update(peeled, alive_link, k_alive, support):
+        pe = jnp.concatenate([peeled, jnp.zeros((1,), bool)])
+        p_e = pe[le]
+        p_t = pe[lt]
+        pair_dies = alive_link & (p_e | p_t)
+        c = jax.ops.segment_sum(
+            (pair_dies & canon).astype(jnp.int32), lb, num_segments=Bmax)
+        widow = alive_link & ~p_e & p_t
+        surv = alive_link & ~pair_dies
+        contrib = jnp.where(widow, k_alive[lb] - 1, 0) + jnp.where(
+            surv, c[lb], 0)
+        loss = jax.ops.segment_sum(contrib, le, num_segments=Emax + 1)[:-1]
+        return (alive_link & ~pair_dies, k_alive - c, support - loss)
+
+    def cond(state):
+        alive_e, *_ = state
+        return jnp.any(alive_e)
+
+    def body(state):
+        alive_e, alive_link, k_alive, support, theta, k, rounds = state
+        cur = jnp.where(alive_e, support, BIG)
+        k = jnp.maximum(k, jnp.min(cur))
+        S = alive_e & (support <= k)
+        # S is non-empty whenever alive_e is (k >= min alive support)
+        theta = jnp.where(S, k, theta)
+        alive_e = alive_e & ~S
+        alive_link, k_alive, support = update(S, alive_link, k_alive, support)
+        return (alive_e, alive_link, k_alive, support, theta, k, rounds + 1)
+
+    # derive loop-constant inits from varying inputs so the carry's
+    # manual-axes annotation is stable under shard_map
+    zero_e = mine.astype(jnp.int32) * 0
+    zero_s = jnp.min(zero_e)
+    init = (
+        mine, alive0, k0.astype(jnp.int32), sup0.astype(jnp.int32),
+        zero_e, zero_s, zero_s,
+    )
+    alive_e, _, _, _, theta, _, rounds = jax.lax.while_loop(cond, body, init)
+    return theta, rounds
+
+
+def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Peel all partitions concurrently: shard_map over the partition axis
+    (device-parallel), vmap within a shard.  Returns (theta[m'], rounds[P])
+    in packed local layout."""
+    n_parts = packed["le"].shape[0]
+    n_dev = mesh.devices.size
+    pad = (-n_parts) % n_dev
+
+    def padp(x):
+        if pad == 0:
+            return jnp.asarray(x)
+        fill = np.zeros((pad,) + x.shape[1:], dtype=x.dtype)
+        return jnp.asarray(np.concatenate([x, fill], axis=0))
+
+    args = tuple(padp(packed[k]) for k in
+                 ("le", "lt", "lb", "alive0", "canon", "k0", "sup0", "mine"))
+
+    vbody = jax.vmap(_fd_body_one_partition)
+    fn = jax.shard_map(
+        vbody, mesh=mesh,
+        in_specs=tuple(P(axis) for _ in args),
+        out_specs=(P(axis), P(axis)),
+    )
+    theta, rounds = jax.jit(fn)(*args)
+    return np.asarray(theta)[:n_parts], np.asarray(rounds)[:n_parts]
+
+
+# =====================================================================
+# End-to-end distributed wing decomposition
+# =====================================================================
+def distributed_wing_decomposition(
+    g: BipartiteGraph,
+    mesh: Mesh,
+    axis: str = "peel",
+    P_parts: int = 8,
+    be: Optional[BEIndex] = None,
+    bloom_aligned: bool = False,
+) -> Tuple[np.ndarray, dict]:
+    """Full PBNG wing decomposition on a device mesh.
+
+    CD: link-sharded rounds (two psums; ``bloom_aligned=True`` uses the
+    one-psum §Perf variant).  FD: communication-free partition peel.
+    Returns (theta, stats).
+    """
+    if be is None:
+        be = build_beindex(g)
+    m = g.m
+    n_dev = mesh.devices.size
+    if bloom_aligned:
+        packed = shard_links_bloom_aligned(be, m, n_dev)
+        round_fn = make_cd_round_bloom(mesh, axis, packed["Bmax"], m)
+        bl_alive = jnp.asarray(packed["alive"])
+        bl_k = jnp.asarray(packed["k0"])
+        bl_le = jnp.asarray(packed["le"])
+        bl_lt = jnp.asarray(packed["lt"])
+        bl_lb = jnp.asarray(packed["lb"])
+        support = jnp.asarray(be.edge_support(m).astype(np.int32))
+        st = None
+    else:
+        st = shard_links(be, m, n_dev)
+        round_fn = make_cd_round(mesh, axis, st.nb, m)
+        support = st.support
+
+    sup_np = np.asarray(support).astype(np.int64)
+    alive = np.ones(m, dtype=bool)
+    part = np.full(m, -1, dtype=np.int32)
+    sup_init = np.zeros(m, dtype=np.int64)
+    total_work = float(sup_np.sum())
+    rho_cd = 0
+    for i in range(P_parts):
+        if not alive.any():
+            break
+        sup_init[alive] = sup_np[alive]
+        if i == P_parts - 1:
+            hi = int(sup_np[alive].max()) + 1
+        else:
+            tgt = total_work / P_parts
+            s = np.sort(sup_np[alive])
+            w = np.maximum(s, 1).astype(np.float64)
+            cum = np.cumsum(w)
+            pos = min(int(np.searchsorted(cum, tgt)), s.size - 1)
+            hi = int(s[pos]) + 1
+            hi = max(hi, int(sup_np[alive].min()) + 1)
+        while True:
+            active = alive & (sup_np < hi)
+            if not active.any():
+                break
+            part[active] = i
+            alive &= ~active
+            if bloom_aligned:
+                peeled_pad = jnp.concatenate(
+                    [jnp.asarray(active), jnp.zeros((1,), bool)])
+                support_pad = jnp.concatenate(
+                    [support, jnp.zeros((1,), jnp.int32)])
+                bl_alive, bl_k, support_pad = round_fn(
+                    peeled_pad, bl_alive, bl_k, support_pad,
+                    bl_le, bl_lt, bl_lb)
+                support = support_pad[:-1]
+                sup_np = np.asarray(support).astype(np.int64)
+            else:
+                st = cd_round_sharded(round_fn, st, jnp.asarray(active))
+                sup_np = np.asarray(st.support).astype(np.int64)
+            rho_cd += 1
+    n_parts = int(part.max()) + 1
+
+    packed = pack_fd_partitions(g, be, part, sup_init, n_parts)
+    theta_loc, rounds = fd_peel_sharded(packed, mesh, axis)
+    theta = np.zeros(m, dtype=np.int64)
+    for i in range(n_parts):
+        mine = packed["mine"][i]
+        theta[packed["gids"][i][mine]] = theta_loc[i][mine]
+    stats = dict(
+        rho_cd=rho_cd,
+        rho_fd_total=int(rounds.sum()),
+        rho_fd_max=int(rounds.max()) if rounds.size else 0,
+        n_parts=n_parts,
+        n_links=be.n_links,
+        n_dev=n_dev,
+    )
+    return theta, stats
+
+
+# =====================================================================
+# Distributed TIP decomposition (vertex peeling, §3.2)
+# =====================================================================
+# CD: batch re-counting is a masked matmul — shard the *row blocks* of W
+# across devices; each device re-counts butterflies for its vertex shard
+# with zero collectives (A is replicated at container scale; row-sharded
+# A + one all-gather per round at cluster scale).
+# FD: partitions stack on a leading axis and peel under shard_map with
+# no communication, pairwise butterfly counts computed once per
+# partition inside the kernel (static because V is never peeled).
+def _tip_cd_recount_body(A_blk, alive_blk, A_full, alive_full, row0):
+    Am = A_full * alive_full[:, None]
+    W = jax.lax.dot(A_blk * alive_blk[:, None], Am.T,
+                    precision=jax.lax.Precision.HIGHEST)
+    rows = row0 + jnp.arange(A_blk.shape[0])
+    cols = jnp.arange(A_full.shape[0])
+    W = jnp.where(rows[:, None] == cols[None, :], 0.0, W)
+    return jnp.sum(W * (W - 1.0) * 0.5, axis=1)
+
+
+def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
+    blk = -(-n // n_dev)
+
+    def body(A_pad, alive_pad, shard_idx):
+        # per-shard: A_pad [blk, nv], alive [blk], idx [1]
+        row0 = shard_idx[0] * blk
+        return _tip_cd_recount_body(
+            A_pad, alive_pad,
+            jax.lax.all_gather(A_pad, axis, axis=0, tiled=True),
+            jax.lax.all_gather(alive_pad, axis, axis=0, tiled=True),
+            row0)
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=P(axis),
+    )
+    return jax.jit(fn), blk
+
+
+def _tip_fd_kernel(A_i, mine, sup0):
+    """Peel one tip partition bottom-up — no collectives.
+
+    A_i: [Umax, nv] rows of this partition (zero-padded), mine [Umax],
+    sup0 [Umax].  Pairwise butterflies are static (V never peeled)."""
+    W = jax.lax.dot(A_i, A_i.T, precision=jax.lax.Precision.HIGHEST)
+    Umax = W.shape[0]
+    W = W * (1.0 - jnp.eye(Umax, dtype=W.dtype))
+    pair_bf = W * (W - 1.0) * 0.5
+    BIG = jnp.float32(2 ** 30)
+
+    def cond(state):
+        alive, *_ = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, support, theta, k, rounds = state
+        cur = jnp.where(alive, support, BIG)
+        k = jnp.maximum(k, jnp.min(cur))
+        S = alive & (support <= k)
+        theta = jnp.where(S, k, theta)
+        alive = alive & ~S
+        support = support - pair_bf @ S.astype(jnp.float32)
+        return (alive, support, theta, k, rounds + 1)
+
+    zero = jnp.sum(mine.astype(jnp.float32)) * 0.0
+    init = (mine, sup0.astype(jnp.float32),
+            jnp.zeros((Umax,), jnp.float32) + zero, zero,
+            jnp.int32(0) + zero.astype(jnp.int32))
+    _, _, theta, _, rounds = jax.lax.while_loop(cond, body, init)
+    return theta, rounds
+
+
+def distributed_tip_decomposition(
+    g: BipartiteGraph,
+    mesh: Mesh,
+    axis: str = "peel",
+    side: str = "u",
+    P_parts: int = 8,
+) -> Tuple[np.ndarray, dict]:
+    from . import counting
+
+    gg = g if side == "u" else g.transpose()
+    n, nv = gg.n_u, gg.n_v
+    n_dev = int(mesh.devices.size)
+    A_np = gg.adjacency()
+    recount_fn, blk = make_tip_cd_recount(mesh, axis, n, n_dev)
+    n_pad = blk * n_dev
+    A = jnp.asarray(np.pad(A_np, ((0, n_pad - n), (0, 0))))
+    shard_idx = jnp.arange(n_dev, dtype=jnp.int32)
+
+    alive = np.ones(n_pad, bool)
+    alive[n:] = False
+    support = np.asarray(recount_fn(A, jnp.asarray(alive), shard_idx))
+    support = np.rint(support).astype(np.int64)
+    wedge_w = np.rint(np.asarray(
+        counting.vertex_wedge_workload(jnp.asarray(A_np)))).astype(np.int64)
+
+    part = np.full(n, -1, np.int32)
+    sup_init = np.zeros(n, np.int64)
+    total_w = float(wedge_w.sum())
+    rho_cd = 0
+    for i in range(P_parts):
+        av = alive[:n]
+        if not av.any():
+            break
+        sup_init[av] = support[:n][av]
+        if i == P_parts - 1:
+            hi = int(support[:n][av].max()) + 1
+        else:
+            s = np.sort(support[:n][av])
+            w = wedge_w[av][np.argsort(support[:n][av], kind="stable")]
+            cum = np.cumsum(np.maximum(w, 1))
+            pos = min(int(np.searchsorted(cum, total_w / P_parts)),
+                      s.size - 1)
+            hi = max(int(s[pos]) + 1, int(s[0]) + 1)
+        while True:
+            active = alive[:n] & (support[:n] < hi)
+            if not active.any():
+                break
+            part[active] = i
+            alive[:n] &= ~active
+            support = np.rint(np.asarray(recount_fn(
+                A, jnp.asarray(alive), shard_idx))).astype(np.int64)
+            rho_cd += 1
+    n_parts = int(part.max()) + 1
+
+    # ---- FD: stack padded partitions, shard over devices
+    rows_per = [np.where(part == i)[0] for i in range(n_parts)]
+    Umax = max(max((r.size for r in rows_per), default=1), 1)
+    pad_parts = -(-n_parts // n_dev) * n_dev
+    A_st = np.zeros((pad_parts, Umax, nv), np.float32)
+    mine = np.zeros((pad_parts, Umax), bool)
+    sup0 = np.zeros((pad_parts, Umax), np.float32)
+    gids = np.zeros((pad_parts, Umax), np.int64)
+    for i, r in enumerate(rows_per):
+        A_st[i, : r.size] = A_np[r]
+        mine[i, : r.size] = True
+        sup0[i, : r.size] = sup_init[r]
+        gids[i, : r.size] = r
+    vk = jax.vmap(_tip_fd_kernel)
+    fd = jax.shard_map(
+        vk, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=(P(axis), P(axis)),
+    )
+    theta_st, rounds = jax.jit(fd)(
+        jnp.asarray(A_st), jnp.asarray(mine), jnp.asarray(sup0))
+    theta_st = np.rint(np.asarray(theta_st)).astype(np.int64)
+    theta = np.zeros(n, np.int64)
+    for i in range(n_parts):
+        theta[gids[i][mine[i]]] = theta_st[i][mine[i]]
+    stats = dict(
+        rho_cd=rho_cd,
+        rho_fd_total=int(np.asarray(rounds).sum()),
+        rho_fd_max=int(np.asarray(rounds).max()) if n_parts else 0,
+        n_parts=n_parts, n_dev=n_dev,
+    )
+    return theta, stats

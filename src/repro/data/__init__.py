@@ -1,0 +1,10 @@
+from .pipeline import DataConfig, memmap_batches, synthetic_batches
+from .graph_data import curriculum_sequences, sequence_batches
+
+__all__ = [
+    "DataConfig",
+    "memmap_batches",
+    "synthetic_batches",
+    "curriculum_sequences",
+    "sequence_batches",
+]

@@ -1,0 +1,23 @@
+"""Pallas TPU kernels for PBNG's compute hot-spots + the LM attention.
+
+Each kernel ships with an ``ops.py`` jit wrapper and a ``ref.py`` pure-jnp
+oracle; tests sweep shapes/dtypes in interpret mode.
+"""
+from . import ops, ref
+from .ops import (
+    bloom_update,
+    edge_wedge_matrix,
+    flash_attention,
+    pack_blooms,
+    vertex_butterflies,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "bloom_update",
+    "edge_wedge_matrix",
+    "flash_attention",
+    "pack_blooms",
+    "vertex_butterflies",
+]

@@ -1,0 +1,100 @@
+"""Blockwise (flash) attention Pallas kernel — the LM-side hot spot.
+
+Grid (batch·heads, q_blocks, kv_blocks); online-softmax running max/sum
+live in VMEM scratch; KV tiles stream through VMEM so the S×S score
+matrix never exists.  Causal masking supports the decode/prefill case
+where Sk ≥ Sq (queries align with the cache suffix).
+
+This kernel is the TPU analogue of the memory-roofline fix the roofline
+analysis demands for the 32k-prefill shapes; the pure-jnp blockwise
+reference (models/attention.py) is what the CPU dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, scale: float, causal: bool, sq: int, sk: int):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # (bq, d)
+    k = k_ref[0]  # (bk, d)
+    v = v_ref[0]  # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (bq, bk)
+
+    if causal:
+        bq, bk = s.shape
+        q_ids = (pl.program_id(1) * bq + (sk - sq)
+                 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+        k_ids = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(k_ids <= q_ids, s, _NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kv_i == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # [BH, Sq, D]
+    k: jax.Array,  # [BH, Sk, D]
+    v: jax.Array,  # [BH, Sk, D]
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, d = q.shape
+    _, sk, _ = k.shape
+    assert sq % bq == 0 and sk % bk == 0, "pad sequence dims before calling"
+    if scale is None:
+        scale = d ** -0.5
+    grid = (bh, sq // bq, sk // bk)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, sq=sq, sk=sk
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,174 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to MXU-aligned blocks, interpret-mode selection (CPU
+container → interpret=True; real TPU → compiled), and the bloom-major
+dense packing used by ``bloom_update_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bloom_update import bloom_update_pallas
+from .butterfly_count import matmul_pallas, vertex_count_pallas
+from .flash_attention import flash_attention_pallas
+
+__all__ = [
+    "vertex_butterflies",
+    "edge_wedge_matrix",
+    "bloom_update",
+    "flash_attention",
+    "pack_blooms",
+    "default_interpret",
+]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless running on real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mult: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def vertex_butterflies(
+    A: jax.Array, bm: int = 128, bn: int = 128, interpret: bool = True
+) -> jax.Array:
+    """Per-row butterfly counts via the fused count kernel."""
+    n = A.shape[0]
+    Ap = _pad_to(_pad_to(A.astype(jnp.float32), bm, 0), 128, 1)
+    # rows must also tile by bn for the column blocks of W
+    Ap = _pad_to(Ap, bn, 0)
+    out = vertex_count_pallas(Ap, bm=bm, bn=bn, interpret=interpret)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def edge_wedge_matrix(
+    A: jax.Array,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """M = (W − 1)·A with W = A·Aᵀ, both matmuls tiled in Pallas.
+
+    Uses the identity (W − 1)·A = W·A − d_v so the −1 never materializes.
+    Per-edge counts = M[u, v] − (d_u − 1), gathered by the caller.
+    """
+    n, nv = A.shape
+    Af = A.astype(jnp.float32)
+    Ap = _pad_to(_pad_to(Af, max(bm, bn, bk), 0), bk, 1)
+    W = matmul_pallas(Ap, Ap.T, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    Ap2 = _pad_to(_pad_to(Af, bk, 0), bn, 1)
+    W = W[: Ap2.shape[0], : Ap2.shape[0]]
+    M = matmul_pallas(W, Ap2, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    dv = jnp.sum(Af, axis=0)
+    return M[:n, :nv] - dv[None, :]
+
+
+def pack_blooms(
+    link_edge: np.ndarray,
+    link_twin: np.ndarray,
+    link_bloom: np.ndarray,
+    nb: int,
+    bb: int = 256,
+) -> dict:
+    """Bloom-major dense packing: row b holds bloom b's links, padded to
+    the max pairs-per-bloom (rounded to a lane multiple of 128)."""
+    order = np.argsort(link_bloom, kind="stable")
+    le, lt, lb = link_edge[order], link_twin[order], link_bloom[order]
+    counts = np.bincount(lb, minlength=nb)
+    K = max(int(counts.max() if counts.size else 1), 1)
+    K = int(-(-K // 128) * 128)
+    nb_pad = int(-(-max(nb, 1) // bb) * bb)
+    col = np.zeros(le.size, dtype=np.int64)
+    off = np.zeros(nb + 1, dtype=np.int64)
+    np.cumsum(counts, out=off[1:])
+    col = np.arange(le.size) - off[lb]
+    dense = dict(
+        le=np.full((nb_pad, K), -1, np.int32),
+        lt=np.full((nb_pad, K), -1, np.int32),
+        valid=np.zeros((nb_pad, K), bool),
+        canon=np.zeros((nb_pad, K), bool),
+    )
+    dense["le"][lb, col] = le
+    dense["lt"][lb, col] = lt
+    dense["valid"][lb, col] = True
+    dense["canon"][lb, col] = le < lt
+    dense["nb"] = nb
+    dense["nb_pad"] = nb_pad
+    dense["K"] = K
+    return dense
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def bloom_update(
+    peeled: jax.Array,       # (m+1,) bool, sentinel last
+    alive_pair: jax.Array,   # [nb_pad, K] bool
+    k_alive: jax.Array,      # [nb_pad] f32
+    le: jax.Array,           # [nb_pad, K] int32 (−1 → sentinel)
+    lt: jax.Array,
+    canon: jax.Array,        # [nb_pad, K] bool
+    m: int = 0,
+    bb: int = 256,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One batched support-update round through the Pallas kernel.
+
+    Returns (loss per edge (m,), c per bloom, new alive_pair)."""
+    sent = peeled.shape[0] - 1
+    lei = jnp.where(le < 0, sent, le)
+    lti = jnp.where(lt < 0, sent, lt)
+    pe = peeled[lei]
+    pt = peeled[lti]
+    contrib, c = bloom_update_pallas(
+        pe, pt, alive_pair, canon, k_alive, bb=bb, interpret=interpret
+    )
+    pair_dies = alive_pair & (pe | pt)
+    loss = jax.ops.segment_sum(
+        contrib.reshape(-1), lei.reshape(-1), num_segments=sent + 1
+    )[:-1]
+    return loss, c, alive_pair & ~pair_dies
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, H, Sk, D]
+    v: jax.Array,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(bq, sq) if sq % min(bq, sq) == 0 else bq
+    qr = _pad_to(q.reshape(b * h, sq, d), bq, 1)
+    kr = _pad_to(k.reshape(b * h, sk, d), bk, 1)
+    vr = _pad_to(v.reshape(b * h, sk, d), bk, 1)
+    # padded keys must never win the softmax: mask via an explicit -inf
+    # key would complicate the kernel; instead rely on causal masking for
+    # the padded tail (padded queries are discarded, padded keys have
+    # k_ids > every real q_id when causal).  For non-causal, require
+    # exact multiples.
+    if not causal:
+        assert sq % bq == 0 and sk % bk == 0
+    out = flash_attention_pallas(
+        qr, kr, vr, causal=causal, bq=bq, bk=bk, interpret=interpret
+    )
+    return out[:, :sq].reshape(b, h, sq, d)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "vertex_butterflies_ref",
+    "edge_wedge_matrix_ref",
+    "bloom_update_ref",
+    "flash_attention_ref",
+]
+
+
+def vertex_butterflies_ref(A: jax.Array) -> jax.Array:
+    """⋈_u per row of A: Σ_{u'≠u} C(W[u,u'], 2) with W = A Aᵀ."""
+    W = jnp.dot(A, A.T, preferred_element_type=jnp.float32)
+    W = W * (1.0 - jnp.eye(W.shape[0], dtype=W.dtype))
+    return jnp.sum(W * (W - 1.0) * 0.5, axis=1)
+
+
+def edge_wedge_matrix_ref(A: jax.Array) -> jax.Array:
+    """M = (W − 1) · A with W = A Aᵀ; per-edge counts are
+    M[u,v] − (d_u − 1) gathered at the edge list."""
+    W = jnp.dot(A, A.T, preferred_element_type=jnp.float32)
+    return jnp.dot(W - 1.0, A, preferred_element_type=jnp.float32)
+
+
+def bloom_update_ref(pe, pt, alive, canon, k_alive):
+    """Per-bloom batch support update (alg.6 inner loop), dense layout.
+
+    Inputs are [nb, K] bloom-major matrices (padded with alive=False) plus
+    per-bloom pair counts k_alive [nb].  Returns (contrib [nb,K], c [nb]):
+    c = dying pairs per bloom; contrib = per-link support loss to be
+    scattered onto link_edge by the caller.
+    """
+    pair_dies = alive & (pe | pt)
+    c = jnp.sum((pair_dies & canon).astype(jnp.float32), axis=1)
+    widow = alive & ~pe & pt
+    surv = alive & ~pair_dies
+    contrib = (
+        jnp.where(widow, k_alive[:, None] - 1.0, 0.0)
+        + jnp.where(surv, c[:, None], 0.0)
+    )
+    return contrib, c
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, scale=None):
+    """Plain softmax attention — oracle for the blockwise kernel.
+
+    q: [B, H, Sq, D], k/v: [B, H, Sk, D] (kv heads already broadcast).
+    """
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        # last query aligns with last key (supports sk >= sq prefill)
+        qi = jnp.arange(sq)[:, None] + (sk - sq)
+        ki = jnp.arange(sk)[None, :]
+        logits = jnp.where(ki <= qi, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

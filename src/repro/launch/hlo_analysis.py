@@ -1,0 +1,76 @@
+"""HLO text analysis: collective-op byte accounting for the roofline.
+
+``compiled.cost_analysis()`` has FLOPs and HBM bytes but no collective
+traffic; we parse the (SPMD-partitioned) HLO and sum the result-shape
+bytes of every collective op, bucketed by kind.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+__all__ = ["collective_bytes", "count_ops", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Bytes moved per collective kind (result-shape accounting, per
+    device).  Start/done pairs are counted once (on the -start)."""
+    out: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        lhs, rhs = ls.split(" = ", 1)
+        for kind in COLLECTIVES:
+            # match the opcode at the start of the RHS expression only
+            m = re.match(
+                r"^(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+(%?)("
+                + kind + r")(-start)?\(", rhs)
+            if m is None:
+                continue
+            if f"{kind}-done" in rhs:
+                break
+            for dt, dims in _SHAPE_RE.findall(m.group(1)):
+                out[kind] += _shape_bytes(dt, dims)
+            break
+    return dict(out)
+
+
+def count_ops(hlo_text: str, opcodes=("fusion", "dot", "convolution")
+              ) -> Dict[str, int]:
+    out = {k: 0 for k in opcodes}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if " = " not in ls:
+            continue
+        rhs = ls.split(" = ", 1)[1]
+        for k in opcodes:
+            if re.search(r"\b" + k + r"\(", rhs):
+                out[k] += 1
+    return out

@@ -1,0 +1,236 @@
+"""Roofline analysis (EXPERIMENTS.md §Roofline).
+
+XLA's HloCostAnalysis counts while/scan bodies ONCE, so the scanned
+production programs under-report FLOPs/bytes by the trip counts.  We
+therefore compile two *unrolled* shallow variants (L1 and L2 layers,
+inner loops unrolled too) on the SAME mesh and extrapolate linearly:
+
+    metric(L) = a + b·L  ->  total = m(L1) + b · (L_full − L1)
+
+This keeps every number HLO-derived (no hand FLOP formulas) while being
+exact in the layer count.  Two documented approximations:
+  * unrolled variants use larger attention/ssm blocks (2048 / 512) to
+    bound HLO size — block-size changes masking waste only;
+  * the sLSTM time-step scan (inherently sequential, 4096 trips) cannot
+    be unrolled; its recurrent-matmul FLOPs are added analytically.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link
+ICI.  cost_analysis numbers are per-device (SPMD program), so terms are
+computed per chip directly.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede first jax backend init
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.configs import ARCHS, get_config
+import repro.models as M
+from repro.models.model import SHAPE_SETS
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "roofline")
+
+
+def _variant_layers(cfg) -> tuple:
+    """(L1, L2, L_full) in the unit the family scans over."""
+    if cfg.family == "ssm":
+        return cfg.slstm_every, 2 * cfg.slstm_every, cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every, cfg.n_layers
+    return 1, 2, cfg.n_layers
+
+
+def _overrides(cfg, L: int, shape: str) -> Dict:
+    ov = dict(n_layers=L, unroll_layers=True,
+              attn_block_q=2048, attn_block_k=2048, ssm_chunk=512)
+    if cfg.family == "audio":
+        ov["encoder_layers"] = L
+    info = SHAPE_SETS[shape]
+    seq = info["seq"]
+    ov["attn_block_q"] = min(2048, seq)
+    ov["attn_block_k"] = min(2048, seq)
+    if cfg.family in ("ssm", "hybrid"):
+        ov["ssm_chunk"] = min(512, seq)
+    return ov
+
+
+def _slstm_correction_flops(cfg, shape: str) -> float:
+    """Analytic FLOPs of the sLSTM recurrent matmul (per device), which
+    hides inside an un-unrollable time scan.  fwd 2·b·s·nh·dh·4dh,
+    train ≈ 3× fwd (bwd ≈ 2×); divided across data-parallel shards."""
+    if cfg.family != "ssm":
+        return 0.0
+    info = SHAPE_SETS[shape]
+    if info["kind"] != "train":
+        return 0.0
+    b, s = info["batch"], info["seq"]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    G = cfg.n_layers // cfg.slstm_every
+    total = 3 * 2 * b * s * nh * dh * (4 * dh) * G
+    return total / 256.0  # per chip on the 16x16 mesh (data shards)
+
+
+def roofline_cell(arch: str, shape: str, multi_pod: bool = False,
+                  use_cache: Optional[dict] = None,
+                  mb: int = 1,
+                  extra_overrides: Optional[Dict] = None,
+                  tag: str = "") -> Dict:
+    from repro.launch.dryrun import dryrun_cell
+    cfg = get_config(arch)
+    ok, why = M.shape_applicable(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape, status="skipped", reason=why)
+
+    L1, L2, Lf = _variant_layers(cfg)
+    recs = {}
+    for L in (L1, L2):
+        key = f"{arch}/{shape}/{multi_pod}/L{L}/mb{mb}/{tag}"
+        if use_cache and key in use_cache:
+            recs[L] = use_cache[key]
+            continue
+        ov = dict(_overrides(cfg, L, shape))
+        if extra_overrides:
+            ov.update(extra_overrides)
+        r = dryrun_cell(arch, shape, multi_pod=multi_pod,
+                        microbatches=mb,
+                        cfg_overrides=ov,
+                        verbose=False)
+        if r["status"] != "ok":
+            return dict(arch=arch, shape=shape, status="error",
+                        at=f"L{L}", detail=r)
+        recs[L] = r
+        if use_cache is not None:
+            use_cache[key] = r
+
+    def total(field, sub=None):
+        def g(r):
+            v = r[field]
+            if sub is not None:
+                v = v.get(sub, 0)
+            return float(v)
+        m1, m2 = g(recs[L1]), g(recs[L2])
+        b = (m2 - m1) / (L2 - L1)
+        return max(m1 + b * (Lf - L1), 0.0)
+
+    flops = total("flops") + _slstm_correction_flops(cfg, shape)
+    bytes_acc = total("bytes_accessed")
+    coll = {}
+    for kind in set(
+        list(recs[L1]["collective_bytes"]) + list(recs[L2]["collective_bytes"])
+    ):
+        m1 = recs[L1]["collective_bytes"].get(kind, 0)
+        m2 = recs[L2]["collective_bytes"].get(kind, 0)
+        coll[kind] = max(
+            m1 + (m2 - m1) / (L2 - L1) * (Lf - L1), 0.0)
+    coll_total = sum(coll.values())
+
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    terms = dict(compute=t_compute, memory=t_memory, collective=t_coll)
+    bottleneck = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: 6·N·D train / 2·N·D inference, N = active non-embedding
+    info = SHAPE_SETS[shape]
+    n_active = cfg.active_param_count()
+    embed = cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n_eff = max(n_active - embed, 1)
+    tokens = info["batch"] * (info["seq"] if info["kind"] != "decode" else 1)
+    mult = 6 if info["kind"] == "train" else 2
+    n_dev = recs[L1]["n_devices"]
+    model_flops = mult * n_eff * tokens / n_dev  # per chip
+    useful = model_flops / max(flops, 1.0)
+
+    return dict(
+        arch=arch, shape=shape, multi_pod=multi_pod, status="ok",
+        tag=tag,
+        kind=info["kind"], n_devices=n_dev, mb=mb,
+        flops_per_chip=flops, bytes_per_chip=bytes_acc,
+        collective_bytes_per_chip=coll, collective_total=coll_total,
+        t_compute_s=t_compute, t_memory_s=t_memory, t_collective_s=t_coll,
+        bottleneck=bottleneck,
+        model_flops_per_chip=model_flops,
+        useful_flop_ratio=useful,
+        roofline_fraction=t_compute / max(
+            t_compute, t_memory, t_coll),
+        mem=recs[L2].get("mem"),
+        compile_s=(recs[L1]["time_compile_s"], recs[L2]["time_compile_s"]),
+    )
+
+
+def run_all(out_path: str, archs=None, shapes=None, multi_pod=False,
+            resume=True):
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = []
+    done = set()
+    if resume and os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+        done = {(r["arch"], r["shape"], r.get("multi_pod", False))
+                for r in results}
+    cache_path = out_path + ".cache.json"
+    cache = {}
+    if os.path.exists(cache_path):
+        with open(cache_path) as f:
+            cache = json.load(f)
+    for arch in (archs or ARCHS):
+        for shape in (shapes or list(SHAPE_SETS)):
+            if (arch, shape, multi_pod) in done:
+                continue
+            try:
+                rec = roofline_cell(arch, shape, multi_pod=multi_pod,
+                                    use_cache=cache)
+            except Exception as e:  # noqa: BLE001
+                import traceback
+                traceback.print_exc()
+                rec = dict(arch=arch, shape=shape, multi_pod=multi_pod,
+                           status="error", error=str(e)[-2000:])
+            results.append(rec)
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+            with open(cache_path, "w") as f:
+                json.dump(cache, f)
+            if rec["status"] == "ok":
+                print(f"[roofline] {arch:18s} {shape:12s} "
+                      f"bottleneck={rec['bottleneck']:10s} "
+                      f"comp={rec['t_compute_s']:.2e}s "
+                      f"mem={rec['t_memory_s']:.2e}s "
+                      f"coll={rec['t_collective_s']:.2e}s "
+                      f"useful={rec['useful_flop_ratio']:.2f}", flush=True)
+            else:
+                print(f"[roofline] {arch} {shape} {rec['status']}",
+                      flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out = args.out or os.path.abspath(
+        os.path.join(RESULTS_DIR, "results.json"))
+    run_all(out,
+            archs=[args.arch] if args.arch else None,
+            shapes=[args.shape] if args.shape else None,
+            multi_pod=args.multi_pod)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Model zoo: the ten assigned architectures as one functional family."""
+from .config import ModelConfig, reduced
+from .model import (
+    SHAPE_SETS,
+    abstract_params,
+    cache_specs,
+    forward,
+    init_params,
+    input_specs,
+    logical_axes,
+    prefill,
+    serve_step,
+    shape_applicable,
+    train_loss,
+)
+
+__all__ = [
+    "ModelConfig",
+    "reduced",
+    "SHAPE_SETS",
+    "abstract_params",
+    "cache_specs",
+    "forward",
+    "init_params",
+    "input_specs",
+    "logical_axes",
+    "prefill",
+    "serve_step",
+    "shape_applicable",
+    "train_loss",
+]

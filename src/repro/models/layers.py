@@ -1,0 +1,294 @@
+"""Shared neural net layers — functional JAX, no framework.
+
+Parameters are nested dicts of arrays.  Every parameter has a *logical
+sharding axis* tuple declared in the spec tree (see ``model.py``); the
+mesh rules in ``sharding/partition.py`` map logical axes to mesh axes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "apply_rope",
+    "mrope_positions",
+    "mlp",
+    "blockwise_attention",
+    "decode_attention",
+    "constrain",
+    "DP_AXES",
+]
+
+DP_AXES = ("pod", "data")  # batch shards over these when present
+
+
+def constrain(x: jax.Array, spec_axes) -> jax.Array:
+    """with_sharding_constraint against the *current* mesh, filtering
+    axis names that don't exist (so the same model code runs on 1-device
+    tests, the 16×16 pod, and the 2×16×16 multi-pod mesh).
+
+    Activation sharding is load-bearing: without it GSPMD propagates the
+    FSDP (embed→data) parameter axis into activations and replicates the
+    batch — a 16× compute blow-up we caught in the roofline dry-run.
+    """
+    from jax.sharding import PartitionSpec as _P
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = set(mesh.axis_names) if mesh is not None else set()
+    except Exception:
+        names = set()
+    if not names:
+        return x
+    out = []
+    for s in spec_axes:
+        if s is None:
+            out.append(None)
+        elif isinstance(s, str):
+            out.append(s if s in names else None)
+        else:
+            f = tuple(a for a in s if a in names)
+            out.append(f if f else None)
+    return jax.lax.with_sharding_constraint(x, _P(*out))
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ RoPE
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [..., s] -> angles [..., s, dim//2]."""
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim)
+    )
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def _rotate(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x [..., s, d] with angles [..., s, d//2] (broadcast over heads)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c, s = jnp.cos(angles), jnp.sin(angles)
+    c = c.astype(x.dtype)
+    s = s.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def apply_rope(
+    x: jax.Array,              # [b, h, s, d]
+    positions: jax.Array,      # [b, s]  (or [b, 3, s] for mrope)
+    rope_type: str = "full",
+    theta: float = 10_000.0,
+    sections: Tuple[int, ...] = (),
+) -> jax.Array:
+    d = x.shape[-1]
+    if rope_type == "none":
+        return x
+    if rope_type == "full":
+        ang = _rope_angles(positions, d, theta)[:, None]      # [b,1,s,d/2]
+        return _rotate(x, ang)
+    if rope_type == "half":
+        # chatglm-style 2d rope: rotary on the first half of head dims
+        dr = d // 2
+        ang = _rope_angles(positions, dr, theta)[:, None]
+        return jnp.concatenate(
+            [_rotate(x[..., :dr], ang), x[..., dr:]], axis=-1
+        )
+    if rope_type == "mrope":
+        # qwen2-vl: frequency bands split into (t, h, w) sections, each
+        # driven by its own position stream.  positions: [b, 3, s].
+        assert sections and sum(sections) == d // 2, (sections, d)
+        full = _rope_angles(positions, d, theta)   # [b, 3, s, d/2]
+        parts = []
+        start = 0
+        for sec_i, sec in enumerate(sections):
+            parts.append(full[:, sec_i, :, start: start + sec])
+            start += sec
+        ang = jnp.concatenate(parts, axis=-1)[:, None]         # [b,1,s,d/2]
+        return _rotate(x, ang)
+    raise ValueError(rope_type)
+
+
+def mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text-only default: all three M-RoPE streams share positions."""
+    return jnp.broadcast_to(
+        positions[:, None, :], (positions.shape[0], 3, positions.shape[1])
+    )
+
+
+# ------------------------------------------------------------------- MLP
+def mlp(x: jax.Array, p: dict, kind: str = "swiglu") -> jax.Array:
+    act = jax.nn.silu if kind == "swiglu" else (
+        lambda y: jax.nn.gelu(y, approximate=True)
+    )
+    g = act(jnp.einsum("...d,df->...f", x, p["w1"]))
+    if kind == "gelu":  # plain (whisper-style), no gate
+        return jnp.einsum("...f,fd->...d", g, p["w2"])
+    u = jnp.einsum("...d,df->...f", x, p["w3"])
+    return jnp.einsum("...f,fd->...d", g * u, p["w2"])
+
+
+# -------------------------------------------------------------- attention
+_NEG = -1e30
+
+
+def blockwise_attention(
+    q: jax.Array,     # [b, n_heads, sq, d]
+    k: jax.Array,     # [b, n_kv, sk, d]
+    v: jax.Array,     # [b, n_kv, sk, d]
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    q_offset: int = 0,
+    unroll: bool = False,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Memory-bounded: the S×S score matrix never materializes (peak
+    intermediate is [b, heads, sq, block_k]).  This is what the dry-run
+    lowers; on real TPU the Pallas kernel (kernels/flash_attention.py)
+    replaces it 1:1.
+    """
+    b, h, sq, d = q.shape
+    n_kv, sk = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // n_kv
+    scale = d ** -0.5
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    sq0, sk0 = sq, sk
+    if sq % bq or sk % bk:  # pad ragged sequences (whisper's 1500 frames)
+        pq, pk = (-sq) % bq, (-sk) % bk
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        sq, sk = sq + pq, sk + pk
+    nq, nk = sq // bq, sk // bk
+
+    qb = q.reshape(b, n_kv, g, nq, bq, d).astype(jnp.float32) * scale
+    kb = k.reshape(b, n_kv, nk, bk, d)
+    vb = v.reshape(b, n_kv, nk, bk, dv)
+
+    q_ids = q_offset + jnp.arange(sq).reshape(nq, bq)
+    k_ids = jnp.arange(sk).reshape(nk, bk)
+
+    if causal_skip and causal and sq == sk and bq == bk:
+        return _blockwise_causal_skip(
+            qb, kb, vb, q_ids, k_ids, dv, unroll
+        ).reshape(b, h, sq, dv)[:, :, :sq0].astype(q.dtype)
+
+    def kv_step(carry, inp):
+        acc, m, l = carry                       # [b,kv,g,nq,bq,d], [...,bq]
+        kblk, vblk, kid = inp                   # [b,kv,bk,d], [nk-slice...]
+        s = jnp.einsum(
+            "bKgqBd,bKcd->bKgqBc", qb, kblk.astype(jnp.float32)
+        )                                        # [b,kv,g,nq,bq,bk]
+        if causal:
+            mask = kid[None, :] <= q_ids[..., None]   # [nq,bq,bk]
+            s = jnp.where(mask[None, None, None], s, _NEG)
+        elif sk != sk0:  # mask key padding (non-causal ragged case)
+            s = jnp.where((kid < sk0)[None, None, None, None, None],
+                          s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bKgqBc,bKcd->bKgqBd", p, vblk.astype(jnp.float32)
+        )
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, n_kv, g, nq, bq, dv), jnp.float32)
+    m0 = jnp.full((b, n_kv, g, nq, bq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, nq, bq), jnp.float32)
+    xs = (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), k_ids)
+    if unroll:  # cost-analysis mode: loop bodies must appear per-trip
+        carry = (acc0, m0, l0)
+        for i in range(nk):
+            carry, _ = kv_step(
+                carry, jax.tree.map(lambda a: a[i], xs))
+        acc, m, l = carry
+    else:
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), xs)
+    out = acc / jnp.maximum(l[..., None], 1e-20)
+    return out.reshape(b, h, sq, dv)[:, :, :sq0].astype(q.dtype)
+
+
+def _blockwise_causal_skip(qb, kb, vb, q_ids, k_ids, dv, unroll):
+    """Causal attention over the lower-triangular block set only —
+    halves attention FLOPs vs the dense-block baseline (§Perf lever).
+
+    Scans the static (i, j ≤ i) pair list; per-q-block online-softmax
+    state lives in full-width carries updated with dynamic slices.
+    """
+    b, n_kv, g, nq, bq, d = qb.shape
+    pairs = [(i, j) for i in range(nq) for j in range(i + 1)]
+
+    def step(carry, ij):
+        acc, m, l = carry
+        i, j = ij
+        q_i = jax.lax.dynamic_index_in_dim(qb, i, 3, keepdims=False)
+        k_j = jax.lax.dynamic_index_in_dim(kb, j, 2, keepdims=False)
+        v_j = jax.lax.dynamic_index_in_dim(vb, j, 2, keepdims=False)
+        qid = jax.lax.dynamic_index_in_dim(q_ids, i, 0, keepdims=False)
+        kid = jax.lax.dynamic_index_in_dim(k_ids, j, 0, keepdims=False)
+        s = jnp.einsum("bKgBd,bKcd->bKgBc", q_i,
+                       k_j.astype(jnp.float32))
+        s = jnp.where((kid[None, :] <= qid[:, None])[None, None, None],
+                      s, _NEG)
+        m_i = jax.lax.dynamic_index_in_dim(m, i, 3, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, i, 3, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, i, 3, keepdims=False)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        a_new = a_i * alpha[..., None] + jnp.einsum(
+            "bKgBc,bKce->bKgBe", p, v_j.astype(jnp.float32))
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, i, 3)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 3)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 3)
+        return (acc, m, l), None
+
+    acc0 = jnp.zeros((b, n_kv, g, nq, bq, dv), jnp.float32)
+    m0 = jnp.full((b, n_kv, g, nq, bq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, n_kv, g, nq, bq), jnp.float32)
+    if unroll:
+        carry = (acc0, m0, l0)
+        for i, j in pairs:  # static python ints (cost-analysis mode)
+            carry, _ = step(carry, (i, j))
+        acc, m, l = carry
+    else:
+        pairs_i = jnp.asarray([p[0] for p in pairs], jnp.int32)
+        pairs_j = jnp.asarray([p[1] for p in pairs], jnp.int32)
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0), (pairs_i, pairs_j))
+    return acc / jnp.maximum(l[..., None], 1e-20)
+
+
+def decode_attention(
+    q: jax.Array,        # [b, n_heads, 1, d]
+    k_cache: jax.Array,  # [b, n_kv, S, d]
+    v_cache: jax.Array,  # [b, n_kv, S, d]
+    length: jax.Array,   # scalar or [b] — number of valid cache slots
+) -> jax.Array:
+    """Single-token decode against a (possibly sequence-sharded) cache."""
+    b, h, _, d = q.shape
+    n_kv, S = k_cache.shape[1], k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = h // n_kv
+    scale = d ** -0.5
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) * scale
+    s = jnp.einsum("bKgd,bKsd->bKgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgs,bKse->bKge", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, 1, dv).astype(q.dtype)

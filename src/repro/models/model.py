@@ -1,0 +1,718 @@
+"""Model assembly: parameter specs, init, train/prefill/decode forwards,
+and input specs for every assigned architecture family.
+
+Layers are stacked on a leading axis and driven by ``lax.scan`` so the
+HLO stays layer-count-independent (mandatory for compiling 80-layer
+models at 512 devices on this container).
+
+Logical sharding axes used in specs (resolved by sharding/partition.py):
+    "embed"   — d_model-like dims            -> fsdp ("data")
+    "heads"   — attention head / q dims      -> tensor ("model")
+    "kv"      — kv head dims                 -> tensor if divisible
+    "mlp"     — ffn hidden                   -> tensor
+    "expert"  — MoE expert axis              -> tensor (EP)
+    "vocab"   — vocabulary                   -> tensor
+    "layers", None — never sharded
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import (
+    DP_AXES,
+    apply_rope,
+    blockwise_attention,
+    constrain,
+    mlp,
+    mrope_positions,
+    rms_norm,
+)
+from . import ssm as S
+from .transformer import (
+    attention,
+    decoder_block,
+    decoder_block_decode,
+)
+
+__all__ = [
+    "PSpec",
+    "param_specs",
+    "abstract_params",
+    "init_params",
+    "logical_axes",
+    "flat_items",
+    "train_loss",
+    "prefill",
+    "serve_step",
+    "cache_specs",
+    "input_specs",
+    "SHAPE_SETS",
+    "shape_applicable",
+]
+
+
+class PSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | ones | zeros | a_log
+
+
+# =====================================================================
+# Parameter specs per family
+# =====================================================================
+def _attn_specs(cfg: ModelConfig, L: int, cross: bool = False) -> Dict:
+    hd = cfg.resolved_head_dim
+    d = cfg.d_model
+    if cfg.is_mla and not cross:
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        return dict(
+            wq=PSpec((L, d, cfg.n_heads * (dn + dr)),
+                     ("layers", "embed", "heads")),
+            kv_down=PSpec((L, d, cfg.kv_lora + dr),
+                          ("layers", "embed", None)),
+            k_up=PSpec((L, cfg.kv_lora, cfg.n_heads * dn),
+                       ("layers", None, "heads")),
+            v_up=PSpec((L, cfg.kv_lora, cfg.n_heads * dv),
+                       ("layers", None, "heads")),
+            wo=PSpec((L, cfg.n_heads * dv, d), ("layers", "heads", "embed")),
+        )
+    return dict(
+        wq=PSpec((L, d, cfg.n_heads * hd), ("layers", "embed", "heads")),
+        wk=PSpec((L, d, cfg.n_kv_heads * hd), ("layers", "embed", "kv")),
+        wv=PSpec((L, d, cfg.n_kv_heads * hd), ("layers", "embed", "kv")),
+        wo=PSpec((L, cfg.n_heads * hd, d), ("layers", "heads", "embed")),
+    )
+
+
+def _ffn_specs(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    if cfg.is_moe:
+        fe = cfg.d_ff_expert
+        out = dict(
+            router=PSpec((L, d, cfg.n_experts), ("layers", "embed", None)),
+            we1=PSpec((L, cfg.n_experts, d, fe),
+                      ("layers", "expert", "embed", None)),
+            we3=PSpec((L, cfg.n_experts, d, fe),
+                      ("layers", "expert", "embed", None)),
+            we2=PSpec((L, cfg.n_experts, fe, d),
+                      ("layers", "expert", None, "embed")),
+        )
+        if cfg.n_shared_experts:
+            fs = fe * cfg.n_shared_experts
+            out["shared"] = dict(
+                w1=PSpec((L, d, fs), ("layers", "embed", "mlp")),
+                w3=PSpec((L, d, fs), ("layers", "embed", "mlp")),
+                w2=PSpec((L, fs, d), ("layers", "mlp", "embed")),
+            )
+        return out
+    ff = cfg.d_ff
+    out = dict(
+        w1=PSpec((L, d, ff), ("layers", "embed", "mlp")),
+        w2=PSpec((L, ff, d), ("layers", "mlp", "embed")),
+    )
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        out["w3"] = PSpec((L, d, ff), ("layers", "embed", "mlp"))
+    return out
+
+
+def _decoder_block_specs(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    return dict(
+        norm1=PSpec((L, d), ("layers", None), "ones"),
+        attn=_attn_specs(cfg, L),
+        norm2=PSpec((L, d), ("layers", None), "ones"),
+        ffn=_ffn_specs(cfg, L),
+    )
+
+
+def _mamba_specs(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    d_inner = cfg.ssm_expand * d
+    nh = d_inner // 64                      # mamba2 head dim 64
+    d_in = 2 * d_inner + 2 * cfg.ssm_state + nh
+    return dict(
+        norm=PSpec((L, d), ("layers", None), "ones"),
+        in_proj=PSpec((L, d, d_in), ("layers", "embed", "heads")),
+        conv_w=PSpec((L, cfg.ssm_conv, d_inner), ("layers", None, "heads")),
+        A_log=PSpec((L, nh), ("layers", None), "a_log"),
+        dt_bias=PSpec((L, nh), ("layers", None), "zeros"),
+        D=PSpec((L, nh), ("layers", None), "ones"),
+        out_proj=PSpec((L, d_inner, d), ("layers", "heads", "embed")),
+    )
+
+
+def _xlstm_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    G = cfg.n_layers // cfg.slstm_every
+    M = cfg.slstm_every - 1
+    pf = cfg.lstm_proj_factor
+    di = pf * d
+    nh = cfg.n_heads
+    dh2 = d // nh
+    return dict(
+        mlstm=dict(
+            norm=PSpec((G, M, d), ("layers", "layers", None), "ones"),
+            up_proj=PSpec((G, M, d, 2 * di),
+                          ("layers", "layers", "embed", "heads")),
+            wq=PSpec((G, M, di, di), ("layers", "layers", None, "heads")),
+            wk=PSpec((G, M, di, di), ("layers", "layers", None, "heads")),
+            wv=PSpec((G, M, di, di), ("layers", "layers", None, "heads")),
+            wg=PSpec((G, M, di, 2 * nh), ("layers", "layers", "heads", None)),
+            down_proj=PSpec((G, M, di, d),
+                            ("layers", "layers", "heads", "embed")),
+        ),
+        slstm=dict(
+            norm=PSpec((G, d), ("layers", None), "ones"),
+            W=PSpec((G, d, 4 * nh * dh2), ("layers", "embed", "heads")),
+            R=PSpec((G, nh, dh2, 4 * dh2), ("layers", "kv", None, None)),
+            out=PSpec((G, nh * dh2, d), ("layers", "heads", "embed")),
+        ),
+    )
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    specs: Dict[str, Any] = dict(
+        embed=PSpec((cfg.vocab, d), ("vocab", "embed")),
+        final_norm=PSpec((d,), (None,), "ones"),
+    )
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PSpec((d, cfg.vocab), ("embed", "vocab"))
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        specs["blocks"] = _decoder_block_specs(cfg, cfg.n_layers)
+    elif cfg.family == "ssm":
+        specs.update(_xlstm_specs(cfg))
+    elif cfg.family == "hybrid":
+        specs["blocks"] = _mamba_specs(cfg, cfg.n_layers)
+        shared = ModelConfig(**{
+            **dataclasses.asdict(cfg), "kv_lora": 0, "n_experts": 0,
+        })
+        specs["shared_attn"] = dict(
+            norm1=PSpec((d,), (None,), "ones"),
+            attn={k: PSpec(v.shape[1:], v.axes[1:], v.init)
+                  for k, v in _attn_specs(shared, 1).items()},
+            norm2=PSpec((d,), (None,), "ones"),
+            ffn={k: PSpec(v.shape[1:], v.axes[1:], v.init)
+                 for k, v in _ffn_specs(shared, 1).items()},
+        )
+    elif cfg.family == "audio":  # whisper enc-dec
+        specs["enc_blocks"] = _decoder_block_specs(cfg, cfg.encoder_layers)
+        dec = _decoder_block_specs(cfg, cfg.n_layers)
+        dec["norm_x"] = PSpec((cfg.n_layers, d), ("layers", None), "ones")
+        dec["cross"] = _attn_specs(cfg, cfg.n_layers)
+        specs["dec_blocks"] = dec
+        specs["enc_norm"] = PSpec((d,), (None,), "ones")
+    else:
+        raise ValueError(cfg.family)
+    return specs
+
+
+# ------------------------------------------------------------- realize
+def flat_items(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from flat_items(v, f"{prefix}.{k}" if prefix else k)
+    else:
+        yield prefix, tree
+
+
+def _map_specs(fn, tree):
+    if isinstance(tree, dict):
+        return {k: _map_specs(fn, v) for k, v in tree.items()}
+    return fn(tree)
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return _map_specs(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), param_specs(cfg)
+    )
+
+
+def logical_axes(cfg: ModelConfig):
+    return _map_specs(lambda s: s.axes, param_specs(cfg))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.float32):
+    specs = list(flat_items(param_specs(cfg)))
+    keys = jax.random.split(key, len(specs))
+    out: Dict[str, Any] = {}
+
+    def put(path, val):
+        node = out
+        parts = path.split(".")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+
+    for (path, spec), k in zip(specs, keys):
+        if spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        elif spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "a_log":
+            v = jnp.zeros(spec.shape, dtype)  # A = -1
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            v = (jax.random.normal(k, spec.shape, jnp.float32)
+                 * (fan_in ** -0.5)).astype(dtype)
+        put(path, v)
+    return out
+
+
+# =====================================================================
+# Forward passes
+# =====================================================================
+def _embed(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+    if cfg.scale_embedding:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return constrain(x, (DP_AXES,) + (None,) * (x.ndim - 1))
+
+
+def _unembed(params, x, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    out = jnp.einsum("...d,dv->...v", x, w)
+    return constrain(out, (DP_AXES,) + (None,) * (out.ndim - 2) + ("model",))
+
+
+def _sinusoid(s: int, d: int, dtype) -> jax.Array:
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10_000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype)
+
+
+def _sinusoid_at(pos: jax.Array, d: int, dtype) -> jax.Array:
+    """Sinusoidal embedding for one (traced) position scalar."""
+    i = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / (10_000 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)]).astype(dtype)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def layer_scan(body, carry, xs, cfg: ModelConfig):
+    """lax.scan over stacked layers, or an unrolled python loop when
+    cfg.unroll_layers (cost-analysis mode — see config.py)."""
+    if not cfg.unroll_layers:
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _positions(cfg, b, s, given=None):
+    if given is not None:
+        return given
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_type == "mrope":
+        return mrope_positions(pos)
+    return pos
+
+
+# ----------------------------------------------------- decoder backbone
+def _decoder_backbone(params, x, cfg: ModelConfig, positions):
+    body = _maybe_remat(
+        lambda h, p: (decoder_block(h, p, cfg, positions), None), cfg
+    )
+    x, _ = layer_scan(body, x, params["blocks"], cfg)
+    return x
+
+
+def _xlstm_backbone(params, x, cfg: ModelConfig):
+    def mlstm_layer(h, p):
+        h = h + S.mlstm_mix(rms_norm(h, p["norm"], cfg.norm_eps), p, cfg)
+        return constrain(h, (DP_AXES, None, None)), None
+
+    def group(h, gp):
+        h, _ = layer_scan(_maybe_remat(mlstm_layer, cfg), h, gp["mlstm"], cfg)
+        sp = gp["slstm"]
+        h = h + S.slstm_mix(rms_norm(h, sp["norm"], cfg.norm_eps), sp, cfg)
+        return constrain(h, (DP_AXES, None, None)), None
+
+    x, _ = layer_scan(
+        group, x, {"mlstm": params["mlstm"], "slstm": params["slstm"]}, cfg
+    )
+    return x
+
+
+def _zamba_backbone(params, x, cfg: ModelConfig, positions):
+    shared = params["shared_attn"]
+    L = cfg.n_layers
+    use_attn = jnp.asarray(
+        [(i + 1) % cfg.attn_every == 0 for i in range(L)])
+
+    def layer(h, inp):
+        p, flag = inp
+        h = h + S.mamba2_mix(rms_norm(h, p["norm"], cfg.norm_eps), p, cfg)
+
+        def with_attn(h):
+            a = rms_norm(h, shared["norm1"], cfg.norm_eps)
+            a = attention(a, shared["attn"], cfg, positions, causal=True)
+            h = h + a
+            f = rms_norm(h, shared["norm2"], cfg.norm_eps)
+            return h + mlp(f, shared["ffn"], cfg.mlp_type)
+
+        h = jax.lax.cond(flag, with_attn, lambda v: v, h)
+        return constrain(h, (DP_AXES, None, None)), None
+
+    x, _ = layer_scan(
+        _maybe_remat(layer, cfg), x, (params["blocks"], use_attn), cfg
+    )
+    return x
+
+
+def _whisper_encode(params, frames, cfg: ModelConfig):
+    b, se, d = frames.shape
+    x = frames + _sinusoid(se, d, frames.dtype)[None]
+    pos = jnp.broadcast_to(jnp.arange(se, dtype=jnp.int32)[None], (b, se))
+    body = _maybe_remat(
+        lambda h, p: (decoder_block(h, p, cfg, pos, causal=False), None),
+        cfg,
+    )
+    x, _ = layer_scan(body, x, params["enc_blocks"], cfg)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _cross_attention(x, p, cfg: ModelConfig, memory):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(
+        b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,de->bse", memory, p["wk"]).reshape(
+        b, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", memory, p["wv"]).reshape(
+        b, -1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    o = blockwise_attention(q, k, v, causal=False,
+                            block_q=cfg.attn_block_q,
+                            block_k=min(cfg.attn_block_k, k.shape[2]),
+                            unroll=cfg.unroll_layers)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+def _whisper_decode_train(params, x, cfg: ModelConfig, positions, enc_out):
+    def body(h, p):
+        a = rms_norm(h, p["norm1"], cfg.norm_eps)
+        h = h + attention(a, p["attn"], cfg, positions, causal=True)
+        cx = rms_norm(h, p["norm_x"], cfg.norm_eps)
+        h = h + _cross_attention(cx, p["cross"], cfg, enc_out)
+        f = rms_norm(h, p["norm2"], cfg.norm_eps)
+        h = h + mlp(f, p["ffn"], cfg.mlp_type)
+        return constrain(h, (DP_AXES, None, None)), None
+
+    x, _ = layer_scan(_maybe_remat(body, cfg), x, params["dec_blocks"], cfg)
+    return x
+
+
+def forward(params, tokens, cfg: ModelConfig, positions=None,
+            frames=None, return_hidden: bool = False) -> jax.Array:
+    """Full-sequence forward -> logits [b, s, vocab] (or hidden)."""
+    b, s = tokens.shape
+    pos = _positions(cfg, b, s, positions)
+    x = _embed(params, tokens, cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        x = _decoder_backbone(params, x, cfg, pos)
+    elif cfg.family == "ssm":
+        x = _xlstm_backbone(params, x, cfg)
+    elif cfg.family == "hybrid":
+        x = _zamba_backbone(params, x, cfg, pos)
+    elif cfg.family == "audio":
+        enc_out = _whisper_encode(params, frames, cfg)
+        x = x + _sinusoid(s, cfg.d_model, x.dtype)[None]
+        x = _whisper_decode_train(params, x, cfg, pos, enc_out)
+    else:
+        raise ValueError(cfg.family)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if return_hidden:
+        return x
+    return _unembed(params, x, cfg)
+
+
+def _nll(params, x, labels, cfg) -> jax.Array:
+    logits = _unembed(params, x, cfg).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def train_loss(params, batch, cfg: ModelConfig) -> jax.Array:
+    labels = batch["labels"]
+    if cfg.loss_chunk:
+        # §Perf lever: never materialize the full [b, s, vocab] logits —
+        # unembed + CE one sequence chunk at a time
+        x = forward(params, batch["tokens"], cfg,
+                    positions=batch.get("positions"),
+                    frames=batch.get("frames"), return_hidden=True)
+        b, s, d = x.shape
+        c = min(cfg.loss_chunk, s)
+        assert s % c == 0, (s, c)
+        xc = x.reshape(b, s // c, c, d).swapaxes(0, 1)
+        lc = labels.reshape(b, s // c, c).swapaxes(0, 1)
+
+        def body(tot, inp):
+            xi, li = inp
+            return tot + jnp.sum(_nll(params, xi, li, cfg)), None
+
+        if cfg.unroll_layers:
+            tot = jnp.float32(0)
+            for i in range(s // c):
+                tot, _ = body(tot, (xc[i], lc[i]))
+        else:
+            tot, _ = jax.lax.scan(body, jnp.float32(0), (xc, lc))
+        return tot / (b * s)
+    x = forward(params, batch["tokens"], cfg,
+                positions=batch.get("positions"),
+                frames=batch.get("frames"), return_hidden=True)
+    return jnp.mean(_nll(params, x, labels, cfg))
+
+
+def prefill(params, tokens, cfg: ModelConfig, positions=None, frames=None):
+    """Prefill = full forward; returns last-position logits.
+
+    (The KV cache produced during a production prefill is the same k/v
+    tensors the forward computes; for the dry-run we account its cost via
+    the forward itself.)"""
+    logits = forward(params, tokens, cfg, positions, frames)
+    return logits[:, -1]
+
+
+# =====================================================================
+# Decode (serve_step)
+# =====================================================================
+def cache_specs(cfg: ModelConfig, batch: int, seq: int,
+                dtype=jnp.bfloat16) -> Dict:
+    hd = cfg.resolved_head_dim
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.is_mla:
+            return dict(ckv=jax.ShapeDtypeStruct(
+                (L, batch, seq, cfg.kv_lora + cfg.qk_rope_dim), dtype))
+        return dict(
+            k=jax.ShapeDtypeStruct((L, batch, cfg.n_kv_heads, seq, hd), dtype),
+            v=jax.ShapeDtypeStruct((L, batch, cfg.n_kv_heads, seq, hd), dtype),
+        )
+    if cfg.family == "ssm":
+        G = cfg.n_layers // cfg.slstm_every
+        M = cfg.slstm_every - 1
+        nh = cfg.n_heads
+        dh = cfg.lstm_proj_factor * cfg.d_model // nh
+        dh2 = cfg.d_model // nh
+        f32 = jnp.float32
+        return dict(
+            mlstm_S=jax.ShapeDtypeStruct((G, M, batch, nh, dh, dh), f32),
+            mlstm_n=jax.ShapeDtypeStruct((G, M, batch, nh, dh), f32),
+            slstm_h=jax.ShapeDtypeStruct((G, batch, nh, dh2), f32),
+            slstm_c=jax.ShapeDtypeStruct((G, batch, nh, dh2), f32),
+            slstm_n=jax.ShapeDtypeStruct((G, batch, nh, dh2), f32),
+        )
+    if cfg.family == "hybrid":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        nh = d_inner // 64
+        n_att = cfg.n_layers // cfg.attn_every
+        f32 = jnp.float32
+        return dict(
+            conv=jax.ShapeDtypeStruct(
+                (L, batch, cfg.ssm_conv, d_inner), dtype),
+            S=jax.ShapeDtypeStruct((L, batch, nh, cfg.ssm_state, 64), f32),
+            attn_k=jax.ShapeDtypeStruct(
+                (n_att, batch, cfg.n_kv_heads, seq, hd), dtype),
+            attn_v=jax.ShapeDtypeStruct(
+                (n_att, batch, cfg.n_kv_heads, seq, hd), dtype),
+        )
+    if cfg.family == "audio":
+        return dict(
+            k=jax.ShapeDtypeStruct((L, batch, cfg.n_kv_heads, seq, hd), dtype),
+            v=jax.ShapeDtypeStruct((L, batch, cfg.n_kv_heads, seq, hd), dtype),
+            enc_out=jax.ShapeDtypeStruct(
+                (batch, cfg.encoder_seq, cfg.d_model), dtype),
+        )
+    raise ValueError(cfg.family)
+
+
+def serve_step(params, cache: Dict, token: jax.Array, length: jax.Array,
+               cfg: ModelConfig):
+    """One decode step: token [b] int32 -> (logits [b, vocab], new cache)."""
+    x = _embed(params, token[:, None], cfg)[:, 0]
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.is_mla:
+            def body(h, inp):
+                p, ckv = inp
+                h, ckv = decoder_block_decode(h, p, cfg, ckv, length)
+                return h, ckv
+            x, ckv = layer_scan(body, x, (params["blocks"], cache["ckv"]), cfg)
+            new_cache = dict(ckv=ckv)
+        else:
+            def body(h, inp):
+                p, k, v = inp
+                h, (k, v) = decoder_block_decode(h, p, cfg, (k, v), length)
+                return h, (k, v)
+            x, (k, v) = layer_scan(
+                body, x, (params["blocks"], cache["k"], cache["v"]), cfg)
+            new_cache = dict(k=k, v=v)
+
+    elif cfg.family == "ssm":
+        def mlayer(h, inp):
+            p, Sm, nm = inp
+            y, (Sm, nm) = S.mlstm_step(
+                rms_norm(h, p["norm"], cfg.norm_eps), (Sm, nm), p, cfg)
+            return h + y, (Sm, nm)
+
+        def group(h, inp):
+            gp, Sm, nm, hh, cc, nn = inp
+            h, (Sm, nm) = layer_scan(mlayer, h, (gp["mlstm"], Sm, nm), cfg)
+            sp = gp["slstm"]
+            y, (hh, cc, nn) = S.slstm_step(
+                rms_norm(h, sp["norm"], cfg.norm_eps), (hh, cc, nn), sp, cfg)
+            return h + y, (Sm, nm, hh, cc, nn)
+
+        x, st = layer_scan(
+            group, x,
+            ({"mlstm": params["mlstm"], "slstm": params["slstm"]},
+             cache["mlstm_S"], cache["mlstm_n"],
+             cache["slstm_h"], cache["slstm_c"], cache["slstm_n"]), cfg)
+        new_cache = dict(
+            mlstm_S=st[0], mlstm_n=st[1], slstm_h=st[2], slstm_c=st[3],
+            slstm_n=st[4])
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        L = cfg.n_layers
+        n_att = L // cfg.attn_every
+        use_attn = jnp.asarray(
+            [(i + 1) % cfg.attn_every == 0 for i in range(L)])
+        att_idx = jnp.asarray(
+            [((i + 1) // cfg.attn_every - 1) if (i + 1) % cfg.attn_every == 0
+             else 0 for i in range(L)], jnp.int32)
+
+        def layer(carry, inp):
+            h, ak, av = carry
+            p, flag, ai, conv, Sst = inp
+            y, (conv, Sst) = S.mamba2_step(
+                rms_norm(h, p["norm"], cfg.norm_eps), (conv, Sst), p, cfg)
+            h = h + y
+
+            def with_attn(op):
+                h, ak, av = op
+                from .transformer import attention_decode
+                a = rms_norm(h, shared["norm1"], cfg.norm_eps)
+                kc = jax.lax.dynamic_index_in_dim(ak, ai, 0, keepdims=False)
+                vc = jax.lax.dynamic_index_in_dim(av, ai, 0, keepdims=False)
+                a, (kc, vc) = attention_decode(
+                    a, shared["attn"], cfg, (kc, vc), length)
+                ak = jax.lax.dynamic_update_index_in_dim(ak, kc, ai, 0)
+                av = jax.lax.dynamic_update_index_in_dim(av, vc, ai, 0)
+                h = h + a
+                f = rms_norm(h, shared["norm2"], cfg.norm_eps)
+                h = h + mlp(f[:, None], shared["ffn"], cfg.mlp_type)[:, 0]
+                return h, ak, av
+
+            h, ak, av = jax.lax.cond(
+                flag, with_attn, lambda op: op, (h, ak, av))
+            return (h, ak, av), (conv, Sst)
+
+        (x, ak, av), (conv, Sst) = layer_scan(
+            layer, (x, cache["attn_k"], cache["attn_v"]),
+            (params["blocks"], use_attn, att_idx, cache["conv"],
+             cache["S"]), cfg)
+        new_cache = dict(conv=conv, S=Sst, attn_k=ak, attn_v=av)
+
+    elif cfg.family == "audio":
+        enc_out = cache["enc_out"]
+        # whisper uses absolute (sinusoidal-stub) positions, not RoPE
+        x = x + _sinusoid_at(length, cfg.d_model, x.dtype)[None]
+
+        def body(h, inp):
+            from .transformer import attention_decode
+            p, k, v = inp
+            a = rms_norm(h, p["norm1"], cfg.norm_eps)
+            a, (k, v) = attention_decode(a, p["attn"], cfg, (k, v), length)
+            h = h + a
+            cx = rms_norm(h, p["norm_x"], cfg.norm_eps)
+            h = h + _cross_attention(
+                cx[:, None], p["cross"], cfg, enc_out)[:, 0]
+            f = rms_norm(h, p["norm2"], cfg.norm_eps)
+            h = h + mlp(f[:, None], p["ffn"], cfg.mlp_type)[:, 0]
+            return h, (k, v)
+
+        x, (k, v) = layer_scan(
+            body, x, (params["dec_blocks"], cache["k"], cache["v"]), cfg)
+        new_cache = dict(k=k, v=v, enc_out=enc_out)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _unembed(params, x, cfg)
+    return logits, new_cache
+
+
+# =====================================================================
+# Input specs per assigned shape
+# =====================================================================
+SHAPE_SETS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.is_recurrent:
+        return False, (
+            "pure full-attention arch: 524k dense-KV decode is "
+            "architecturally quadratic — skipped per DESIGN.md §4"
+        )
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch: Optional[int] = None,
+                seq: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    info = SHAPE_SETS[shape]
+    b = batch or info["batch"]
+    s = seq or info["seq"]
+    i32 = jnp.int32
+    if info["kind"] in ("train", "prefill"):
+        # whisper trains/serves on (audio frames -> text): text length s
+        out = dict(tokens=jax.ShapeDtypeStruct((b, s), i32))
+        if info["kind"] == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "audio":
+            out["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.rope_type == "mrope":
+            out["positions"] = jax.ShapeDtypeStruct((b, 3, s), i32)
+        return out
+    # decode
+    return dict(
+        token=jax.ShapeDtypeStruct((b,), i32),
+        length=jax.ShapeDtypeStruct((), i32),
+        cache=cache_specs(cfg, b, s),
+    )

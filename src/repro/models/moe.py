@@ -1,0 +1,90 @@
+"""Mixture-of-experts layer — group-wise sort-based dispatch.
+
+Tokens are routed *within their sequence group* (leading batch axis),
+so every dispatch op — top-k, per-group sort, rank, scatter — is batched
+over a dimension that stays sharded over ``data``; expert buffers shard
+experts over ``model`` (EP).  No global sort, no replicated buffers
+(a global-sort first cut replicated dispatch buffers: 200 GB/device
+temps on dbrx train_4k — see EXPERIMENTS §Perf iteration 0b).
+
+FLOPs scale with top-k·capacity_factor, not n_experts, so the
+roofline's 6·N_active·D accounting holds.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import DP_AXES, constrain, mlp
+
+__all__ = ["moe_layer", "capacity"]
+
+
+def capacity(cfg: ModelConfig, group_tokens: int) -> int:
+    c = math.ceil(
+        group_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_layer(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    """x: [b, s, d] -> [b, s, d].  p: router, we1/we2/we3, shared."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, s)
+    sk = s * k
+
+    logits = jnp.einsum(
+        "bsd,de->bse", x.astype(jnp.float32),
+        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                  # [b, s, k]
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # ---- group-local dispatch (everything batched over b)
+    e_flat = idx.reshape(b, sk)
+    order = jnp.argsort(e_flat, axis=1)                   # [b, sk]
+    e_sorted = jnp.take_along_axis(e_flat, order, axis=1)
+    t_sorted = order // k                                 # token within group
+    # bucket starts via searchsorted on the sorted expert ids — O(sk·logE)
+    # (a [b, sk, E] one-hot here cost hundreds of GB of temps at scale)
+    start = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(E, dtype=row.dtype))
+    )(e_sorted).astype(jnp.int32)                         # [b, E]
+    rank = jnp.arange(sk)[None, :] - jnp.take_along_axis(
+        start, e_sorted, axis=1)
+    keep = rank < C
+    slot = jnp.where(keep, e_sorted * C + rank, E * C)    # overflow bin
+
+    rows = jnp.arange(b)[:, None]
+    x_sorted = jnp.take_along_axis(
+        x, t_sorted[..., None], axis=1)                   # [b, sk, d]
+    buf = jnp.zeros((b, E * C + 1, d), x.dtype).at[rows, slot].add(x_sorted)
+    eb = buf[:, :-1].reshape(b, E, C, d)
+    # EP: groups shard over data, experts over model
+    eb = constrain(eb, (DP_AXES, "model", None, None))
+
+    # ---- expert FFN
+    act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+    g = act(jnp.einsum("becd,edf->becf", eb, p["we1"]))
+    u = jnp.einsum("becd,edf->becf", eb, p["we3"])
+    out_e = jnp.einsum("becf,efd->becd", g * u, p["we2"])
+    out_e = constrain(out_e, (DP_AXES, "model", None, None))
+
+    # ---- combine (undo sort, weight by gates)
+    flat = jnp.concatenate(
+        [out_e.reshape(b, E * C, d),
+         jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    picked = jnp.take_along_axis(flat, slot[..., None], axis=1)
+    picked = picked * keep[..., None].astype(x.dtype)     # [b, sk, d]
+    inv = jnp.zeros_like(order).at[rows, order].set(
+        jnp.broadcast_to(jnp.arange(sk)[None], (b, sk)))
+    per_tk = jnp.take_along_axis(picked, inv[..., None], axis=1)
+    per_tk = per_tk.reshape(b, s, k, d)
+    out = jnp.einsum("bskd,bsk->bsd", per_tk, gates.astype(x.dtype))
+
+    if cfg.n_shared_experts:
+        out = out + mlp(x, p["shared"], cfg.mlp_type)
+    return out

@@ -1,0 +1,298 @@
+"""Recurrent / state-space blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+All sequence mixing goes through one generic *chunked linear recurrence*
+
+    S_t = d_t · S_{t-1} + g_t · k_t v_tᵀ ,   y_t = q_tᵀ S_t
+
+computed chunk-parallel (intra-chunk: L×L decay-masked attention on the
+MXU; inter-chunk: a short ``lax.scan`` over chunk summaries).  Decode is
+the O(1)-state single-step recurrence — this is what makes the ssm/hybrid
+architectures eligible for the 500k-context shape.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "chunked_recurrence",
+    "recurrence_step",
+    "mamba2_mix",
+    "mamba2_step",
+    "mlstm_mix",
+    "mlstm_step",
+    "slstm_mix",
+    "slstm_step",
+]
+
+
+# ============================================================ core scan
+def chunked_recurrence(
+    q: jax.Array,      # [b, h, s, dk]
+    k: jax.Array,      # [b, h, s, dk]
+    v: jax.Array,      # [b, h, s, dv]
+    decay: jax.Array,  # [b, h, s]   in (0, 1]
+    gain: jax.Array,   # [b, h, s]
+    chunk: int = 64,
+    unroll: bool = False,
+) -> jax.Array:
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    def cs(x, extra=()):
+        return x.reshape(b, h, nc, L, *extra)
+
+    qc = cs(q, (dk,)).astype(jnp.float32)
+    kc = cs(k, (dk,)).astype(jnp.float32)
+    vc = cs(v, (dv,)).astype(jnp.float32)
+    logd = jnp.log(jnp.clip(decay, 1e-12, 1.0)).reshape(b, h, nc, L)
+    gc = gain.reshape(b, h, nc, L).astype(jnp.float32)
+
+    cum = jnp.cumsum(logd, axis=-1)                       # log Π_{i<=t}
+    # intra-chunk: y[t] += Σ_{s<=t} exp(cum[t]-cum[s]) g[s] (q_t·k_s) v_s
+    diff = cum[..., :, None] - cum[..., None, :]          # [.., t, s]
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    D = jnp.where(tri, jnp.exp(diff), 0.0) * gc[..., None, :]
+    scores = jnp.einsum("bhctd,bhcsd->bhcts", qc, kc) * D
+    y_intra = jnp.einsum("bhcts,bhcse->bhcte", scores, vc)
+
+    # chunk summaries: S_c = Σ_s exp(cum[L-1]-cum[s]) g[s] k_s v_sᵀ
+    wl = jnp.exp(cum[..., -1:] - cum) * gc                # [b,h,nc,L]
+    S_c = jnp.einsum("bhcs,bhcsd,bhcse->bhcde", wl, kc, vc)
+    chunk_decay = jnp.exp(cum[..., -1])                   # [b,h,nc]
+
+    # inter-chunk scan
+    def step(S, inp):
+        S_chunk, cd, q_chunk, cum_chunk = inp
+        # y_inter[t] = exp(cum[t]) q_t · S_in
+        y = jnp.einsum("bhtd,bhde->bhte", q_chunk, S) * jnp.exp(
+            cum_chunk
+        )[..., None]
+        S_new = cd[..., None, None] * S + S_chunk
+        return S_new, y
+
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    xs = (
+        jnp.moveaxis(S_c, 2, 0),
+        jnp.moveaxis(chunk_decay, 2, 0),
+        jnp.moveaxis(qc, 2, 0),
+        jnp.moveaxis(cum, 2, 0),
+    )
+    if unroll:  # cost-analysis mode
+        Scur, ys = S0, []
+        for i in range(nc):
+            Scur, y = step(Scur, jax.tree.map(lambda a: a[i], xs))
+            ys.append(y)
+        y_inter = jnp.stack(ys, axis=0)
+    else:
+        _, y_inter = jax.lax.scan(step, S0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 2)
+    return y.reshape(b, h, s, dv)
+
+
+def recurrence_step(
+    S: jax.Array,      # [b, h, dk, dv]
+    q: jax.Array,      # [b, h, dk]
+    k: jax.Array,
+    v: jax.Array,      # [b, h, dv]
+    decay: jax.Array,  # [b, h]
+    gain: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """One decode step; returns (new state, y [b,h,dv])."""
+    S = decay[..., None, None] * S + gain[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    y = jnp.einsum("bhd,bhde->bhe", q, S)
+    return S, y
+
+
+# ============================================================== Mamba2
+def _mamba_parts(x, p, cfg):
+    """Shared projections for train/decode.  Returns per-token q(C), k(B),
+    v(dt·x), decay, gain, z."""
+    d_in = p["in_proj"].shape[1]
+    zxbcdt = jnp.einsum("...d,de->...e", x, p["in_proj"])
+    nh = p["A_log"].shape[0]
+    dh = (d_in - 2 * cfg.ssm_state - nh) // (2 * nh)
+    z, xin, B, C, dt = jnp.split(
+        zxbcdt,
+        [dh * nh, 2 * dh * nh, 2 * dh * nh + cfg.ssm_state,
+         2 * dh * nh + 2 * cfg.ssm_state],
+        axis=-1,
+    )
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    decay = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)
+    return z, xin, B, C, dt, decay, nh, dh
+
+
+def mamba2_mix(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """Mamba2 (SSD) sequence mixing, chunk-parallel.  x: [b, s, d]."""
+    b, s, _ = x.shape
+    z, xin, B, C, dt, decay, nh, dh = _mamba_parts(x, p, cfg)
+    # causal depthwise conv on the x-branch (width ssm_conv)
+    xin = _causal_conv(xin, p["conv_w"])
+    xh = xin.reshape(b, s, nh, dh)
+    v = (dt[..., None] * xh.astype(jnp.float32)).transpose(0, 2, 1, 3)
+    k = jnp.broadcast_to(
+        B[:, None].astype(jnp.float32), (b, nh, s, cfg.ssm_state)
+    )
+    q = jnp.broadcast_to(
+        C[:, None].astype(jnp.float32), (b, nh, s, cfg.ssm_state)
+    )
+    y = chunked_recurrence(
+        q, k, v, decay.transpose(0, 2, 1),
+        jnp.ones_like(decay).transpose(0, 2, 1), chunk=cfg.ssm_chunk,
+        unroll=cfg.unroll_layers,
+    )                                                    # [b,nh,s,dh]
+    y = y + p["D"][None, :, None, None] * xh.transpose(0, 2, 1, 3)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return jnp.einsum("...e,ed->...d", y.astype(x.dtype), p["out_proj"])
+
+
+def mamba2_step(x, state, p, cfg):
+    """One decode token.  x: [b, d]; state: (conv_buf, S)."""
+    conv_buf, S = state
+    b = x.shape[0]
+    z, xin, B, C, dt, decay, nh, dh = _mamba_parts(x[:, None], p, cfg)
+    z, xin, B, C = z[:, 0], xin[:, 0], B[:, 0], C[:, 0]
+    dt, decay = dt[:, 0], decay[:, 0]
+    # rolling conv buffer [b, w, d_conv]
+    conv_buf = jnp.concatenate([conv_buf[:, 1:], xin[:, None]], axis=1)
+    xin = jnp.einsum("bwc,wc->bc", conv_buf, p["conv_w"])
+    xin = jax.nn.silu(xin)
+    xh = xin.reshape(b, nh, dh)
+    v = dt[..., None] * xh.astype(jnp.float32)
+    k = jnp.broadcast_to(B[:, None].astype(jnp.float32),
+                         (b, nh, cfg.ssm_state))
+    q = jnp.broadcast_to(C[:, None].astype(jnp.float32),
+                         (b, nh, cfg.ssm_state))
+    S, y = recurrence_step(S, q, k, v, decay, jnp.ones_like(decay))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(b, nh * dh) * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), p["out_proj"])
+    return out, (conv_buf, S)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width w.shape[0]; x: [b, s, c]."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i: i + x.shape[1]] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return jax.nn.silu(out)
+
+
+# =============================================================== mLSTM
+def mlstm_mix(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """xLSTM mLSTM block: matrix memory + sigmoid forget / input gates
+    (bounded-gate simplification of exponential gating, see DESIGN.md)."""
+    b, s, d = x.shape
+    nh = cfg.n_heads
+    dh = cfg.lstm_proj_factor * cfg.d_model // nh
+    up = jnp.einsum("...d,de->...e", x, p["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("...d,de->...e", xi, p["wq"]).reshape(b, s, nh, dh)
+    k = jnp.einsum("...d,de->...e", xi, p["wk"]).reshape(b, s, nh, dh)
+    v = jnp.einsum("...d,de->...e", xi, p["wv"]).reshape(b, s, nh, dh)
+    gates = jnp.einsum("...d,de->...e", xi, p["wg"])      # [b,s,2*nh]
+    f, i = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    decay = jax.nn.sigmoid(f).transpose(0, 2, 1)          # [b,nh,s]
+    gain = jax.nn.sigmoid(i).transpose(0, 2, 1)
+    y = chunked_recurrence(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32) * dh ** -0.5,
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        v.transpose(0, 2, 1, 3).astype(jnp.float32),
+        decay, gain, chunk=cfg.ssm_chunk, unroll=cfg.unroll_layers,
+    )
+    # normalizer: same recurrence with v ≡ 1
+    n = chunked_recurrence(
+        q.transpose(0, 2, 1, 3).astype(jnp.float32) * dh ** -0.5,
+        k.transpose(0, 2, 1, 3).astype(jnp.float32),
+        jnp.ones((b, nh, s, 1), jnp.float32),
+        decay, gain, chunk=cfg.ssm_chunk, unroll=cfg.unroll_layers,
+    )
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, nh * dh)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return jnp.einsum("...e,ed->...d", y, p["down_proj"])
+
+
+def mlstm_step(x, state, p, cfg):
+    """Decode step; state = (S [b,nh,dh,dh], n [b,nh,dh])."""
+    S, nstate = state
+    b, d = x.shape
+    nh = cfg.n_heads
+    dh = cfg.lstm_proj_factor * cfg.d_model // nh
+    up = jnp.einsum("bd,de->be", x, p["up_proj"])
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bd,de->be", xi, p["wq"]).reshape(b, nh, dh)
+    k = jnp.einsum("bd,de->be", xi, p["wk"]).reshape(b, nh, dh)
+    v = jnp.einsum("bd,de->be", xi, p["wv"]).reshape(b, nh, dh)
+    gates = jnp.einsum("bd,de->be", xi, p["wg"]).astype(jnp.float32)
+    f, i = jnp.split(gates, 2, axis=-1)
+    decay = jax.nn.sigmoid(f)
+    gain = jax.nn.sigmoid(i)
+    qf = q.astype(jnp.float32) * dh ** -0.5
+    S, y = recurrence_step(S, qf, k.astype(jnp.float32),
+                           v.astype(jnp.float32), decay, gain)
+    nstate = decay[..., None] * nstate + gain[..., None] * k.astype(
+        jnp.float32)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", qf, nstate))[..., None], 1.0
+    )
+    y = y / denom
+    y = y.reshape(b, nh * dh).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("be,ed->bd", y, p["down_proj"])
+    return out, (S, nstate)
+
+
+# =============================================================== sLSTM
+def slstm_mix(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """sLSTM: scalar-memory LSTM with per-head recurrence (lax.scan over
+    time — inherently sequential, as in the paper)."""
+    b, s, d = x.shape
+    nh, dh, _ = p["R"].shape
+    gx = jnp.einsum("bsd,de->bse", x, p["W"])             # [b,s,4*nh*dh]
+
+    def step(carry, g_t):
+        h, c, n = carry                                    # [b,nh,dh]
+        rec = jnp.einsum("bhd,hde->bhe", h, p["R"])        # [b,nh,4*dh]
+        g = g_t.reshape(b, nh, 4 * dh) + rec
+        i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+        i = jnp.exp(jnp.minimum(i, 8.0))                   # capped exp gate
+        f = jax.nn.sigmoid(f)
+        c = f * c + i * jnp.tanh(z)
+        n = f * n + i
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return (h, c, n), h
+
+    h0 = jnp.zeros((b, nh, dh), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(
+        step, (h0, h0, h0), jnp.moveaxis(gx, 1, 0)
+    )
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, nh * dh).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out"])
+
+
+def slstm_step(x, state, p, cfg):
+    h, c, n = state
+    b, d = x.shape
+    nh, dh, _ = p["R"].shape
+    g = jnp.einsum("bd,de->be", x, p["W"]).reshape(b, nh, 4 * dh)
+    g = g + jnp.einsum("bhd,hde->bhe", h, p["R"])
+    i, f, z, o = jnp.split(g.astype(jnp.float32), 4, axis=-1)
+    i = jnp.exp(jnp.minimum(i, 8.0))
+    f = jax.nn.sigmoid(f)
+    c = f * c + i * jnp.tanh(z)
+    n = f * n + i
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    y = h.reshape(b, nh * dh).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", y, p["out"]), (h, c, n)

@@ -1,0 +1,280 @@
+"""Transformer building blocks: attention block (GQA/MQA/MLA), dense/MoE
+FFN, and the per-family layer bodies used under ``lax.scan``.
+
+Everything is functional: ``block(params, x, ...) -> x``.  Decode variants
+thread an explicit cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    DP_AXES,
+    apply_rope,
+    blockwise_attention,
+    constrain,
+    decode_attention,
+    mlp,
+    rms_norm,
+)
+from .moe import moe_layer
+
+__all__ = [
+    "attention",
+    "attention_decode",
+    "mla_attention",
+    "mla_attention_decode",
+    "ffn",
+    "decoder_block",
+    "decoder_block_decode",
+]
+
+
+# ------------------------------------------------------------- attention
+def _qkv(x, p, cfg: ModelConfig):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(
+        b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(
+        b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(
+        b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def attention(
+    x: jax.Array,
+    p: dict,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence (training / prefill) GQA attention."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    q = apply_rope(q, positions, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    o = blockwise_attention(
+        q, k, v, causal=causal,
+        block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        unroll=cfg.unroll_layers, causal_skip=cfg.attn_causal_skip,
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+def attention_prefill_cache(x, p, cfg, positions):
+    """Prefill: returns (output, (k_cache, v_cache))."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(x, p, cfg)
+    q = apply_rope(q, positions, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    o = blockwise_attention(q, k, v, causal=True,
+                            block_q=cfg.attn_block_q,
+                            block_k=cfg.attn_block_k,
+                            unroll=cfg.unroll_layers)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"]), (k, v)
+
+
+def attention_decode(
+    x: jax.Array,            # [b, d] single token
+    p: dict,
+    cfg: ModelConfig,
+    cache: Tuple[jax.Array, jax.Array],   # k/v [b, kv, S, hd]
+    length: jax.Array,       # current cache fill (scalar int32)
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    b, _ = x.shape
+    hd = cfg.resolved_head_dim
+    k_cache, v_cache = cache
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+    xq = x[:, None]
+    q = jnp.einsum("bsd,de->bse", xq, p["wq"]).reshape(
+        b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,de->bse", xq, p["wk"]).reshape(
+        b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsd,de->bse", xq, p["wv"]).reshape(
+        b, 1, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    rope_pos = pos if cfg.rope_type != "mrope" else jnp.broadcast_to(
+        pos[:, None, :], (b, 3, 1))
+    q = apply_rope(q, rope_pos, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    k = apply_rope(k, rope_pos, cfg.rope_type, cfg.rope_theta,
+                   cfg.mrope_sections)
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.transpose(0, 1, 2, 3), (0, 0, length, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v, (0, 0, length, 0))
+    o = decode_attention(q, k_cache, v_cache, length + 1)
+    o = o.reshape(b, -1)
+    return jnp.einsum("be,ed->bd", o, p["wo"]), (k_cache, v_cache)
+
+
+# ----------------------------------------------------------------- MLA
+def _mla_qkv(x, p, cfg: ModelConfig, positions):
+    """DeepSeek-V2 multi-head latent attention: KV compressed to kv_lora
+    dims + a decoupled shared RoPE key."""
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(
+        b, s, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, "full", cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,de->bse", x, p["kv_down"])   # [b,s,lora+dr]
+    c, k_rope = ckv[..., : cfg.kv_lora], ckv[..., cfg.kv_lora:]
+    k_rope = apply_rope(
+        k_rope[:, None], positions, "full", cfg.rope_theta)  # [b,1,s,dr]
+    k_nope = jnp.einsum("bsc,ce->bse", c, p["k_up"]).reshape(
+        b, s, H, dn).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsc,ce->bse", c, p["v_up"]).reshape(
+        b, s, H, dv).transpose(0, 2, 1, 3)
+    k_rope_b = jnp.broadcast_to(k_rope, (b, H, s, dr))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    return q_full, k_full, v, ckv
+
+
+def mla_attention(x, p, cfg: ModelConfig, positions) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v, _ = _mla_qkv(x, p, cfg, positions)
+    o = blockwise_attention(q, k, v, causal=True,
+                            block_q=cfg.attn_block_q,
+                            block_k=cfg.attn_block_k,
+                            unroll=cfg.unroll_layers,
+                            causal_skip=cfg.attn_causal_skip)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return jnp.einsum("bse,ed->bsd", o, p["wo"])
+
+
+def mla_attention_decode(x, p, cfg: ModelConfig, cache, length):
+    """Cache holds the *compressed* ckv [b, S, lora+dr] — the MLA memory
+    win (this is why deepseek's 32k cache fits where GQA's would not)."""
+    b, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+    xq = x[:, None]
+    q = jnp.einsum("bsd,de->bse", xq, p["wq"]).reshape(
+        b, 1, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, "full", cfg.rope_theta)
+
+    ckv_new = jnp.einsum("bsd,de->bse", xq, p["kv_down"])[:, 0]
+    # rope the decoupled key before caching (cache stores roped keys)
+    c_new, kr_new = ckv_new[..., : cfg.kv_lora], ckv_new[..., cfg.kv_lora:]
+    kr_new = apply_rope(kr_new[:, None, None], pos, "full",
+                        cfg.rope_theta)[:, 0, 0]
+    ckv_new = jnp.concatenate([c_new, kr_new], axis=-1)
+    cache = jax.lax.dynamic_update_slice(
+        cache, ckv_new[:, None], (0, length, 0))
+
+    c = cache[..., : cfg.kv_lora]                       # [b,S,lora]
+    k_rope = cache[..., cfg.kv_lora:]                   # [b,S,dr]
+    k_nope = jnp.einsum("bsc,ce->bse", c, p["k_up"]).reshape(
+        b, -1, H, dn).transpose(0, 2, 1, 3)
+    v = jnp.einsum("bsc,ce->bse", c, p["v_up"]).reshape(
+        b, -1, H, dv).transpose(0, 2, 1, 3)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None],
+                                  (b, H, cache.shape[1], dr))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = decode_attention(q_full, k_full, v, length + 1)
+    o = o.reshape(b, -1)
+    return jnp.einsum("be,ed->bd", o, p["wo"]), cache
+
+
+def mla_attention_decode_absorbed(x, p, cfg: ModelConfig, cache, length):
+    """MLA decode with up-projection absorption (§Perf lever).
+
+    Never materializes k_nope/v [b,S,H,·]: scores act directly on the
+    compressed cache via q_abs = q_nopeᵀW_uk and out = (p·c)ᵀW_uv.
+    Per-token FLOPs drop from O(S·lora·H·(dn+dv)) to O(S·H·(2·lora+dr))
+    — ~100× on deepseek-v2 dims."""
+    b, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lora = cfg.kv_lora
+    pos = jnp.full((b, 1), length, dtype=jnp.int32)
+    xq = x[:, None]
+    q = jnp.einsum("bsd,de->bse", xq, p["wq"]).reshape(
+        b, 1, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos, "full", cfg.rope_theta)[:, :, 0]
+
+    ckv_new = jnp.einsum("bsd,de->bse", xq, p["kv_down"])[:, 0]
+    c_new, kr_new = ckv_new[..., :lora], ckv_new[..., lora:]
+    kr_new = apply_rope(kr_new[:, None, None], pos, "full",
+                        cfg.rope_theta)[:, 0, 0]
+    ckv_new = jnp.concatenate([c_new, kr_new], axis=-1)
+    cache = jax.lax.dynamic_update_slice(
+        cache, ckv_new[:, None], (0, length, 0))
+
+    c = cache[..., :lora].astype(jnp.float32)          # [b,S,lora]
+    k_rope = cache[..., lora:].astype(jnp.float32)     # [b,S,dr]
+    k_up3 = p["k_up"].reshape(lora, H, dn).astype(jnp.float32)
+    v_up3 = p["v_up"].reshape(lora, H, dv).astype(jnp.float32)
+
+    q_abs = jnp.einsum("bhsd,lhd->bhl",
+                       q_nope.astype(jnp.float32), k_up3)
+    scale = (dn + dr) ** -0.5
+    s = (jnp.einsum("bhl,bsl->bhs", q_abs, c)
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      k_rope)) * scale
+    S_len = cache.shape[1]
+    valid = jnp.arange(S_len)[None, :] < (length + 1)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    pv = jax.nn.softmax(s, axis=-1)
+    out_c = jnp.einsum("bhs,bsl->bhl", pv, c)
+    o = jnp.einsum("bhl,lhd->bhd", out_c, v_up3)
+    o = o.reshape(b, H * dv).astype(x.dtype)
+    return jnp.einsum("be,ed->bd", o, p["wo"]), cache
+
+
+# ------------------------------------------------------------------ FFN
+def ffn(x: jax.Array, p: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.is_moe:
+        return moe_layer(x, p, cfg)
+    return mlp(x, p, cfg.mlp_type)
+
+
+# -------------------------------------------------------- decoder block
+def decoder_block(x, p, cfg: ModelConfig, positions, causal=True):
+    """Pre-norm transformer block (the scanned layer body)."""
+    act_spec = (DP_AXES, "model" if cfg.seq_shard else None, None)
+    x = constrain(x, act_spec)
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.is_mla:
+        h = mla_attention(h, p["attn"], cfg, positions)
+    else:
+        h = attention(h, p["attn"], cfg, positions, causal=causal)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + ffn(h, p["ffn"], cfg)
+    return constrain(x, act_spec)
+
+
+def decoder_block_decode(x, p, cfg: ModelConfig, cache, length):
+    x = constrain(x, (DP_AXES, None))
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if cfg.is_mla and cfg.mla_absorb:
+        h, cache = mla_attention_decode_absorbed(
+            h, p["attn"], cfg, cache, length)
+    elif cfg.is_mla:
+        h, cache = mla_attention_decode(h, p["attn"], cfg, cache, length)
+    else:
+        h, cache = attention_decode(h, p["attn"], cfg, cache, length)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    x = x + ffn(h[:, None], p["ffn"], cfg)[:, 0]
+    return x, cache

@@ -1,0 +1,3 @@
+from .engine import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

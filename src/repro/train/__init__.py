@@ -1,0 +1,18 @@
+from .optimizer import AdamWConfig, OptState, adamw_init, adamw_update
+from .train_step import TrainConfig, make_train_step
+from .checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from .elastic import StragglerDetector, remesh
+
+__all__ = [
+    "AdamWConfig",
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "TrainConfig",
+    "make_train_step",
+    "latest_step",
+    "restore_checkpoint",
+    "save_checkpoint",
+    "StragglerDetector",
+    "remesh",
+]

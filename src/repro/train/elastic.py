@@ -1,0 +1,68 @@
+"""Elastic scaling + straggler detection.
+
+* ``remesh``: after losing (or gaining) a pod, rebuild NamedShardings for
+  the surviving mesh from the *logical* axis rules and re-place the
+  state.  Checkpoints are layout-free (checkpoint.py), so pod-count
+  changes never invalidate them.
+* ``StragglerDetector``: per-step wall-time EWMA + z-score; on real
+  clusters this feeds the scheduler (here it logs and can trigger an
+  early checkpoint).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+
+from repro.sharding import param_shardings
+
+__all__ = ["remesh", "StragglerDetector"]
+
+
+def remesh(params, opt_state, axes_tree, new_mesh):
+    """Re-place a (params, opt) pytree onto a new mesh.
+
+    Works across device-count changes as long as every array fits the
+    new mesh's divisibility rules (the resolver falls back to
+    replication otherwise).
+    """
+    p_sh = param_shardings(axes_tree, params, new_mesh)
+    params = jax.tree.map(jax.device_put, params, p_sh)
+
+    def opt_put(x, sh):
+        return jax.device_put(x, sh)
+
+    # moments share the param layout; step is replicated
+    new_mu = jax.tree.map(opt_put, opt_state.mu, p_sh)
+    new_nu = jax.tree.map(opt_put, opt_state.nu, p_sh)
+    step = jax.device_put(opt_state.step)
+    return params, type(opt_state)(mu=new_mu, nu=new_nu, step=step)
+
+
+class StragglerDetector:
+    """EWMA step-time monitor; flags steps > mean + k·std (paper §3.1.4's
+    workload-aware scheduling is the peeling analogue)."""
+
+    def __init__(self, alpha: float = 0.1, threshold_sigma: float = 3.0):
+        self.alpha = alpha
+        self.k = threshold_sigma
+        self.mean: Optional[float] = None
+        self.var = 0.0
+        self._t0: Optional[float] = None
+        self.flagged = 0
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        dt = time.perf_counter() - self._t0
+        if self.mean is None:
+            self.mean = dt
+            return False
+        is_straggler = dt > self.mean + self.k * (self.var ** 0.5 + 1e-9)
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        self.flagged += int(is_straggler)
+        return is_straggler

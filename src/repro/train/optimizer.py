@@ -1,0 +1,96 @@
+"""AdamW in pure JAX — optimizer state shards exactly like its parameter
+(ZeRO-3: moments inherit the param's NamedSharding via tree_map)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    moment_dtype: Any = jnp.float32
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def abstract_opt_state(params_abstract, cfg: AdamWConfig = AdamWConfig()):
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, cfg.moment_dtype)
+    return OptState(
+        mu=jax.tree.map(z, params_abstract),
+        nu=jax.tree.map(z, params_abstract),
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cosine = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cosine)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)))
+        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: OptState,
+                 cfg: AdamWConfig = AdamWConfig()):
+    step = state.step + 1
+    lr = _schedule(cfg, step.astype(jnp.float32))
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mhat = m / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), \
+            m.astype(cfg.moment_dtype), v.astype(cfg.moment_dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, OptState(mu=new_m, nu=new_v, step=step), dict(
+        grad_norm=gn, lr=lr)

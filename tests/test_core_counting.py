@@ -1,0 +1,104 @@
+"""Counting + BE-Index correctness vs pure-python oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counting, ref
+from repro.core.beindex import build_beindex
+from repro.core.graph import BipartiteGraph, powerlaw_bipartite, random_bipartite
+
+
+def graphs(max_u=24, max_v=20, max_m=80):
+    return st.builds(
+        lambda nu, nv, m, seed: random_bipartite(nu, nv, m, seed=seed),
+        st.integers(2, max_u), st.integers(2, max_v),
+        st.integers(0, max_m), st.integers(0, 10_000),
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(graphs())
+def test_vertex_counts_match_oracle(g):
+    A = jnp.asarray(g.adjacency())
+    bu, bv = ref.vertex_butterflies_ref(g)
+    got_u = np.rint(np.asarray(counting.vertex_butterflies(A))).astype(np.int64)
+    got_v = np.rint(
+        np.asarray(counting.vertex_butterflies(A.T))
+    ).astype(np.int64)
+    assert np.array_equal(got_u, bu)
+    assert np.array_equal(got_v, bv)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs())
+def test_edge_counts_match_oracle(g):
+    if g.m == 0:
+        return
+    A = jnp.asarray(g.adjacency())
+    e = jnp.asarray(g.edges.astype(np.int32))
+    got = np.rint(np.asarray(counting.edge_butterflies(A, e))).astype(np.int64)
+    assert np.array_equal(got, ref.edge_butterflies_ref(g))
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.sampled_from([4, 8, 16]))
+def test_blocked_counting_matches_full(g, block):
+    A = jnp.asarray(g.adjacency())
+    full = np.asarray(counting.vertex_butterflies(A))
+    blk = np.asarray(counting.vertex_butterflies_blocked(A, block=block))
+    np.testing.assert_allclose(full, blk, rtol=0, atol=0.5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(graphs())
+def test_beindex_partitions_all_butterflies(g):
+    """Property 2: every butterfly is in exactly one maximal priority bloom."""
+    be = build_beindex(g)
+    assert be.total_butterflies() == ref.butterfly_count_total(g)
+
+
+@settings(max_examples=30, deadline=None)
+@given(graphs())
+def test_beindex_edge_support(g):
+    """Property 1 corollary: ⋈_e = Σ_{B∋e} (k_B − 1)."""
+    be = build_beindex(g)
+    assert np.array_equal(be.edge_support(g.m), ref.edge_butterflies_ref(g))
+
+
+def test_total_butterflies_powerlaw():
+    g = powerlaw_bipartite(150, 70, 600, seed=11)
+    A = jnp.asarray(g.adjacency())
+    got = float(counting.total_butterflies(A))
+    assert int(round(got)) == ref.butterfly_count_total(g)
+
+
+def test_wedge_workload_proxy():
+    g = random_bipartite(30, 25, 120, seed=5)
+    A = jnp.asarray(g.adjacency())
+    wu, _ = ref.wedge_count_ref(g)
+    got = np.rint(np.asarray(counting.vertex_wedge_workload(A))).astype(np.int64)
+    assert np.array_equal(got, wu)
+
+
+def test_masked_adjacency_respects_alive():
+    g = random_bipartite(10, 10, 30, seed=1)
+    alive = jnp.asarray(np.arange(g.m) % 2 == 0)
+    A = counting.masked_adjacency(
+        (g.n_u, g.n_v), jnp.asarray(g.edges.astype(np.int32)), alive
+    )
+    assert float(A.sum()) == float(alive.sum())
+
+
+def test_known_small_graph():
+    # fig.1a of the paper: a 1-wing where every edge is in >= 1 butterfly
+    # 2x2 biclique has exactly one butterfly
+    g = BipartiteGraph.from_edges(2, 2, [[0, 0], [0, 1], [1, 0], [1, 1]])
+    assert ref.butterfly_count_total(g) == 1
+    assert np.array_equal(ref.edge_butterflies_ref(g), np.ones(4, np.int64))
+    # (2,3)-biclique: C(3,2)=3 butterflies, each edge in 2
+    g = BipartiteGraph.from_edges(
+        2, 3, [[u, v] for u in range(2) for v in range(3)]
+    )
+    assert ref.butterfly_count_total(g) == 3
+    assert np.array_equal(ref.edge_butterflies_ref(g), np.full(6, 2))

@@ -1,0 +1,172 @@
+"""Multi-device PBNG (shard_map) — run in a subprocess with forced host
+device count so the main test process keeps a single device."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(src: str, n_dev: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_dev}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(src)],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+def test_distributed_wing_matches_oracle():
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite
+        from repro.core import ref
+        from repro.core.distributed import distributed_wing_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        for seed in (0, 1, 2):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            want = ref.bup_wing_ref(g)
+            theta, stats = distributed_wing_decomposition(
+                g, mesh, axis="peel", P_parts=4)
+            assert np.array_equal(theta, want), seed
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_distributed_matches_single_device_engine():
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.distributed import distributed_wing_decomposition
+        from repro.core.peel import wing_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(100, 50, 420, seed=5)
+        theta, stats = distributed_wing_decomposition(
+            g, mesh, axis="peel", P_parts=6)
+        ref_theta = wing_decomposition(g, P=6, engine="beindex").theta
+        assert np.array_equal(theta, ref_theta)
+        assert stats["rho_cd"] > 0 and stats["rho_fd_max"] > 0
+        print("OK", stats)
+    """)
+    assert "OK" in out
+
+
+def test_fd_hlo_has_no_collectives():
+    """The paper's 'no global synchronization' claim, checked structurally:
+    the FD phase HLO must contain no collective ops."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.graph import random_bipartite
+        from repro.core.beindex import build_beindex
+        from repro.core.peel import wing_decomposition
+        from repro.core import distributed as D
+        g = random_bipartite(20, 16, 64, seed=3)
+        be = build_beindex(g)
+        res = wing_decomposition(g, P=4, engine="beindex", be=be)
+        packed = D.pack_fd_partitions(
+            g, be, res.part, res.support_init, res.stats.p_effective)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        n_parts = packed["le"].shape[0]
+        pad = (-n_parts) % 8
+        def padp(x):
+            if pad == 0: return jnp.asarray(x)
+            fill = np.zeros((pad,)+x.shape[1:], dtype=x.dtype)
+            return jnp.asarray(np.concatenate([x, fill], 0))
+        args = tuple(padp(packed[k]) for k in
+                     ("le","lt","lb","alive0","canon","k0","sup0","mine"))
+        vb = jax.vmap(D._fd_body_one_partition)
+        fn = jax.shard_map(vb, mesh=mesh,
+                           in_specs=tuple(P("peel") for _ in args),
+                           out_specs=(P("peel"), P("peel")))
+        txt = jax.jit(fn).lower(*args).compile().as_text()
+        bad = [w for w in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute")
+               if w in txt]
+        assert not bad, bad
+        print("OK no collectives in FD")
+    """)
+    assert "OK" in out
+
+
+def test_cd_round_single_psum_pair():
+    """CD rounds synchronize via psum only (one c + one loss reduction)."""
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite
+        from repro.core.beindex import build_beindex
+        from repro.core import distributed as D
+        import jax.numpy as jnp
+        g = random_bipartite(20, 16, 64, seed=3)
+        be = build_beindex(g)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        st = D.shard_links(be, g.m, 8)
+        fn = D.make_cd_round(mesh, "peel", st.nb, g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.concatenate([st.support, jnp.zeros((1,), jnp.int32)])
+        txt = fn.lower(peeled, st.alive_link, st.k_alive, sup,
+                       st.le, st.lt, st.lb).compile().as_text()
+        n_ar = txt.count("all-reduce-start") or txt.count("all-reduce(")
+        assert n_ar <= 3, f"too many collectives per CD round: {n_ar}"
+        print("OK", n_ar)
+    """)
+    assert "OK" in out
+
+
+def test_distributed_tip_matches_oracle():
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite
+        from repro.core import ref
+        from repro.core.distributed import distributed_tip_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        for seed in (0, 1):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            for side in ("u", "v"):
+                want = ref.bup_tip_ref(g, side)
+                theta, stats = distributed_tip_decomposition(
+                    g, mesh, side=side, P_parts=4)
+                assert np.array_equal(theta, want), (seed, side)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_bloom_aligned_single_psum():
+    """Bloom-aligned CD round must contain exactly one all-reduce."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.beindex import build_beindex
+        from repro.core import distributed as D
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(80, 40, 350, seed=2)
+        be = build_beindex(g)
+        packed = D.shard_links_bloom_aligned(be, g.m, 8)
+        fn = D.make_cd_round_bloom(mesh, "peel", packed["Bmax"], g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.zeros((g.m + 1,), jnp.int32)
+        txt = fn.lower(peeled, jnp.asarray(packed["alive"]),
+                       jnp.asarray(packed["k0"]), sup,
+                       jnp.asarray(packed["le"]), jnp.asarray(packed["lt"]),
+                       jnp.asarray(packed["lb"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 1, n
+        print("OK", n)
+    """)
+    assert "OK" in out

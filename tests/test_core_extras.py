@@ -1,0 +1,71 @@
+"""BE_PC baseline, KONECT loader, approximate counting, curriculum data."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import counting, ref
+from repro.core.graph import from_tsv, powerlaw_bipartite, random_bipartite
+from repro.core.peel import wing_decomposition_bepc
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 5000), st.sampled_from([0.2, 0.4]))
+def test_bepc_matches_oracle(seed, tau):
+    g = random_bipartite(16, 12, 48, seed=seed)
+    want = ref.bup_wing_ref(g)
+    got, _ = wing_decomposition_bepc(g, tau=tau)
+    assert np.array_equal(got, want)
+
+
+def test_bepc_medium_matches_pbng():
+    from repro.core.peel import wing_decomposition
+    g = powerlaw_bipartite(120, 60, 520, seed=3)
+    a, _ = wing_decomposition_bepc(g)
+    b = wing_decomposition(g, P=8, engine="beindex").theta
+    assert np.array_equal(a, b)
+
+
+def test_from_tsv_roundtrip():
+    with tempfile.NamedTemporaryFile(
+            "w", suffix=".tsv", delete=False) as f:
+        f.write("% KONECT header\n")
+        f.write("1\t10\n1\t20\n2\t10\n2\t20\n7\t99\n")
+        path = f.name
+    try:
+        g = from_tsv(path)
+        assert g.m == 5
+        assert ref.butterfly_count_total(g) == 1
+    finally:
+        os.unlink(path)
+
+
+def test_approx_counting_mean_unbiased():
+    g = powerlaw_bipartite(150, 300, 2200, seed=4)
+    A = jnp.asarray(g.adjacency())
+    exact = float(np.asarray(counting.vertex_butterflies(A)).sum())
+    ests = [
+        float(np.asarray(counting.approx_vertex_butterflies(
+            A, 150, jax.random.PRNGKey(s))).sum())
+        for s in range(5)
+    ]
+    assert abs(np.mean(ests) / exact - 1) < 0.35, (np.mean(ests), exact)
+    # full sample = exact
+    full = np.asarray(counting.approx_vertex_butterflies(
+        A, 300, jax.random.PRNGKey(0), n_rounds=1))
+    np.testing.assert_allclose(
+        full, np.asarray(counting.vertex_butterflies(A)), rtol=1e-4)
+
+
+def test_curriculum_orders_dense_first():
+    from repro.data import curriculum_sequences
+    from repro.core.peel import wing_decomposition
+    g = powerlaw_bipartite(60, 30, 300, seed=8)
+    seqs = curriculum_sequences(g, n_levels=3, P=4, max_len=8)
+    assert seqs, "no sequences generated"
+    # every interaction appears in some sequence exactly once
+    total_items = sum(s.size - 1 for s in seqs)
+    assert total_items == g.m

@@ -1,0 +1,121 @@
+"""PBNG two-phased peeling ≡ sequential bottom-up peeling (theorems 1-2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref
+from repro.core.graph import BipartiteGraph, powerlaw_bipartite, random_bipartite
+from repro.core.peel import bup_levels, tip_decomposition, wing_decomposition
+
+
+def graphs(max_u=16, max_v=14, max_m=50):
+    return st.builds(
+        lambda nu, nv, m, seed: random_bipartite(nu, nv, m, seed=seed),
+        st.integers(2, max_u), st.integers(2, max_v),
+        st.integers(0, max_m), st.integers(0, 10_000),
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs(), st.integers(1, 6), st.sampled_from(["u", "v"]))
+def test_tip_matches_bup(g, P, side):
+    want = ref.bup_tip_ref(g, side)
+    got = tip_decomposition(g, side=side, P=P).theta
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.integers(1, 5))
+def test_wing_beindex_matches_bup(g, P):
+    want = ref.bup_wing_ref(g)
+    got = wing_decomposition(g, P=P, engine="beindex").theta
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=12, deadline=None)
+@given(graphs(), st.integers(1, 4))
+def test_wing_dense_matches_bup(g, P):
+    want = ref.bup_wing_ref(g)
+    got = wing_decomposition(g, P=P, engine="dense").theta
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(), st.integers(2, 5))
+def test_partitions_respect_ranges(g, P):
+    """Theorem 1: every entity's θ lies inside its partition's range."""
+    res = wing_decomposition(g, P=P, engine="beindex")
+    for e in range(g.m):
+        i = res.part[e]
+        lo = res.ranges[i]
+        hi = res.ranges[i + 1]
+        assert lo <= res.theta[e] < hi, (e, i, lo, res.theta[e], hi)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs())
+def test_tip_no_batch_ablation(g):
+    """§5.1 ablation path (incremental updates) must stay exact."""
+    want = ref.bup_tip_ref(g, "u")
+    got = tip_decomposition(g, side="u", P=3, batch_recount=False).theta
+    assert np.array_equal(got, want)
+
+
+def test_engines_agree_medium():
+    g = powerlaw_bipartite(120, 60, 520, seed=3)
+    a = wing_decomposition(g, P=6, engine="beindex")
+    b = wing_decomposition(g, P=6, engine="dense")
+    assert np.array_equal(a.theta, b.theta)
+
+
+def test_sync_reduction_claim():
+    """The paper's headline: PBNG needs far fewer synchronizations than
+    level-by-level peeling (table 3/4, ρ column)."""
+    g = powerlaw_bipartite(150, 80, 700, seed=9)
+    res = wing_decomposition(g, P=8, engine="beindex")
+    levels = bup_levels(res.theta)
+    # CD rounds must be well below the number of distinct support levels
+    assert res.stats.rho_cd < levels
+    # ... and the FD total (ParB's per-level rounds) dwarfs CD rounds
+    assert res.stats.rho_fd_total > res.stats.rho_cd
+
+
+def test_support_init_is_recount():
+    """⋈init recorded by CD == butterflies among entities in partitions ≥ i
+    (sec 3.1.1) — cross-check against a fresh recount."""
+    g = random_bipartite(25, 20, 90, seed=4)
+    res = wing_decomposition(g, P=4, engine="beindex")
+    for i in range(res.stats.p_effective):
+        keep = res.part >= i
+        sub = BipartiteGraph.from_edges(g.n_u, g.n_v, g.edges[keep])
+        sub_cnt = ref.edge_butterflies_ref(sub)
+        # map back
+        idx = np.where(keep)[0]
+        for j, e in enumerate(idx):
+            if res.part[e] == i:
+                assert res.support_init[e] == sub_cnt[j], (i, e)
+
+
+def test_tip_both_sides_powerlaw():
+    g = powerlaw_bipartite(90, 50, 380, seed=6)
+    for side in ("u", "v"):
+        want = ref.bup_tip_ref(g, side)
+        got = tip_decomposition(g, side=side, P=5).theta
+        assert np.array_equal(got, want)
+
+
+def test_empty_and_degenerate():
+    g = BipartiteGraph.from_edges(3, 3, np.zeros((0, 2), np.int32))
+    assert wing_decomposition(g, P=2).theta.size == 0
+    assert np.array_equal(tip_decomposition(g, P=2).theta, np.zeros(3))
+    # a single edge has no butterflies: all thetas zero
+    g = BipartiteGraph.from_edges(2, 2, [[0, 0]])
+    assert np.array_equal(wing_decomposition(g, P=2).theta, [0])
+
+
+def test_p_one_equals_pure_bup():
+    """P=1 degenerates to (batched) bottom-up peeling — same output."""
+    g = random_bipartite(20, 16, 60, seed=12)
+    assert np.array_equal(
+        wing_decomposition(g, P=1).theta, ref.bup_wing_ref(g)
+    )

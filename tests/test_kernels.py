@@ -1,0 +1,149 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps, interpret mode."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.graph import random_bipartite
+from repro.core.beindex import build_beindex
+from repro.core import ref as gref
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n_u,n_v,m", [(40, 30, 200), (130, 70, 700), (257, 129, 1500)])
+@pytest.mark.parametrize("bm,bn", [(128, 128), (256, 128)])
+def test_vertex_count_kernel_sweep(n_u, n_v, m, bm, bn):
+    g = random_bipartite(n_u, n_v, m, seed=n_u + m)
+    A = jnp.asarray(g.adjacency())
+    got = ops.vertex_butterflies(A, bm=bm, bn=bn, interpret=True)
+    want = ref.vertex_butterflies_ref(A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0.5)
+    # ... and against the pure-python oracle
+    bu, _ = gref.vertex_butterflies_ref(g)
+    np.testing.assert_array_equal(np.rint(np.asarray(got)).astype(np.int64), bu)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_vertex_count_kernel_dtypes(dtype):
+    g = random_bipartite(64, 48, 300, seed=9)
+    A = jnp.asarray(g.adjacency()).astype(dtype)
+    got = ops.vertex_butterflies(A, interpret=True)
+    want = ref.vertex_butterflies_ref(A.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0, atol=0.5)
+
+
+@pytest.mark.parametrize("n_u,n_v,m", [(50, 40, 260), (200, 100, 1100)])
+def test_edge_wedge_matrix_kernel(n_u, n_v, m):
+    g = random_bipartite(n_u, n_v, m, seed=m)
+    A = jnp.asarray(g.adjacency())
+    got = ops.edge_wedge_matrix(A, interpret=True)
+    want = ref.edge_wedge_matrix_ref(A)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-2)
+    # gathered per-edge counts must equal the oracle
+    du = np.asarray(A.sum(axis=1))
+    e = g.edges
+    cnt = np.asarray(got)[e[:, 0], e[:, 1]] - (du[e[:, 0]] - 1)
+    np.testing.assert_array_equal(
+        np.rint(cnt).astype(np.int64), gref.edge_butterflies_ref(g)
+    )
+
+
+def test_bloom_update_kernel_matches_ref():
+    g = random_bipartite(40, 30, 180, seed=4)
+    be = build_beindex(g)
+    packed = ops.pack_blooms(be.link_edge, be.link_twin, be.link_bloom, be.nb)
+    nbp, K = packed["le"].shape
+    rng = np.random.default_rng(0)
+    peeled = np.zeros(g.m + 1, bool)
+    peeled[rng.choice(g.m, size=g.m // 5, replace=False)] = True
+
+    le = jnp.asarray(packed["le"])
+    lt = jnp.asarray(packed["lt"])
+    sent = g.m
+    pe = jnp.asarray(peeled)[jnp.where(le < 0, sent, le)]
+    pt = jnp.asarray(peeled)[jnp.where(lt < 0, sent, lt)]
+    alive = jnp.asarray(packed["valid"])
+    canon = jnp.asarray(packed["canon"])
+    k_alive = jnp.zeros(nbp, jnp.float32).at[: be.nb].set(
+        jnp.asarray(be.bloom_k.astype(np.float32))
+    )
+    want_contrib, want_c = ref.bloom_update_ref(pe, pt, alive, canon, k_alive)
+    loss, c, new_alive = ops.bloom_update(
+        jnp.asarray(peeled), alive, k_alive, le, lt, canon, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(c), np.asarray(want_c))
+    want_loss = jax.ops.segment_sum(
+        want_contrib.reshape(-1),
+        jnp.where(le < 0, sent, le).reshape(-1),
+        num_segments=sent + 1,
+    )[:-1]
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(want_loss))
+
+
+def test_bloom_update_kernel_equals_peeling_round():
+    """One kernel round == one round of the segment-sum engine update."""
+    from repro.core.peel import _wing_update
+
+    g = random_bipartite(30, 24, 140, seed=8)
+    be = build_beindex(g)
+    m = g.m
+    rng = np.random.default_rng(3)
+    peeled = np.zeros(m, bool)
+    peeled[rng.choice(m, size=m // 6, replace=False)] = True
+
+    # engine update
+    le_, lt_, lb_ = (jnp.asarray(be.link_edge), jnp.asarray(be.link_twin),
+                     jnp.asarray(be.link_bloom))
+    sup0 = jnp.asarray(be.edge_support(m).astype(np.int32))
+    alive_link = jnp.ones((be.n_links,), bool)
+    k_alive = jnp.asarray(be.bloom_k.astype(np.int32))
+    _, _, sup_engine, _ = _wing_update(
+        jnp.asarray(peeled), alive_link, k_alive, sup0,
+        le_, lt_, lb_, max(be.nb, 1), m,
+    )
+
+    # kernel round
+    packed = ops.pack_blooms(be.link_edge, be.link_twin, be.link_bloom, be.nb)
+    nbp = packed["le"].shape[0]
+    kk = jnp.zeros(nbp, jnp.float32).at[: be.nb].set(
+        jnp.asarray(be.bloom_k.astype(np.float32)))
+    loss, c, _ = ops.bloom_update(
+        jnp.asarray(np.concatenate([peeled, [False]])),
+        jnp.asarray(packed["valid"]), kk,
+        jnp.asarray(packed["le"]), jnp.asarray(packed["lt"]),
+        jnp.asarray(packed["canon"]), interpret=True,
+    )
+    sup_kernel = np.asarray(sup0) - np.asarray(loss).astype(np.int64)
+    np.testing.assert_array_equal(
+        np.asarray(sup_engine), sup_kernel.astype(np.int32)
+    )
+
+
+@pytest.mark.parametrize("sq,sk,d,causal", [
+    (128, 128, 64, True),
+    (256, 256, 64, True),
+    (128, 384, 64, True),   # prefill-style: cache longer than queries
+    (128, 128, 128, False),
+    (256, 128, 64, True),   # sq > sk degenerate (still must not crash)
+])
+def test_flash_attention_sweep(sq, sk, d, causal):
+    if sq > sk and causal:
+        pytest.skip("queries beyond cache not defined")
+    key = jax.random.PRNGKey(sq + sk + d)
+    q = jax.random.normal(key, (2, 2, sq, d), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, sk, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, sk, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 64)).astype(jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(got, dtype=np.float32), np.asarray(want), atol=3e-2)

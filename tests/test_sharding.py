@@ -1,0 +1,105 @@
+"""Sharding rules: logical-axis resolution, divisibility fallback, batch
+and cache specs."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+import repro.models as M
+from repro.configs import get_config
+from repro.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    resolve_spec,
+)
+
+
+def _mesh22():
+    dev = np.array(jax.devices() * 4)[:4].reshape(2, 2)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_resolve_basic():
+    mesh = _mesh22()
+    spec = resolve_spec(("embed", "heads"), (64, 64), mesh)
+    assert spec == P("data", "model")
+
+
+def test_resolve_divisibility_fallback():
+    mesh = _mesh22()
+    # 1 kv head cannot shard over model=2 -> replicated (gemma MQA case)
+    spec = resolve_spec(("embed", "kv"), (64, 1), mesh)
+    assert spec == P("data")
+    # odd dim cannot shard
+    spec = resolve_spec(("embed", "mlp"), (63, 64), mesh)
+    assert spec == P(None, "model")
+
+
+def test_resolve_no_axis_reuse():
+    mesh = _mesh22()
+    spec = resolve_spec(("heads", "mlp"), (64, 64), mesh)
+    # both want "model"; only the first gets it
+    assert spec == P("model")
+
+
+def test_layers_never_sharded():
+    mesh = _mesh22()
+    spec = resolve_spec(("layers", "embed", "heads"), (22, 64, 64), mesh)
+    assert spec == P(None, "data", "model")
+
+
+def test_param_shardings_cover_all_archs():
+    mesh = _mesh22()
+    for arch in ("tinyllama_1_1b", "deepseek_v2_236b", "xlstm_1_3b",
+                 "zamba2_7b", "whisper_large_v3"):
+        cfg = get_config(arch)
+        axes = M.logical_axes(cfg)
+        pabs = M.abstract_params(cfg)
+        sh = param_shardings(axes, pabs, mesh)
+        n = len(jax.tree.leaves(sh))
+        assert n == len(jax.tree.leaves(pabs))
+
+
+def test_batch_shardings():
+    mesh = _mesh22()
+    cfg = get_config("tinyllama_1_1b")
+    specs = M.input_specs(cfg, "train_4k")
+    sh = batch_shardings(specs, mesh)
+    assert sh["tokens"].spec[0] in ("data", ("data",))
+
+
+def test_cache_shardings_decode():
+    mesh = _mesh22()
+    cfg = get_config("tinyllama_1_1b")
+    cache = M.cache_specs(cfg, batch=128, seq=1024)
+    sh = cache_shardings(cache, mesh, cfg)
+    # [L, B, KV, S, hd]: batch over data, seq over model
+    assert sh["k"].spec[1] in ("data", ("data",))
+    assert sh["k"].spec[3] == "model"
+
+
+def test_cache_shardings_long_context_batch1():
+    mesh = _mesh22()
+    cfg = get_config("zamba2_7b")
+    cache = M.cache_specs(cfg, batch=1, seq=2048)
+    sh = cache_shardings(cache, mesh, cfg)
+    # batch=1 cannot shard; attn cache seq still shards over model
+    spec = sh["attn_k"].spec
+    assert len(spec) < 2 or spec[1] is None
+    assert spec[3] == "model" if len(spec) > 3 else True
+
+
+def test_hlo_collective_parser():
+    from repro.launch.hlo_analysis import collective_bytes
+    txt = """
+  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag = bf16[8,256]{1,0} all-gather(%y), dimensions={1}
+  %not-a-coll = f32[4]{0} add(%a, %b)
+  %rs.2 = (f32[64]{0}, f32[64]{0}) reduce-scatter(%c, %d), dimensions={0}
+"""
+    out = collective_bytes(txt)
+    assert out["all-reduce"] == 16 * 128 * 4
+    assert out["all-gather"] == 8 * 256 * 2
+    assert out["reduce-scatter"] == 2 * 64 * 4
+    assert "add" not in out
