@@ -1,6 +1,8 @@
 """Shared benchmark utilities."""
 from __future__ import annotations
 
+import json
+import platform
 import time
 from typing import Callable, Dict, List
 
@@ -21,6 +23,25 @@ def emit(name: str, seconds: float, **derived):
     ROWS.append(dict(name=name, us_per_call=seconds * 1e6, **derived))
     extra = " ".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{seconds * 1e6:.1f},{extra}", flush=True)
+
+
+def write_bench(path: str) -> None:
+    """Dump every row emitted so far as a BENCH_*.json artifact.
+
+    CI's benchmark-smoke job uploads these so the perf trajectory
+    accumulates across commits."""
+    import jax
+
+    payload = dict(
+        schema=1,
+        backend=jax.default_backend(),
+        python=platform.python_version(),
+        jax=jax.__version__,
+        rows=ROWS,
+    )
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[bench] wrote {len(ROWS)} rows -> {path}", flush=True)
 
 
 def datasets(small_only: bool = False):

@@ -1,11 +1,21 @@
-"""Butterfly counting throughput (alg.1 analogue): numpy oracle vs jnp
-dense matmul vs the Pallas kernel (interpret mode on this container)."""
+"""Butterfly counting throughput (alg.1 analogue) across density regimes.
+
+Engines compared per graph:
+  * oracle        — pure-python/numpy reference
+  * dense (jnp)   — MXU matmul formulation (O(n²) memory)
+  * dense (pallas)— fused vertex-count kernel (interpret mode here)
+  * csr (segsum)  — flat wedge list + ``segment_sum`` (O(Σ deg²) memory)
+  * csr (pallas)  — per-pair reduction in the blocked wedge-count kernel
+
+Sparse/medium/dense rows make the crossover visible: dense matmuls win on
+small dense graphs, the wedge list wins as soon as n² outruns Σ deg².
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import counting, ref
+from repro.core import counting, csr, ref
 from repro.core.graph import powerlaw_bipartite
 from repro.kernels import ops
 
@@ -13,10 +23,16 @@ from .common import emit, timed
 
 
 def run(small: bool = True):
-    sizes = [(200, 100, 1000)] if small else [
-        (200, 100, 1000), (600, 300, 4000), (1200, 600, 9000)]
-    for n_u, n_v, m in sizes:
+    # (n_u, n_v, avg_deg) — sparse / medium / dense per size
+    regimes = [(200, 100, 5), (200, 100, 20)] if small else [
+        (200, 100, 5), (200, 100, 20), (200, 100, 60),
+        (600, 300, 7), (600, 300, 25),
+        (1200, 600, 8), (1200, 600, 30),
+    ]
+    for n_u, n_v, avg in regimes:
+        m = min(n_u * avg, n_u * n_v)
         g = powerlaw_bipartite(n_u, n_v, m, seed=7)
+        tag = f"count.{n_u}x{n_v}.d{avg}"
         A = jnp.asarray(g.adjacency())
 
         (bu, _), t_ref = timed(ref.vertex_butterflies_ref, g)
@@ -27,12 +43,37 @@ def run(small: bool = True):
             repeat=1)
         assert np.array_equal(np.rint(out).astype(np.int64), bu)
         assert np.array_equal(np.rint(out_k).astype(np.int64), bu)
-        emit(f"count.{n_u}x{n_v}.oracle", t_ref)
-        emit(f"count.{n_u}x{n_v}.jnp_mxu", t_jnp,
+
+        wed, t_build = timed(csr.build_wedges, g)
+        out_c, t_csr = timed(lambda: csr.vertex_butterflies_csr(wed), repeat=3)
+        assert np.array_equal(out_c, bu)
+
+        be_ref = ref.edge_butterflies_ref(g)
+        out_e, t_ecsr = timed(
+            lambda: np.asarray(csr.edge_butterflies_csr(wed)), repeat=3)
+        assert np.array_equal(out_e.astype(np.int64), be_ref)
+        out_ep, t_epal = timed(
+            lambda: np.asarray(
+                csr.edge_butterflies_csr(wed, use_pallas=True, interpret=True)
+            ),
+            repeat=1)
+        assert np.array_equal(out_ep.astype(np.int64), be_ref)
+
+        emit(f"{tag}.oracle", t_ref, wedges=wed.n_wedges, pairs=wed.n_pairs)
+        emit(f"{tag}.dense_mxu", t_jnp,
              speedup=round(t_ref / max(t_jnp, 1e-9), 1))
-        emit(f"count.{n_u}x{n_v}.pallas_interp", t_kern,
+        emit(f"{tag}.dense_pallas", t_kern,
+             note="interpret-mode;compiled-on-TPU-target")
+        emit(f"{tag}.csr_build", t_build)
+        emit(f"{tag}.csr_vertex", t_csr,
+             speedup=round(t_ref / max(t_csr, 1e-9), 1))
+        emit(f"{tag}.csr_edge_segsum", t_ecsr)
+        emit(f"{tag}.csr_edge_pallas", t_epal,
              note="interpret-mode;compiled-on-TPU-target")
 
 
 if __name__ == "__main__":
+    from .common import write_bench
+
     run(small=False)
+    write_bench("BENCH_csr.json")

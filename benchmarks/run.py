@@ -14,6 +14,8 @@ def main() -> int:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated module names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump rows as a BENCH_*.json artifact")
     args = ap.parse_args()
     small = not args.full
 
@@ -31,6 +33,10 @@ def main() -> int:
     print("name,us_per_call,derived")
     for name in picks:
         mods[name].run(small=small)
+    if args.json:
+        from .common import write_bench
+
+        write_bench(args.json)
     return 0
 
 

@@ -8,6 +8,8 @@ Baselines at container scale:
                    cascaded, one sync per round)
   * PBNG         — two-phased (beindex engine, the faithful repro)
   * PBNG-dense   — beyond-paper TPU formulation (masked MXU recounts)
+  * PBNG-csr     — sparse wedge-list engine (segment_sum incremental
+                   updates; the only engine that scales past O(n²))
 """
 from __future__ import annotations
 
@@ -71,6 +73,9 @@ def run(small: bool = True):
 
         _, t_dense = timed(wing_decomposition, g, P=16, engine="dense")
 
+        res_csr, t_csr = timed(wing_decomposition, g, P=16, engine="csr")
+        assert np.array_equal(res_csr.theta, res.theta), name
+
         (theta_pc, st_pc), t_pc = timed(wing_decomposition_bepc, g)
         assert np.array_equal(theta_pc, res.theta), name
 
@@ -81,6 +86,8 @@ def run(small: bool = True):
              updates=upd_ls, rho=rho_ls,
              sync_reduction=round(rho_ls / max(s.rho_cd, 1), 1))
         emit(f"wing.{name}.pbng_dense", t_dense, engine="dense")
+        emit(f"wing.{name}.pbng_csr", t_csr, engine="csr",
+             updates=res_csr.stats.updates)
         emit(f"wing.{name}.be_pc", t_pc, recounts=st_pc.recounts,
              kind="top-down-baseline")
         if g.m <= 3000:

@@ -28,9 +28,10 @@ from .distributed import (
     distributed_tip_decomposition,
     distributed_wing_decomposition,
 )
-from . import counting, ref
+from . import counting, csr, ref
 
 __all__ = [
+    "csr",
     "BipartiteGraph",
     "random_bipartite",
     "powerlaw_bipartite",

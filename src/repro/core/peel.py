@@ -10,18 +10,23 @@ independent given the support-initialization vector ⋈init, so each is
 peeled to exact entity numbers with *zero* communication.  Partitions are
 processed in LPT (longest-processing-time) order.
 
-Two engines:
+Three engines:
   * ``engine="dense"``   — TPU-native: supports re-counted per round with
     masked MXU matmuls (the paper's §5.1 batch re-count optimization taken
-    to its logical extreme on TPU).
+    to its logical extreme on TPU).  O(n²) memory — guarded by
+    ``REPRO_DENSE_MAX_ELEMS``.
   * ``engine="beindex"`` — paper-faithful: BE-Index twin/bloom bookkeeping
     with ``segment_sum`` replacing atomics (alg.4/alg.6 semantics).
+  * ``engine="csr"``     — sparse: ParButterfly-style wedge-list counting
+    with incremental ``segment_sum`` updates (``core.csr``).  O(Σ deg²)
+    memory — the only engine that scales past dense adjacency.
 
-Both return identical θ (validated against the pure-python BUP oracle).
+All return identical θ (validated against the pure-python BUP oracle).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 from functools import partial
 from typing import Optional, Tuple
 
@@ -29,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import counting
+from . import counting, csr
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
 
@@ -127,6 +132,51 @@ def _lpt_order(work: np.ndarray) -> np.ndarray:
     return np.argsort(-work, kind="stable")
 
 
+def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
+                apply_peel) -> int:
+    """Level-synchronous bottom-up cascade shared by the incremental FD
+    engines: advance k to the minimum alive support, peel the ≤k set,
+    apply the engine's update, repeat until the partition is empty.
+
+    ``apply_peel(S, sup)`` consumes the peel mask and the current int64
+    support vector and returns the refreshed one (updating any engine
+    state it closes over).  Returns the number of peel rounds.
+    """
+    alive = mine.copy()
+    sup = support0
+    k = 0
+    rounds = 0
+    while alive.any():
+        k = max(k, int(sup[alive].min()))
+        while True:
+            S = alive & (sup <= k)
+            if not S.any():
+                break
+            theta[S] = k
+            alive &= ~S
+            sup = apply_peel(S, sup)
+            rounds += 1
+    return rounds
+
+
+def _dense_guard(n_u: int, n_v: int) -> None:
+    """Refuse dense-engine allocations that cannot fit.
+
+    The dense engine materializes an n_u×n_v adjacency and an n_u×n_u
+    wedge matrix; past ``REPRO_DENSE_MAX_ELEMS`` elements (default 2²⁸ ≈
+    1 GiB of f32) that is memory-roofline death, so fail fast with a
+    pointer at the csr engine instead of letting XLA OOM.
+    """
+    limit = int(os.environ.get("REPRO_DENSE_MAX_ELEMS", str(2 ** 28)))
+    need = max(n_u * n_v, n_u * n_u)
+    if need > limit:
+        raise MemoryError(
+            f"dense engine needs a {n_u}x{max(n_v, n_u)} matrix "
+            f"({need} > REPRO_DENSE_MAX_ELEMS={limit}); "
+            "use engine='csr' for graphs this large"
+        )
+
+
 # =====================================================================
 # Tip decomposition (vertex peeling)
 # =====================================================================
@@ -146,10 +196,17 @@ def tip_decomposition(
     side: str = "u",
     P: int = 16,
     batch_recount="adaptive",
+    engine: str = "dense",
 ) -> PeelResult:
-    """PBNG tip decomposition (§3.2), dense engine.
+    """PBNG tip decomposition (§3.2).
 
-    ``batch_recount``: the §5.1 batch optimization knob —
+    ``engine="dense"`` (default) re-counts with masked MXU matmuls;
+    ``engine="csr"`` peels on the sparse wedge list (``core.csr``) with
+    purely incremental pair updates — O(Σ deg²) memory, the only option
+    once the n×n wedge matrix stops fitting.
+
+    ``batch_recount`` (dense engine only): the §5.1 batch optimization
+    knob —
       * ``"adaptive"`` (default, paper-faithful): per round, re-count all
         survivors iff the frontier's wedge workload exceeds the counting
         bound ∧cnt = Σ_e min(d_u, d_v); otherwise apply incremental
@@ -157,8 +214,13 @@ def tip_decomposition(
       * ``True`` — always re-count; ``False`` — always incremental
         (the PBNG-- ablation).
     """
+    if engine not in ("dense", "csr"):
+        raise ValueError(engine)
     gg = g if side == "u" else g.transpose()
+    if engine == "csr":
+        return _tip_decomposition_csr(gg, P)
     n = gg.n_u
+    _dense_guard(gg.n_u, gg.n_v)
     A = jnp.asarray(gg.adjacency())
     wedge_w = np.asarray(counting.vertex_wedge_workload(A))  # paper's proxy
 
@@ -287,6 +349,125 @@ def _tip_fd_peel(
 
 
 # =====================================================================
+# Tip decomposition, csr engine (sparse wedge list, core/csr.py)
+# =====================================================================
+def _tip_decomposition_csr(gg: BipartiteGraph, P: int) -> PeelResult:
+    """CD + FD on the flat wedge list — no dense matrices anywhere.
+
+    Support init and every update are exact int32 ``segment_sum``s over
+    U-endpoint pairs; pair butterfly counts are static because the V side
+    is never peeled, so the engine is purely incremental (zero
+    re-counts).
+    """
+    n = gg.n_u
+    wed = csr.build_wedges(gg)
+    pa = jnp.asarray(wed.pair_a)
+    pb = jnp.asarray(wed.pair_b)
+    pair_bf0 = wed.pair_butterflies0()
+    pbf = jnp.asarray(pair_bf0.astype(np.int32))
+    wu, _ = csr.wedge_workload(gg)
+    wedge_w = wu.astype(np.float64)
+
+    sup_np = csr.vertex_butterflies_csr(wed)
+    if sup_np.size and int(sup_np.max()) > 2 ** 31 - 1:
+        raise OverflowError("tip supports exceed int32; shard the graph")
+    support = jnp.asarray(sup_np.astype(np.int32))
+
+    alive = np.ones(n, dtype=bool)
+    part = np.full(n, -1, dtype=np.int32)
+    sup_init = np.zeros(n, dtype=np.int64)
+    ranges = [0]
+    stats = PeelStats()
+    adapt = _AdaptiveTarget(float(wedge_w.sum()), P)
+
+    for i in range(P):
+        if not alive.any():
+            break
+        sup_init[alive] = sup_np[alive]
+        if i == P - 1:
+            hi = int(sup_np[alive].max()) + 1
+        else:
+            tgt = adapt.target(i)
+            hi = _find_range(sup_np, wedge_w, alive, tgt)
+            hi = max(hi, int(sup_np[alive].min()) + 1)  # guarantee progress
+        initial_est = float(wedge_w[alive & (sup_np < hi)].sum())
+        ranges.append(hi)
+
+        while True:
+            active = alive & (sup_np < hi)
+            if not active.any():
+                break
+            part[active] = i
+            alive &= ~active
+            support = support - csr.tip_delta_csr(
+                jnp.asarray(active), pa, pb, pbf, n
+            )
+            if wed.n_pairs:
+                stats.updates += int(
+                    np.count_nonzero(active[wed.pair_a] | active[wed.pair_b])
+                )
+            sup_np = np.asarray(support).astype(np.int64)
+            stats.rho_cd += 1
+
+        final_est = float(wedge_w[part == i].sum())
+        adapt.consumed(initial_est, final_est)
+        stats.p_effective = i + 1
+
+    # ------------------------------------------------------------- FD
+    theta = np.zeros(n, dtype=np.int64)
+    part_work = np.array(
+        [wedge_w[part == i].sum() for i in range(stats.p_effective)]
+    )
+    for i in _lpt_order(part_work):
+        rounds = _tip_fd_csr(wed, pair_bf0, part, int(i), sup_init, theta)
+        stats.rho_fd_total += rounds
+        stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+
+    return PeelResult(
+        theta=theta,
+        part=part,
+        ranges=np.asarray(ranges, dtype=np.int64),
+        support_init=sup_init,
+        stats=stats,
+    )
+
+
+def _tip_fd_csr(
+    wed: csr.Wedges,
+    pair_bf0: np.ndarray,
+    part: np.ndarray,
+    i: int,
+    sup_init: np.ndarray,
+    theta: np.ndarray,
+) -> int:
+    """Bottom-up peel of partition i on the pair list.
+
+    Only pairs with both endpoints inside the partition matter: vertices
+    of later partitions are never peeled during FD_i, and deltas to them
+    are discarded anyway.
+    """
+    mine = part == i
+    if not mine.any():
+        return 0
+    n = part.size
+    mask = mine[wed.pair_a] & mine[wed.pair_b] if wed.n_pairs else np.zeros(0, bool)
+    pa = jnp.asarray(wed.pair_a[mask])
+    pb = jnp.asarray(wed.pair_b[mask])
+    pbf = jnp.asarray(pair_bf0[mask].astype(np.int32))
+
+    support0 = np.zeros(n, dtype=np.int64)
+    support0[mine] = sup_init[mine]
+
+    def peel(S, sup):
+        delta = np.asarray(
+            csr.tip_delta_csr(jnp.asarray(S), pa, pb, pbf, n)
+        ).astype(np.int64)
+        return sup - delta
+
+    return _fd_cascade(mine, support0, theta, peel)
+
+
+# =====================================================================
 # Wing decomposition (edge peeling)
 # =====================================================================
 @partial(jax.jit, static_argnames=("shape",))
@@ -350,8 +531,12 @@ def wing_decomposition(
     engine: str = "beindex",
     be: Optional[BEIndex] = None,
 ) -> PeelResult:
-    """PBNG wing decomposition (§3.3)."""
-    if engine not in ("beindex", "dense"):
+    """PBNG wing decomposition (§3.3).
+
+    ``engine`` ∈ {"beindex", "dense", "csr"}: BE-Index incremental
+    updates, masked-matmul re-counts, or sparse wedge-list incremental
+    updates (``core.csr`` — the scalable path)."""
+    if engine not in ("beindex", "dense", "csr"):
         raise ValueError(engine)
     m = g.m
     edges = jnp.asarray(g.edges.astype(np.int32))
@@ -365,7 +550,20 @@ def wing_decomposition(
         alive_link = jnp.ones((be.n_links,), dtype=bool)
         k_alive = jnp.asarray(be.bloom_k.astype(np.int32))
         support = jnp.asarray(be.edge_support(m).astype(np.int32))
+    elif engine == "csr":
+        wed = csr.build_wedges(g)
+        we1 = jnp.asarray(wed.wedge_e1)
+        we2 = jnp.asarray(wed.wedge_e2)
+        wpj = jnp.asarray(wed.wedge_pair)
+        n_pairs = wed.n_pairs
+        alive_w = jnp.ones((wed.n_wedges,), dtype=bool)
+        Wp = csr.pair_wedge_counts(wed)
+        sup0 = csr.edge_butterflies0(wed)
+        if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
+            raise OverflowError("wing supports exceed int32; shard the graph")
+        support = jnp.asarray(sup0.astype(np.int32))
     else:
+        _dense_guard(g.n_u, g.n_v)
         support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
         counting.assert_exact(support)
 
@@ -404,6 +602,12 @@ def wing_decomposition(
                     le, lt, lb, nb, m,
                 )
                 stats.updates += int(nupd)
+            elif engine == "csr":
+                alive_w, Wp, support, nupd = csr.wing_update_csr(
+                    jnp.asarray(active), alive_w, Wp, support,
+                    we1, we2, wpj, n_pairs, m,
+                )
+                stats.updates += int(nupd)
             else:
                 support = _wing_recount(shape, edges, jnp.asarray(alive))
                 stats.recounts += 1
@@ -424,6 +628,12 @@ def wing_decomposition(
     if engine == "beindex":
         for i in order:
             rounds, nupd = _wing_fd_beindex(g, be, part, int(i), sup_init, theta)
+            stats.rho_fd_total += rounds
+            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+            stats.updates += nupd
+    elif engine == "csr":
+        for i in order:
+            rounds, nupd = _wing_fd_csr(wed, part, int(i), sup_init, theta)
             stats.rho_fd_total += rounds
             stats.rho_fd_max = max(stats.rho_fd_max, rounds)
             stats.updates += nupd
@@ -479,6 +689,58 @@ def _wing_fd_dense(
     return rounds, recounts
 
 
+def _wing_fd_csr(
+    wed: csr.Wedges,
+    part: np.ndarray,
+    i: int,
+    sup_init: np.ndarray,
+    theta: np.ndarray,
+) -> Tuple[int, int]:
+    """FD for partition i, csr engine.
+
+    Sub-structure = wedges with both edges in partitions ≥ i (the same
+    induced subgraph the dense FD re-counts on); per-pair alive counts
+    are re-derived for the subgraph, then partition-i edges peel with the
+    incremental update.  Deltas landing on later-partition edges are
+    computed but never read — their FD runs from its own ⋈init snapshot.
+    """
+    mine = part == i
+    if not mine.any():
+        return 0, 0
+    m = part.size
+    n_pairs = wed.n_pairs
+    keep = (
+        (part[wed.wedge_e1] >= i) & (part[wed.wedge_e2] >= i)
+        if wed.n_wedges else np.zeros(0, bool)
+    )
+    kwe1 = jnp.asarray(wed.wedge_e1[keep])
+    kwe2 = jnp.asarray(wed.wedge_e2[keep])
+    kwp = jnp.asarray(wed.wedge_pair[keep])
+    Wp = jnp.asarray(
+        np.bincount(
+            wed.wedge_pair[keep], minlength=max(n_pairs, 1)
+        ).astype(np.int32)
+    )
+    alive_w = jnp.ones((int(keep.sum()),), dtype=bool)
+
+    support_full = np.zeros(m, dtype=np.int64)
+    support_full[mine] = sup_init[mine]
+    support = jnp.asarray(support_full.astype(np.int32))
+    nupd = 0
+
+    def peel(S, sup):
+        nonlocal alive_w, Wp, support, nupd
+        alive_w, Wp, support, nu = csr.wing_update_csr(
+            jnp.asarray(S), alive_w, Wp, support,
+            kwe1, kwe2, kwp, n_pairs, m,
+        )
+        nupd += int(nu)
+        return np.asarray(support).astype(np.int64)
+
+    rounds = _fd_cascade(mine, support_full, theta, peel)
+    return rounds, nupd
+
+
 def _wing_fd_beindex(
     g: BipartiteGraph,
     be: BEIndex,
@@ -520,26 +782,18 @@ def _wing_fd_beindex(
     support = jnp.asarray(support_full.astype(np.int32))
 
     mine = part == i
-    alive = mine.copy()
-    k = 0
-    rounds = 0
     nupd = 0
-    sup_np = support_full.copy()
-    while alive.any():
-        k = max(k, int(sup_np[alive].min()))
-        while True:
-            S = alive & (sup_np <= k)
-            if not S.any():
-                break
-            theta[S] = k
-            alive &= ~S
-            alive_link, k_alive, support, nu = _wing_update(
-                jnp.asarray(S), alive_link, k_alive, support,
-                le, lt, lb, nb, m,
-            )
-            nupd += int(nu)
-            sup_np = np.asarray(support).astype(np.int64)
-            rounds += 1
+
+    def peel(S, sup):
+        nonlocal alive_link, k_alive, support, nupd
+        alive_link, k_alive, support, nu = _wing_update(
+            jnp.asarray(S), alive_link, k_alive, support,
+            le, lt, lb, nb, m,
+        )
+        nupd += int(nu)
+        return np.asarray(support).astype(np.int64)
+
+    rounds = _fd_cascade(mine, support_full.copy(), theta, peel)
     return rounds, nupd
 
 

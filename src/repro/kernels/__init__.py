@@ -9,6 +9,7 @@ from .ops import (
     edge_wedge_matrix,
     flash_attention,
     pack_blooms,
+    pair_wedge_counts,
     vertex_butterflies,
 )
 
@@ -19,5 +20,6 @@ __all__ = [
     "edge_wedge_matrix",
     "flash_attention",
     "pack_blooms",
+    "pair_wedge_counts",
     "vertex_butterflies",
 ]

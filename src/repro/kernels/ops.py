@@ -16,6 +16,7 @@ import numpy as np
 from .bloom_update import bloom_update_pallas
 from .butterfly_count import matmul_pallas, vertex_count_pallas
 from .flash_attention import flash_attention_pallas
+from .wedge_count import wedge_count_pallas
 
 __all__ = [
     "vertex_butterflies",
@@ -23,6 +24,7 @@ __all__ = [
     "bloom_update",
     "flash_attention",
     "pack_blooms",
+    "pair_wedge_counts",
     "default_interpret",
 ]
 
@@ -76,6 +78,21 @@ def edge_wedge_matrix(
     M = matmul_pallas(W, Ap2, bm=bm, bn=bn, bk=bk, interpret=interpret)
     dv = jnp.sum(Af, axis=0)
     return M[:n, :nv] - dv[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bk", "interpret"))
+def pair_wedge_counts(
+    slots: jax.Array, bp: int = 128, bk: int = 128, interpret: bool = True
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-pair wedge counts W and the f32 butterfly estimate C(W, 2)
+    via the blocked wedge-count kernel (estimate is exact only while
+    W(W−1) fits f32 integers — see ``wedge_count.py``).  ``slots`` is
+    the pairs-major alive matrix (``core.csr.pack_wedge_slots``);
+    padding is handled here."""
+    n = slots.shape[0]
+    s = _pad_to(_pad_to(slots.astype(jnp.float32), bp, 0), bk, 1)
+    W, bf = wedge_count_pallas(s, bp=bp, bk=bk, interpret=interpret)
+    return W[:n], bf[:n]
 
 
 def pack_blooms(

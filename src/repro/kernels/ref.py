@@ -9,7 +9,15 @@ __all__ = [
     "edge_wedge_matrix_ref",
     "bloom_update_ref",
     "flash_attention_ref",
+    "pair_wedge_counts_ref",
 ]
+
+
+def pair_wedge_counts_ref(slots: jax.Array):
+    """Row-sum oracle for the blocked wedge-count kernel: W = Σ slots,
+    bf = C(W, 2)."""
+    w = jnp.sum(slots.astype(jnp.float32), axis=1)
+    return w, w * (w - 1.0) * 0.5
 
 
 def vertex_butterflies_ref(A: jax.Array) -> jax.Array:

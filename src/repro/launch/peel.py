@@ -112,7 +112,14 @@ def _run(args) -> int:
                   f"updates={s.updates} sync_reduction="
                   f"{s.sync_reduction:.1f}x")
     else:
-        res = tip_decomposition(g, side=args.side, P=args.parts)
+        if args.engine in ("dense", "csr"):
+            tip_engine = args.engine
+        else:
+            tip_engine = "dense"
+            print(f"[peel] tip has no '{args.engine}' engine; using dense "
+                  "(pass --engine dense|csr to silence)")
+        res = tip_decomposition(
+            g, side=args.side, P=args.parts, engine=tip_engine)
         theta = res.theta
         s = res.stats
         print(f"[peel] rho_cd={s.rho_cd} rho_fd_max={s.rho_fd_max} "
@@ -134,7 +141,8 @@ def main():
     ap.add_argument("--n-v", type=int, default=200)
     ap.add_argument("--m", type=int, default=2000)
     ap.add_argument("--parts", type=int, default=16)
-    ap.add_argument("--engine", default="beindex")
+    ap.add_argument("--engine", default="beindex",
+                    choices=["beindex", "dense", "csr"])
     ap.add_argument("--side", default="u")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)

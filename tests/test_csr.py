@@ -1,0 +1,186 @@
+"""CSR wedge-list engine ≡ BUP oracle, plus wedge-count kernel parity."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import csr, ref
+from repro.core.graph import BipartiteGraph, powerlaw_bipartite, random_bipartite
+from repro.core.peel import tip_decomposition, wing_decomposition
+from repro.kernels import ops
+from repro.kernels import ref as kref
+
+
+def graphs(max_u=16, max_v=14, max_m=50):
+    return st.builds(
+        lambda nu, nv, m, seed: random_bipartite(nu, nv, m, seed=seed),
+        st.integers(2, max_u), st.integers(2, max_v),
+        st.integers(0, max_m), st.integers(0, 10_000),
+    )
+
+
+# ------------------------------------------------------------- counting
+@pytest.mark.parametrize("seed", range(6))
+def test_csr_counts_match_oracle(seed):
+    g = random_bipartite(30, 24, 140, seed=seed)
+    w = csr.build_wedges(g)
+    bu, _ = ref.vertex_butterflies_ref(g)
+    assert np.array_equal(csr.vertex_butterflies_csr(w), bu)
+    got_e = np.asarray(csr.edge_butterflies_csr(w)).astype(np.int64)
+    assert np.array_equal(got_e, ref.edge_butterflies_ref(g))
+    assert np.array_equal(csr.edge_butterflies0(w), got_e)
+    assert csr.total_butterflies_csr(w) == ref.butterfly_count_total(g)
+    wu, wv = csr.wedge_workload(g)
+    ru, rv = ref.wedge_count_ref(g)
+    assert np.array_equal(wu, ru) and np.array_equal(wv, rv)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_csr_masked_recount_matches_subgraph_oracle(seed):
+    g = random_bipartite(24, 20, 110, seed=seed)
+    w = csr.build_wedges(g)
+    rng = np.random.default_rng(seed)
+    alive = rng.random(g.m) > 0.35
+    sub = BipartiteGraph.from_edges(g.n_u, g.n_v, g.edges[alive])
+    got = np.asarray(csr.edge_butterflies_csr(w, jnp.asarray(alive)))[alive]
+    assert np.array_equal(got.astype(np.int64), ref.edge_butterflies_ref(sub))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_csr_incremental_update_equals_recount(seed):
+    """One wing_update_csr round == recount on the shrunken subgraph."""
+    g = random_bipartite(22, 18, 100, seed=seed)
+    w = csr.build_wedges(g)
+    rng = np.random.default_rng(seed + 100)
+    peeled = rng.random(g.m) < 0.3
+    alive = ~peeled
+    we1, we2, wp = map(jnp.asarray, (w.wedge_e1, w.wedge_e2, w.wedge_pair))
+    _, _, sup, _ = csr.wing_update_csr(
+        jnp.asarray(peeled),
+        jnp.ones((w.n_wedges,), bool),
+        csr.pair_wedge_counts(w),
+        csr.edge_butterflies_csr(w),
+        we1, we2, wp, w.n_pairs, g.m,
+    )
+    want = np.asarray(csr.edge_butterflies_csr(w, jnp.asarray(alive)))
+    assert np.array_equal(np.asarray(sup)[alive], want[alive])
+
+
+def test_empty_and_tiny_graphs():
+    for edges in ([], [[0, 0]], [[0, 0], [1, 1]]):
+        g = BipartiteGraph.from_edges(2, 2, np.asarray(edges, np.int32).reshape(-1, 2))
+        w = csr.build_wedges(g)
+        assert csr.total_butterflies_csr(w) == ref.butterfly_count_total(g)
+        res = wing_decomposition(g, P=2, engine="csr")
+        assert np.array_equal(res.theta, ref.bup_wing_ref(g))
+
+
+# ------------------------------------------------------------- peeling
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("P", [1, 4])
+def test_tip_csr_matches_bup(seed, P):
+    g = random_bipartite(16, 13, 48, seed=seed)
+    for side in ("u", "v"):
+        want = ref.bup_tip_ref(g, side)
+        got = tip_decomposition(g, side=side, P=P, engine="csr").theta
+        assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("P", [1, 4])
+def test_wing_csr_matches_bup(seed, P):
+    g = random_bipartite(16, 13, 48, seed=seed)
+    want = ref.bup_wing_ref(g)
+    got = wing_decomposition(g, P=P, engine="csr").theta
+    assert np.array_equal(got, want)
+
+
+def test_wing_csr_matches_beindex_on_skewed_graph():
+    g = powerlaw_bipartite(80, 50, 420, seed=11)
+    r_csr = wing_decomposition(g, P=8, engine="csr")
+    r_be = wing_decomposition(g, P=8, engine="beindex")
+    assert np.array_equal(r_csr.theta, r_be.theta)
+    assert r_csr.stats.rho_cd > 0 and r_csr.stats.updates > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs(), st.integers(1, 5), st.sampled_from(["u", "v"]))
+def test_tip_csr_matches_bup_property(g, P, side):
+    want = ref.bup_tip_ref(g, side)
+    got = tip_decomposition(g, side=side, P=P, engine="csr").theta
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(), st.integers(1, 4))
+def test_wing_csr_matches_bup_property(g, P):
+    want = ref.bup_wing_ref(g)
+    got = wing_decomposition(g, P=P, engine="csr").theta
+    assert np.array_equal(got, want)
+
+
+# -------------------------------------------------------- scale / guard
+def test_dense_engine_guarded_csr_peels_50k_graph():
+    """The acceptance graph: 50k×50k, avg degree 8.
+
+    The dense engine must refuse it up front (its adjacency alone is
+    10 GB); the csr engine must peel it."""
+    g = random_bipartite(50_000, 50_000, 400_000, seed=0)
+    with pytest.raises(MemoryError):
+        tip_decomposition(g, P=4, engine="dense")
+    with pytest.raises(MemoryError):
+        wing_decomposition(g, P=4, engine="dense")
+    res = tip_decomposition(g, P=4, engine="csr")
+    assert res.theta.shape == (g.n_u,)
+    assert res.stats.rho_cd > 0
+    resw = wing_decomposition(g, P=4, engine="csr")
+    assert resw.theta.shape == (g.m,)
+
+
+def test_dense_guard_env_override(monkeypatch):
+    g = random_bipartite(40, 30, 150, seed=1)
+    monkeypatch.setitem(os.environ, "REPRO_DENSE_MAX_ELEMS", "100")
+    with pytest.raises(MemoryError):
+        tip_decomposition(g, P=2, engine="dense")
+
+
+# ------------------------------------------------------------- kernels
+@pytest.mark.parametrize("shape", [(7, 30), (64, 128), (130, 260)])
+def test_wedge_count_kernel_matches_ref(shape):
+    rng = np.random.default_rng(shape[0])
+    slots = jnp.asarray(rng.random(shape) > 0.4)
+    W, bf = ops.pair_wedge_counts(slots, interpret=True)
+    Wr, bfr = kref.pair_wedge_counts_ref(slots)
+    np.testing.assert_array_equal(np.asarray(W), np.asarray(Wr))
+    np.testing.assert_array_equal(np.asarray(bf), np.asarray(bfr))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_wedge_count_kernel_matches_segment_sum(seed):
+    g = random_bipartite(60, 45, 350, seed=seed)
+    w = csr.build_wedges(g)
+    rng = np.random.default_rng(seed)
+    for alive in (None, jnp.asarray(rng.random(g.m) > 0.25)):
+        Wseg = np.asarray(csr.pair_wedge_counts(w, alive))
+        Wpal = np.asarray(
+            csr.pair_wedge_counts(w, alive, use_pallas=True, interpret=True)
+        )
+        assert np.array_equal(Wseg, Wpal)
+        s_seg = np.asarray(csr.edge_butterflies_csr(w, alive))
+        s_pal = np.asarray(
+            csr.edge_butterflies_csr(w, alive, use_pallas=True, interpret=True)
+        )
+        assert np.array_equal(s_seg, s_pal)
+
+
+def test_pad_segments_roundtrip():
+    ids = np.asarray([0, 0, 2, 2, 2, 4], np.int32)
+    p = csr.pad_segments(ids, 5)
+    assert p.width % 128 == 0 and p.n_rows_pad % 8 == 0
+    counts = p.valid.sum(axis=1)
+    assert list(counts[:5]) == [2, 0, 3, 0, 1]
+    # every original item appears exactly once
+    got = np.sort(p.idx[p.valid])
+    assert np.array_equal(got, np.arange(ids.size))
