@@ -1,0 +1,146 @@
+"""Benchmark-regression comparator — CI's ``bench-compare`` gate.
+
+Compares a fresh ``BENCH_*.json`` against the committed baseline
+(``benchmarks/baselines/BENCH_csr.json``) and hard-fails when any *hot*
+row slowed down by more than ``--threshold`` (default 1.3×).
+
+Hot rows are the ones big enough to measure reliably on a shared CI
+runner: ``us_per_call`` of the baseline must exceed ``--min-us``
+(default 10 ms).  Single processes can vary >1.5x from scheduler /
+allocator noise, so both sides of the gate are **best-of-N across
+processes**: pass several fresh JSONs (CI runs the smoke bench three
+times) and the per-row minimum is compared; the committed baseline is
+itself a min-merge.  New rows are reported but never fail the gate;
+missing hot rows do.
+
+A hot baseline row missing from the fresh output also fails the gate —
+renaming or dropping a benchmark must go through a baseline refresh, or
+the gate silently stops watching that row.
+
+Refreshing the baseline: the committed file should come from the same
+machine class the gate runs on.  Download CI's ``bench-json-<sha>``
+artifact from a green bench-smoke run and commit it (a laptop-timed
+baseline skews every ratio by the machine-speed difference); CI skips
+the gate when the commit message contains ``[bench-reset]``.
+
+``--normalize NAME`` divides every row by row NAME of its own run
+before comparing — a machine-independent mode (at the cost of the
+normalizer row's noise) for baselines that cannot come from CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_csr.json"
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def min_merge(paths) -> dict:
+    """Per-row minimum across several runs of the same bench — best-of-N
+    across *processes*, the only statistic stable enough to gate on when
+    single runs can vary >1.5x from scheduler/allocator noise."""
+    merged: dict = {}
+    for path in paths:
+        for name, us in load_rows(path).items():
+            merged[name] = min(us, merged.get(name, float("inf")))
+    return merged
+
+
+def compare(
+    baseline: dict, new: dict, threshold: float, min_us: float,
+    normalize: str = "",
+) -> int:
+    scale = 1.0
+    if normalize:
+        if normalize not in baseline or normalize not in new:
+            print(f"normalizer row '{normalize}' missing from "
+                  f"{'baseline' if normalize not in baseline else 'new run'}")
+            return 1
+        scale = baseline[normalize] / max(new[normalize], 1e-9)
+        print(f"normalizing by {normalize}: new timings x{scale:.3f}")
+    regressions = []
+    width = max((len(n) for n in baseline), default=4)
+    print(f"{'name':<{width}}  {'base_us':>12}  {'new_us':>12}  {'ratio':>6}")
+    for name in sorted(baseline):
+        base = baseline[name]
+        if name not in new:
+            hot = base >= min_us
+            flag = "  << MISSING HOT ROW" if hot else ""
+            print(f"{name:<{width}}  {base:>12.1f}  {'MISSING':>12}  "
+                  f"{'—':>6}{flag}")
+            if hot:
+                regressions.append((name, base, float("nan"), float("nan")))
+            continue
+        cur = new[name] * scale
+        ratio = cur / max(base, 1e-9)
+        hot = base >= min_us
+        flag = ""
+        if hot and ratio > threshold:
+            flag = "  << REGRESSION"
+            regressions.append((name, base, cur, ratio))
+        elif not hot:
+            flag = "  (cold: skipped)"
+        print(f"{name:<{width}}  {base:>12.1f}  {cur:>12.1f}  "
+              f"{ratio:>6.2f}{flag}")
+    for name in sorted(set(new) - set(baseline)):
+        print(f"{name:<{width}}  {'NEW':>12}  {new[name]:>12.1f}  {'—':>6}")
+    if regressions:
+        print(f"\n{len(regressions)} hot row(s) slower than "
+              f"{threshold}x baseline (or missing):")
+        for name, base, cur, ratio in regressions:
+            print(f"  {name}: {base:.0f}us -> {cur:.0f}us ({ratio:.2f}x)")
+        print("If intentional, refresh the baseline and include "
+              "[bench-reset] in the commit message.")
+        return 1
+    print("\nbench-compare: no hot-row regressions ✓")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", nargs="+",
+                    help="freshly produced BENCH_*.json file(s); several "
+                         "runs are min-merged per row before comparing")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--threshold", type=float, default=1.3,
+                    help="fail when new/base exceeds this on a hot row")
+    ap.add_argument("--min-us", type=float, default=10_000.0,
+                    help="rows faster than this in the baseline are too "
+                         "noisy to gate on")
+    ap.add_argument("--normalize", default="",
+                    help="divide all rows by this row of the same run "
+                         "before comparing (machine-independent mode)")
+    ap.add_argument("--write-merged", default="", metavar="PATH",
+                    help="write the min-merge of the fresh runs to PATH "
+                         "in baseline schema (baseline refresh) and exit")
+    args = ap.parse_args()
+    if args.write_merged:
+        merged = min_merge(args.new)
+        with open(args.new[0]) as f:
+            payload = json.load(f)
+        by_name = {r["name"]: r for p in args.new
+                   for r in json.load(open(p))["rows"]
+                   if abs(float(r["us_per_call"]) - merged[r["name"]]) < 1e-9}
+        payload["rows"] = [by_name[n] for n in sorted(merged)]
+        payload["note"] = (
+            f"min-merge of {len(args.new)} smoke runs "
+            "(see benchmarks/compare.py)")
+        with open(args.write_merged, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"[bench] wrote min-merged baseline -> {args.write_merged}")
+        return 0
+    return compare(
+        load_rows(args.baseline), min_merge(args.new),
+        args.threshold, args.min_us, args.normalize,
+    )
+
+
+if __name__ == "__main__":
+    sys.exit(main())

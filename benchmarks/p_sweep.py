@@ -21,6 +21,22 @@ def run(small: bool = True):
         emit(f"psweep.{name}.P{P}", t, rho_cd=s.rho_cd,
              rho_fd_max=s.rho_fd_max, parts=s.p_effective,
              updates=s.updates)
+        # csr engine at the same P: device-resident FD vs host-loop FD —
+        # the sync-reduction claim with the engine's OWN rho (not the
+        # beindex run's), plus the wall-clock win of the while_loop FD
+        res_d, t_d = timed(wing_decomposition, g, P=P, engine="csr",
+                           repeat=2)
+        res_h, t_h = timed(
+            wing_decomposition, g, P=P, engine="csr", fd_driver="host",
+            repeat=2)
+        sd = res_d.stats
+        emit(f"psweep.{name}.P{P}.csr", t_d, rho_cd=sd.rho_cd,
+             rho_fd_max=sd.rho_fd_max,
+             sync_reduction=round(sd.sync_reduction, 1),
+             fd_driver="device",
+             speedup_vs_hostfd=round(t_h / max(t_d, 1e-9), 2))
+        emit(f"psweep.{name}.P{P}.csr_hostfd", t_h,
+             rho_cd=res_h.stats.rho_cd, fd_driver="host")
 
 
 if __name__ == "__main__":

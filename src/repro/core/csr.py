@@ -47,13 +47,16 @@ __all__ = [
     "build_wedges",
     "pad_segments",
     "pack_wedge_slots",
+    "pack_update_slots",
     "wedge_workload",
     "pair_wedge_counts",
     "vertex_butterflies_csr",
     "edge_butterflies_csr",
     "total_butterflies_csr",
     "tip_delta_csr",
+    "wing_loss_csr",
     "wing_update_csr",
+    "wing_update_slots",
 ]
 
 _INT_LIMIT = 2 ** 31 - 1  # device counts are int32; guard exactness
@@ -202,6 +205,36 @@ def pack_wedge_slots(w: Wedges) -> PaddedCSR:
     return pad_segments(w.wedge_pair, w.n_pairs)
 
 
+def pack_update_slots(w: Wedges) -> dict:
+    """Slot-layout companion arrays for the Pallas support-update kernel.
+
+    ``e1``/``e2`` map each slot to its wedge's two edge ids (sentinel m
+    on padding slots, so peeled-flag gathers and loss scatters are safe
+    without masking); ``valid`` marks real slots — the engine's initial
+    alive matrix."""
+    # the kernel carries W_p, W_p-1 and c_p as f32; past 2^24 those stop
+    # being exact integers and rint() re-integerization silently corrupts
+    # supports — refuse up front like every other exactness boundary
+    # (W only decreases, so checking the static W0 once is sufficient)
+    if w.W0.size and int(w.W0.max()) >= 2 ** 24:
+        raise OverflowError(
+            "pair wedge counts exceed f32 integer range (2^24); "
+            "use the segment_sum path (use_pallas=False)"
+        )
+    packed = pack_wedge_slots(w)
+    if w.n_wedges:
+        idx = np.maximum(packed.idx, 0)
+        e1 = np.where(packed.valid, w.wedge_e1[idx], w.m).astype(np.int32)
+        e2 = np.where(packed.valid, w.wedge_e2[idx], w.m).astype(np.int32)
+    else:
+        e1 = np.full(packed.idx.shape, w.m, np.int32)
+        e2 = e1.copy()
+    return dict(
+        e1=e1, e2=e2, valid=packed.valid,
+        n_pairs=w.n_pairs, n_rows_pad=packed.n_rows_pad, m=w.m,
+    )
+
+
 # =====================================================================
 # Device-side counting (segment_sum over the flat wedge list)
 # =====================================================================
@@ -332,19 +365,19 @@ def tip_delta_csr(
     return _seg(loss_a, pair_a, n) + _seg(loss_b, pair_b, n)
 
 
-@partial(jax.jit, static_argnames=("n_pairs", "m"))
-def wing_update_csr(
+def wing_loss_csr(
     peeled_e: jax.Array,   # (m,) bool — edges peeled this round
     alive_w: jax.Array,    # (n_wedges,) bool
     W: jax.Array,          # (n_pairs,) int32 — alive wedge count per pair
-    support: jax.Array,    # (m,) int32
     we1: jax.Array,
     we2: jax.Array,
     wp: jax.Array,
     n_pairs: int,
     m: int,
 ):
-    """One batched incremental support update (BE-Index algebra on pairs).
+    """Per-edge butterfly loss of one peel round (BE-Index algebra on
+    pairs) — the traceable core shared by :func:`wing_update_csr` and the
+    device-resident FD driver (``peel._fd_while_device``).
 
     A wedge dies when either of its edges is peeled.  For a surviving
     edge e:
@@ -354,6 +387,8 @@ def wing_update_csr(
         of the same pair — c[p(w)] of them ("survivor" rule).
     Both scatters are segment_sums; only butterflies incident to peeled
     edges are touched.
+
+    Returns (alive_w', W', loss, n_updates).
     """
     pe1 = peeled_e[we1]
     pe2 = peeled_e[we2]
@@ -368,4 +403,71 @@ def wing_update_csr(
     n_updates = jnp.sum((w_dies & (~pe1 | ~pe2)).astype(jnp.int32)) + jnp.sum(
         (surv & (c[wp] > 0)).astype(jnp.int32)
     )
-    return alive_w & ~w_dies, W - c, support - loss, n_updates
+    return alive_w & ~w_dies, W - c, loss, n_updates
+
+
+def wing_update_slots(
+    peeled_e: jax.Array,       # (m,) bool — edges peeled this round
+    alive_slots: jax.Array,    # (n_rows_pad, K) bool — slot-layout alive
+    W: jax.Array,              # (n_pairs,) int32 — alive wedges per pair
+    support: jax.Array,        # (m,) int32
+    slot_e1: jax.Array,        # (n_rows_pad, K) int32, sentinel m
+    slot_e2: jax.Array,
+    n_pairs: int,
+    m: int,
+    interpret: Optional[bool] = None,
+):
+    """Pallas-kernel variant of :func:`wing_update_csr` — same widow /
+    survivor algebra, but the per-pair reduction and per-slot loss
+    computation run in the blocked ``kernels.support_update`` kernel over
+    the pairs-major slot layout; only the final scatter onto edges stays
+    a ``segment_sum``.  Counts are re-integerized from f32 straight out
+    of the kernel, so results are exact while W_p < 2²⁴ (parity-tested
+    against the segment-sum path).
+
+    Returns (alive_slots', W', support', n_updates).
+    """
+    from repro.kernels import ops as kops  # local import: keep core light
+
+    if interpret is None:
+        interpret = kops.default_interpret()
+    rows = alive_slots.shape[0]
+    W_rows = jnp.zeros((rows,), jnp.int32).at[:n_pairs].set(W)
+    pe_pad = jnp.concatenate([peeled_e, jnp.zeros((1,), bool)])
+    pe1 = pe_pad[slot_e1]
+    pe2 = pe_pad[slot_e2]
+    c1, c2, c_row = kops.support_update(
+        pe1, pe2, alive_slots, W_rows, interpret=interpret
+    )
+    c1 = jnp.rint(c1).astype(jnp.int32)
+    c2 = jnp.rint(c2).astype(jnp.int32)
+    c_row = jnp.rint(c_row).astype(jnp.int32)
+    loss = (
+        _seg(c1.reshape(-1), slot_e1.reshape(-1), m + 1)[:m]
+        + _seg(c2.reshape(-1), slot_e2.reshape(-1), m + 1)[:m]
+    )
+    dies = alive_slots & (pe1 | pe2)
+    surv = alive_slots & ~dies
+    n_updates = jnp.sum((dies & (~pe1 | ~pe2)).astype(jnp.int32)) + jnp.sum(
+        (surv & (c_row[:, None] > 0)).astype(jnp.int32)
+    )
+    return alive_slots & ~dies, W - c_row[:n_pairs], support - loss, n_updates
+
+
+@partial(jax.jit, static_argnames=("n_pairs", "m"))
+def wing_update_csr(
+    peeled_e: jax.Array,   # (m,) bool — edges peeled this round
+    alive_w: jax.Array,    # (n_wedges,) bool
+    W: jax.Array,          # (n_pairs,) int32 — alive wedge count per pair
+    support: jax.Array,    # (m,) int32
+    we1: jax.Array,
+    we2: jax.Array,
+    wp: jax.Array,
+    n_pairs: int,
+    m: int,
+):
+    """One batched incremental support update (see :func:`wing_loss_csr`)."""
+    alive_w, W, loss, n_updates = wing_loss_csr(
+        peeled_e, alive_w, W, we1, we2, wp, n_pairs, m
+    )
+    return alive_w, W, support - loss, n_updates

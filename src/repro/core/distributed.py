@@ -28,15 +28,23 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..sharding.compat import shard_map
+from . import csr
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
 
 __all__ = [
     "ShardedWingState",
+    "ShardedCSRState",
     "shard_links",
+    "shard_wedges",
     "cd_round_sharded",
+    "cd_round_sharded_csr",
+    "make_cd_round_csr",
     "pack_fd_partitions",
+    "pack_fd_partitions_csr",
     "fd_peel_sharded",
+    "fd_peel_sharded_csr",
     "distributed_wing_decomposition",
     "distributed_tip_decomposition",
 ]
@@ -104,7 +112,7 @@ def make_cd_round(mesh: Mesh, axis: str, nb: int, m: int):
     body = partial(_cd_round_body, nb=nb, m=m, axis=axis)
     spec_l = P(axis)
     spec_r = P()
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(spec_r, spec_l, spec_r, spec_r, spec_l, spec_l, spec_l),
         out_specs=(spec_l, spec_r, spec_r),
@@ -206,12 +214,113 @@ def make_cd_round_bloom(mesh: Mesh, axis: str, Bmax: int, m: int):
 
     spec_l = P(axis)
     spec_r = P()
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(spec_r, spec_l, spec_l, spec_r, spec_l, spec_l, spec_l),
         out_specs=(spec_l, spec_l, spec_r),
     )
     return jax.jit(fn)
+
+
+# =====================================================================
+# CD — wedge-sharded rounds for the csr engine (no BE-Index anywhere)
+# =====================================================================
+# Same two-psums-per-round structure as the link-sharded beindex CD, but
+# the sharded unit is the flat wedge list (``core.csr.Wedges``): pairs
+# play the role of blooms, per-pair alive wedge counts W_p the role of
+# bloom numbers.  This is the only CD that scales with O(Σ deg²) memory
+# — the engine that survives past the dense wall also shards.
+@dataclasses.dataclass
+class ShardedCSRState:
+    we1: jax.Array         # (L_pad,) wedge -> edge 1, sharded (sentinel m)
+    we2: jax.Array         # (L_pad,) wedge -> edge 2
+    wp: jax.Array          # (L_pad,) wedge -> pair (sentinel n_pairs)
+    alive_w: jax.Array     # (L_pad,) sharded
+    W_pad: jax.Array       # (n_pairs+1,) replicated — alive wedges/pair
+    support: jax.Array     # (m,) replicated
+    n_pairs: int
+    m: int
+
+
+def shard_wedges(wed: csr.Wedges, n_dev: int) -> ShardedCSRState:
+    """Pad the wedge list to a multiple of n_dev.  Pad wedges point at
+    the sentinel edge m / pair n_pairs and start dead."""
+    L = wed.n_wedges
+    m = wed.m
+    n_pairs = wed.n_pairs
+    pad = (-L) % max(n_dev, 1)
+    if L + pad == 0:
+        pad = max(n_dev, 1)
+
+    def padded(x, fill):
+        return np.concatenate([x, np.full(pad, fill, dtype=x.dtype)])
+
+    sup0 = csr.edge_butterflies0(wed)
+    if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
+        raise OverflowError("wing supports exceed int32; shard the graph")
+    W_pad = np.zeros(n_pairs + 1, dtype=np.int32)
+    W_pad[:n_pairs] = wed.W0.astype(np.int32)
+    return ShardedCSRState(
+        we1=jnp.asarray(padded(wed.wedge_e1, m)),
+        we2=jnp.asarray(padded(wed.wedge_e2, m)),
+        wp=jnp.asarray(padded(wed.wedge_pair, n_pairs)),
+        alive_w=jnp.asarray(
+            np.concatenate([np.ones(L, bool), np.zeros(pad, bool)])),
+        W_pad=jnp.asarray(W_pad),
+        support=jnp.asarray(sup0.astype(np.int32)),
+        n_pairs=n_pairs, m=m,
+    )
+
+
+def _cd_round_body_csr(peeled_pad, alive_w, W_pad, support_pad,
+                       we1, we2, wp, *, n_pairs: int, m: int, axis: str):
+    """Per-shard csr CD round (wing_loss_csr algebra + two psums)."""
+    pe1 = peeled_pad[we1]
+    pe2 = peeled_pad[we2]
+    w_dies = alive_w & (pe1 | pe2)
+    c_local = jax.ops.segment_sum(
+        w_dies.astype(jnp.int32), wp, num_segments=n_pairs + 1
+    )
+    c = jax.lax.psum(c_local, axis)
+    surv = alive_w & ~w_dies
+    surv_loss = jnp.where(surv, c[wp], 0)
+    loss_local = (
+        jax.ops.segment_sum(
+            jnp.where(w_dies & ~pe1, W_pad[wp] - 1, 0) + surv_loss,
+            we1, num_segments=m + 1)
+        + jax.ops.segment_sum(
+            jnp.where(w_dies & ~pe2, W_pad[wp] - 1, 0) + surv_loss,
+            we2, num_segments=m + 1)
+    )
+    loss = jax.lax.psum(loss_local, axis)
+    return alive_w & ~w_dies, W_pad - c, support_pad - loss
+
+
+def make_cd_round_csr(mesh: Mesh, axis: str, n_pairs: int, m: int):
+    """Build the jitted, shard_map-ped csr CD round for a given mesh."""
+    body = partial(_cd_round_body_csr, n_pairs=n_pairs, m=m, axis=axis)
+    spec_l = P(axis)
+    spec_r = P()
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_r, spec_l, spec_r, spec_r, spec_l, spec_l, spec_l),
+        out_specs=(spec_l, spec_r, spec_r),
+    )
+    return jax.jit(fn)
+
+
+def cd_round_sharded_csr(round_fn, st: ShardedCSRState, peeled: jax.Array
+                         ) -> ShardedCSRState:
+    """One csr CD peeling round. ``peeled`` is the (m,) frontier mask."""
+    peeled_pad = jnp.concatenate([peeled, jnp.zeros((1,), bool)])
+    support_pad = jnp.concatenate([st.support, jnp.zeros((1,), jnp.int32)])
+    alive_w, W_pad, support_pad = round_fn(
+        peeled_pad, st.alive_w, st.W_pad, support_pad,
+        st.we1, st.we2, st.wp,
+    )
+    return dataclasses.replace(
+        st, alive_w=alive_w, W_pad=W_pad, support=support_pad[:-1]
+    )
 
 
 # =====================================================================
@@ -298,7 +407,7 @@ def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
     """Peel one partition bottom-up — pure lax.while_loop, NO collectives."""
     Emax = mine.shape[0]
     Bmax = k0.shape[0]
-    BIG = jnp.int32(2 ** 30)
+    BIG = jnp.iinfo(jnp.int32).max  # >= any guarded support
 
     def update(peeled, alive_link, k_alive, support):
         pe = jnp.concatenate([peeled, jnp.zeros((1,), bool)])
@@ -341,12 +450,11 @@ def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
     return theta, rounds
 
 
-def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
-                    ) -> Tuple[np.ndarray, np.ndarray]:
-    """Peel all partitions concurrently: shard_map over the partition axis
-    (device-parallel), vmap within a shard.  Returns (theta[m'], rounds[P])
-    in packed local layout."""
-    n_parts = packed["le"].shape[0]
+def _fd_run_sharded(body, packed: dict, keys: Tuple[str, ...],
+                    mesh: Mesh, axis: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Shared FD launcher: pad the partition axis to the device count,
+    shard_map the vmapped per-partition body, trim the results."""
+    n_parts = packed[keys[0]].shape[0]
     n_dev = mesh.devices.size
     pad = (-n_parts) % n_dev
 
@@ -356,12 +464,9 @@ def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
         fill = np.zeros((pad,) + x.shape[1:], dtype=x.dtype)
         return jnp.asarray(np.concatenate([x, fill], axis=0))
 
-    args = tuple(padp(packed[k]) for k in
-                 ("le", "lt", "lb", "alive0", "canon", "k0", "sup0", "mine"))
-
-    vbody = jax.vmap(_fd_body_one_partition)
-    fn = jax.shard_map(
-        vbody, mesh=mesh,
+    args = tuple(padp(packed[k]) for k in keys)
+    fn = shard_map(
+        jax.vmap(body), mesh=mesh,
         in_specs=tuple(P(axis) for _ in args),
         out_specs=(P(axis), P(axis)),
     )
@@ -369,43 +474,132 @@ def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
     return np.asarray(theta)[:n_parts], np.asarray(rounds)[:n_parts]
 
 
+def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Peel all partitions concurrently: shard_map over the partition axis
+    (device-parallel), vmap within a shard.  Returns (theta[m'], rounds[P])
+    in packed local layout."""
+    return _fd_run_sharded(
+        _fd_body_one_partition, packed,
+        ("le", "lt", "lb", "alive0", "canon", "k0", "sup0", "mine"),
+        mesh, axis,
+    )
+
+
+# =====================================================================
+# FD — csr variant: partition-stacked wedge lists, zero collectives
+# =====================================================================
+def pack_fd_partitions_csr(
+    wed: csr.Wedges, part: np.ndarray, sup_init: np.ndarray,
+    n_parts: int, pad_to: Optional[int] = None,
+) -> dict:
+    """Stack per-partition wedge sub-lists into [n_parts, ...] arrays.
+
+    Partition i's sub-structure = wedges with both edges in partitions
+    ≥ i (the same induced subgraph the single-device csr FD uses); edge
+    ids are partition-local with a sentinel slot Emax for never-peeled
+    later-partition edges, pair ids are relabeled per partition.  Same
+    sentinel/pad machinery as :func:`pack_fd_partitions`."""
+    m = part.size
+    pe1 = part[wed.wedge_e1] if wed.n_wedges else np.zeros(0, np.int32)
+    pe2 = part[wed.wedge_e2] if wed.n_wedges else np.zeros(0, np.int32)
+    per = []
+    for i in range(n_parts):
+        mine_idx = np.where(part == i)[0]
+        loc = np.full(m, -1, dtype=np.int64)
+        loc[mine_idx] = np.arange(mine_idx.size)
+        keep = (pe1 >= i) & (pe2 >= i)
+        kwe1 = wed.wedge_e1[keep]
+        kwe2 = wed.wedge_e2[keep]
+        pair_ids, wp_loc = np.unique(wed.wedge_pair[keep],
+                                     return_inverse=True)
+        per.append(dict(
+            edges=mine_idx,
+            we1=np.where(part[kwe1] == i, loc[kwe1], -1),
+            we2=np.where(part[kwe2] == i, loc[kwe2], -1),
+            wp=wp_loc,
+            W0=np.bincount(wp_loc, minlength=max(pair_ids.size, 1)),
+            sup0=sup_init[mine_idx],
+        ))
+    Lmax = max((p["we1"].size for p in per), default=1) or 1
+    Emax = max((p["edges"].size for p in per), default=1) or 1
+    Pmax = max((p["W0"].size for p in per), default=1) or 1
+    if pad_to:
+        Lmax, Emax, Pmax = (max(Lmax, pad_to), max(Emax, pad_to),
+                            max(Pmax, pad_to))
+
+    def pk(key, size, fill, dtype=np.int32):
+        out = np.full((n_parts, size), fill, dtype=dtype)
+        for i, p in enumerate(per):
+            x = p[key]
+            out[i, : x.size] = x
+        return out
+
+    # sentinel local edge id = Emax (extra never-peeled slot); pad wedges
+    # carry pair 0 but start dead, so they contribute nothing
+    w1 = pk("we1", Lmax, -1)
+    w2 = pk("we2", Lmax, -1)
+    we1 = np.where(w1 < 0, Emax, w1).astype(np.int32)
+    we2 = np.where(w2 < 0, Emax, w2).astype(np.int32)
+    alive0 = np.zeros((n_parts, Lmax), dtype=bool)
+    mine = np.zeros((n_parts, Emax), dtype=bool)
+    sup0 = np.zeros((n_parts, Emax), dtype=np.int32)
+    gids = np.zeros((n_parts, Emax), dtype=np.int32)
+    for i, p in enumerate(per):
+        alive0[i, : p["we1"].size] = True
+        mine[i, : p["edges"].size] = True
+        sup0[i, : p["edges"].size] = p["sup0"]
+        gids[i, : p["edges"].size] = p["edges"]
+    return dict(
+        we1=we1, we2=we2, wp=pk("wp", Lmax, 0), alive0=alive0,
+        W0=pk("W0", Pmax, 0), sup0=sup0, mine=mine, gids=gids,
+        sizes=(Lmax, Emax, Pmax),
+    )
+
+
+def _fd_body_one_partition_csr(we1, we2, wp, alive0, W0, sup0, mine):
+    """Peel one csr partition bottom-up — the shared device FD driver
+    (``peel._fd_while_device``): one while_loop, NO collectives."""
+    from .peel import _fd_while_device
+
+    Emax = mine.shape[0]
+    Pmax = W0.shape[0]
+
+    def update(S, aux):
+        alive_w, W = aux
+        S_pad = jnp.concatenate([S, jnp.zeros((1,), bool)])
+        alive_w, W, loss, _ = csr.wing_loss_csr(
+            S_pad, alive_w, W, we1, we2, wp, Pmax, Emax + 1
+        )
+        return loss[:Emax], (alive_w, W), jnp.int32(0)
+
+    theta, rounds, _ = _fd_while_device(
+        mine, sup0.astype(jnp.int32), update,
+        (alive0, W0.astype(jnp.int32)),
+    )
+    return theta, rounds
+
+
+def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """csr counterpart of :func:`fd_peel_sharded` — shard_map over the
+    padded wedge-slot stacks, zero collectives inside partitions."""
+    return _fd_run_sharded(
+        _fd_body_one_partition_csr, packed,
+        ("we1", "we2", "wp", "alive0", "W0", "sup0", "mine"),
+        mesh, axis,
+    )
+
+
 # =====================================================================
 # End-to-end distributed wing decomposition
 # =====================================================================
-def distributed_wing_decomposition(
-    g: BipartiteGraph,
-    mesh: Mesh,
-    axis: str = "peel",
-    P_parts: int = 8,
-    be: Optional[BEIndex] = None,
-    bloom_aligned: bool = False,
-) -> Tuple[np.ndarray, dict]:
-    """Full PBNG wing decomposition on a device mesh.
+def _cd_partition_loop(sup_np: np.ndarray, P_parts: int, step):
+    """Shared CD driver: range selection + inner peel rounds, engine
+    supplied as ``step(active) -> refreshed int64 support``.
 
-    CD: link-sharded rounds (two psums; ``bloom_aligned=True`` uses the
-    one-psum §Perf variant).  FD: communication-free partition peel.
-    Returns (theta, stats).
-    """
-    if be is None:
-        be = build_beindex(g)
-    m = g.m
-    n_dev = mesh.devices.size
-    if bloom_aligned:
-        packed = shard_links_bloom_aligned(be, m, n_dev)
-        round_fn = make_cd_round_bloom(mesh, axis, packed["Bmax"], m)
-        bl_alive = jnp.asarray(packed["alive"])
-        bl_k = jnp.asarray(packed["k0"])
-        bl_le = jnp.asarray(packed["le"])
-        bl_lt = jnp.asarray(packed["lt"])
-        bl_lb = jnp.asarray(packed["lb"])
-        support = jnp.asarray(be.edge_support(m).astype(np.int32))
-        st = None
-    else:
-        st = shard_links(be, m, n_dev)
-        round_fn = make_cd_round(mesh, axis, st.nb, m)
-        support = st.support
-
-    sup_np = np.asarray(support).astype(np.int64)
+    Returns (part, sup_init, rho_cd)."""
+    m = sup_np.size
     alive = np.ones(m, dtype=bool)
     part = np.full(m, -1, dtype=np.int32)
     sup_init = np.zeros(m, dtype=np.int64)
@@ -431,20 +625,73 @@ def distributed_wing_decomposition(
                 break
             part[active] = i
             alive &= ~active
-            if bloom_aligned:
-                peeled_pad = jnp.concatenate(
-                    [jnp.asarray(active), jnp.zeros((1,), bool)])
-                support_pad = jnp.concatenate(
-                    [support, jnp.zeros((1,), jnp.int32)])
-                bl_alive, bl_k, support_pad = round_fn(
-                    peeled_pad, bl_alive, bl_k, support_pad,
-                    bl_le, bl_lt, bl_lb)
-                support = support_pad[:-1]
-                sup_np = np.asarray(support).astype(np.int64)
-            else:
-                st = cd_round_sharded(round_fn, st, jnp.asarray(active))
-                sup_np = np.asarray(st.support).astype(np.int64)
+            sup_np = step(active)
             rho_cd += 1
+    return part, sup_init, rho_cd
+
+
+def distributed_wing_decomposition(
+    g: BipartiteGraph,
+    mesh: Mesh,
+    axis: str = "peel",
+    P_parts: int = 8,
+    be: Optional[BEIndex] = None,
+    bloom_aligned: bool = False,
+    engine: str = "beindex",
+) -> Tuple[np.ndarray, dict]:
+    """Full PBNG wing decomposition on a device mesh.
+
+    ``engine="beindex"``: link-sharded CD rounds (two psums;
+    ``bloom_aligned=True`` uses the one-psum §Perf variant) + link-packed
+    FD.  ``engine="csr"``: wedge-sharded CD rounds + wedge-packed FD —
+    O(Σ deg²) memory end to end, no BE-Index built.  FD is
+    communication-free either way.  Returns (theta, stats).
+    """
+    if engine not in ("beindex", "csr"):
+        raise ValueError(engine)
+    if engine == "csr":
+        if bloom_aligned or be is not None:
+            raise ValueError(
+                "engine='csr' builds no BE-Index: bloom_aligned/be "
+                "only apply to engine='beindex'"
+            )
+        return _distributed_wing_csr(g, mesh, axis, P_parts)
+    if be is None:
+        be = build_beindex(g)
+    m = g.m
+    n_dev = mesh.devices.size
+    if bloom_aligned:
+        packed = shard_links_bloom_aligned(be, m, n_dev)
+        round_fn = make_cd_round_bloom(mesh, axis, packed["Bmax"], m)
+        bl_alive = jnp.asarray(packed["alive"])
+        bl_k = jnp.asarray(packed["k0"])
+        bl_le = jnp.asarray(packed["le"])
+        bl_lt = jnp.asarray(packed["lt"])
+        bl_lb = jnp.asarray(packed["lb"])
+        support = jnp.asarray(be.edge_support(m).astype(np.int32))
+        st = None
+    else:
+        st = shard_links(be, m, n_dev)
+        round_fn = make_cd_round(mesh, axis, st.nb, m)
+        support = st.support
+
+    def step(active: np.ndarray) -> np.ndarray:
+        nonlocal st, support, bl_alive, bl_k
+        if bloom_aligned:
+            peeled_pad = jnp.concatenate(
+                [jnp.asarray(active), jnp.zeros((1,), bool)])
+            support_pad = jnp.concatenate(
+                [support, jnp.zeros((1,), jnp.int32)])
+            bl_alive, bl_k, support_pad = round_fn(
+                peeled_pad, bl_alive, bl_k, support_pad,
+                bl_le, bl_lt, bl_lb)
+            support = support_pad[:-1]
+            return np.asarray(support).astype(np.int64)
+        st = cd_round_sharded(round_fn, st, jnp.asarray(active))
+        return np.asarray(st.support).astype(np.int64)
+
+    part, sup_init, rho_cd = _cd_partition_loop(
+        np.asarray(support).astype(np.int64), P_parts, step)
     n_parts = int(part.max()) + 1
 
     packed = pack_fd_partitions(g, be, part, sup_init, n_parts)
@@ -454,11 +701,50 @@ def distributed_wing_decomposition(
         mine = packed["mine"][i]
         theta[packed["gids"][i][mine]] = theta_loc[i][mine]
     stats = dict(
+        engine="beindex",
         rho_cd=rho_cd,
         rho_fd_total=int(rounds.sum()),
         rho_fd_max=int(rounds.max()) if rounds.size else 0,
         n_parts=n_parts,
         n_links=be.n_links,
+        n_dev=n_dev,
+    )
+    return theta, stats
+
+
+def _distributed_wing_csr(
+    g: BipartiteGraph, mesh: Mesh, axis: str, P_parts: int
+) -> Tuple[np.ndarray, dict]:
+    """csr engine on a mesh: wedge-sharded CD + wedge-packed FD."""
+    wed = csr.build_wedges(g)
+    m = g.m
+    n_dev = int(mesh.devices.size)
+    st = shard_wedges(wed, n_dev)
+    round_fn = make_cd_round_csr(mesh, axis, st.n_pairs, m)
+
+    def step(active: np.ndarray) -> np.ndarray:
+        nonlocal st
+        st = cd_round_sharded_csr(round_fn, st, jnp.asarray(active))
+        return np.asarray(st.support).astype(np.int64)
+
+    part, sup_init, rho_cd = _cd_partition_loop(
+        np.asarray(st.support).astype(np.int64), P_parts, step)
+    n_parts = int(part.max()) + 1
+
+    packed = pack_fd_partitions_csr(wed, part, sup_init, n_parts)
+    theta_loc, rounds = fd_peel_sharded_csr(packed, mesh, axis)
+    theta = np.zeros(m, dtype=np.int64)
+    for i in range(n_parts):
+        mine = packed["mine"][i]
+        theta[packed["gids"][i][mine]] = theta_loc[i][mine]
+    stats = dict(
+        engine="csr",
+        rho_cd=rho_cd,
+        rho_fd_total=int(rounds.sum()),
+        rho_fd_max=int(rounds.max()) if rounds.size else 0,
+        n_parts=n_parts,
+        n_wedges=wed.n_wedges,
+        n_pairs=wed.n_pairs,
         n_dev=n_dev,
     )
     return theta, stats
@@ -496,7 +782,7 @@ def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
             jax.lax.all_gather(alive_pad, axis, axis=0, tiled=True),
             row0)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=P(axis),
@@ -605,7 +891,7 @@ def distributed_tip_decomposition(
         sup0[i, : r.size] = sup_init[r]
         gids[i, : r.size] = r
     vk = jax.vmap(_tip_fd_kernel)
-    fd = jax.shard_map(
+    fd = shard_map(
         vk, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),

@@ -61,6 +61,8 @@ class PeelStats:
     updates: int = 0         # support updates applied (beindex engine)
     recounts: int = 0        # batch re-counts (dense engine)
     p_effective: int = 0     # partitions actually created
+    engine: str = ""         # engine that produced THESE round counts
+    fd_driver: str = ""      # "device" (one while_loop/partition) | "host"
 
     @property
     def rho(self) -> int:
@@ -72,8 +74,21 @@ class PeelStats:
     def sync_reduction(self) -> float:
         """ρ(level-by-level parallel BUP) / ρ(PBNG) — the headline claim.
 
-        ρ(ParB) ≈ total per-level rounds = rho_fd_total (footnote 6)."""
+        ρ(ParB) ≈ total per-level rounds = rho_fd_total (footnote 6).
+        Both counts come from *this* run — the ratio is only meaningful
+        per engine (an engine's own FD cascade stands in for the
+        level-synchronous baseline it would have been).  Benchmarks must
+        therefore never mix one engine's rho_cd with another's
+        rho_fd_total; :meth:`as_dict` gives them the honest per-engine
+        row."""
         return self.rho_fd_total / max(self.rho_cd, 1)
+
+    def as_dict(self) -> dict:
+        """Flat JSON-ready view (per-engine rho + derived ratios)."""
+        d = dataclasses.asdict(self)
+        d["rho"] = self.rho
+        d["sync_reduction"] = round(self.sync_reduction, 3)
+        return d
 
 
 @dataclasses.dataclass
@@ -141,6 +156,10 @@ def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
     ``apply_peel(S, sup)`` consumes the peel mask and the current int64
     support vector and returns the refreshed one (updating any engine
     state it closes over).  Returns the number of peel rounds.
+
+    This is the *host-loop* driver (one device dispatch per peel round).
+    The csr engine defaults to :func:`_fd_while_device`, which runs the
+    identical cascade inside a single ``lax.while_loop``.
     """
     alive = mine.copy()
     sup = support0
@@ -157,6 +176,119 @@ def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
             sup = apply_peel(S, sup)
             rounds += 1
     return rounds
+
+
+# =====================================================================
+# Device-resident FD driver (single while_loop per partition)
+# =====================================================================
+# sentinel for masked-out supports in the k-advance; must be >= any real
+# support (engines guard supports <= int32 max), else the while_loop can
+# never peel the last entities and spins forever
+_FD_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _bucket_pad(n: int, floor: int = 128) -> int:
+    """Round n up to a quarter-power-of-two bucket (≥ floor) — pads
+    per-partition pair / wedge arrays so the jitted FD drivers recompile
+    per size *bucket* instead of per partition, with ≤25% padding waste
+    (zero padding is algebra-neutral: a pair with 0 butterflies / a dead
+    wedge contributes no loss)."""
+    if n <= floor:
+        return floor
+    step = 1 << max(int(n - 1).bit_length() - 2, 0)
+    return -(-n // step) * step
+
+
+def _pad_zeros(x: np.ndarray, size: int) -> np.ndarray:
+    if x.size >= size:
+        return x
+    return np.concatenate([x, np.zeros(size - x.size, dtype=x.dtype)])
+
+
+def _fd_while_device(mine: jax.Array, sup0: jax.Array, update, aux):
+    """The batched FD cascade as one ``lax.while_loop`` — shared by the
+    csr tip and wing engines (and the sharded FD bodies in
+    ``core.distributed``).
+
+    Semantics are identical to :func:`_fd_cascade` — every iteration
+    advances k to the minimum alive support and peels the ≤k set, so the
+    round count matches the host driver exactly — but the whole cascade
+    stays device-resident: zero host↔device transfers per partition,
+    which is the paper's Phase-2 "no global synchronization" property
+    stated structurally (one jit'd while_loop, no dispatch per round).
+
+    ``update(S, aux) -> (loss, aux', n_upd)`` is the engine's incremental
+    support update; ``aux`` is its loop-carried state (wedge/pair alive
+    masks and counts).  Returns (theta, rounds, updates), all on device.
+    """
+
+    def cond(state):
+        alive, *_ = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, sup, aux, theta, k, rounds, nupd = state
+        cur = jnp.where(alive, sup, _FD_BIG)
+        k = jnp.maximum(k, jnp.min(cur))
+        S = alive & (sup <= k)
+        # S is non-empty whenever alive is (k ≥ min alive support), so
+        # every iteration is one real peel round — same count as the
+        # host cascade.
+        theta = jnp.where(S, k, theta)
+        alive = alive & ~S
+        loss, aux, nu = update(S, aux)
+        return (alive, sup - loss, aux, theta, k, rounds + 1, nupd + nu)
+
+    # derive loop-constant inits from varying inputs so the carry's
+    # manual-axes annotation is stable under shard_map (same trick as
+    # distributed._fd_body_one_partition)
+    zero_e = sup0 * 0
+    zero_s = jnp.min(zero_e)
+    init = (mine, sup0, aux, zero_e, zero_s, zero_s, zero_s)
+    _, _, _, theta, _, rounds, nupd = jax.lax.while_loop(cond, body, init)
+    return theta, rounds, nupd
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _fd_tip_device(
+    mine: jax.Array,      # (n,) bool — partition members
+    sup0: jax.Array,      # (n,) int32 — ⋈init (zero outside mine)
+    pa: jax.Array,        # partition-local pair endpoints (global ids)
+    pb: jax.Array,
+    pbf: jax.Array,       # (n_pairs_i,) int32 static pair butterflies
+    n: int,
+):
+    """Whole tip-FD cascade of one partition in a single while_loop."""
+
+    def update(S, aux):
+        loss = csr.tip_delta_csr(S, pa, pb, pbf, n)
+        return loss, aux, jnp.int32(0)
+
+    return _fd_while_device(mine, sup0, update, jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("n_pairs", "m"))
+def _fd_wing_device(
+    mine: jax.Array,      # (m,) bool — partition members
+    sup0: jax.Array,      # (m,) int32 — ⋈init (zero outside mine)
+    alive_w0: jax.Array,  # (n_kept,) bool — wedges of the ≥i subgraph
+    W0: jax.Array,        # (n_pairs,) int32 — alive wedge count per pair
+    we1: jax.Array,
+    we2: jax.Array,
+    wp: jax.Array,
+    n_pairs: int,
+    m: int,
+):
+    """Whole wing-FD cascade of one partition in a single while_loop."""
+
+    def update(S, aux):
+        alive_w, W = aux
+        alive_w, W, loss, nu = csr.wing_loss_csr(
+            S, alive_w, W, we1, we2, wp, n_pairs, m
+        )
+        return loss, (alive_w, W), nu
+
+    return _fd_while_device(mine, sup0, update, (alive_w0, W0))
 
 
 def _dense_guard(n_u: int, n_v: int) -> None:
@@ -197,6 +329,7 @@ def tip_decomposition(
     P: int = 16,
     batch_recount="adaptive",
     engine: str = "dense",
+    fd_driver: str = "device",
 ) -> PeelResult:
     """PBNG tip decomposition (§3.2).
 
@@ -204,6 +337,11 @@ def tip_decomposition(
     ``engine="csr"`` peels on the sparse wedge list (``core.csr``) with
     purely incremental pair updates — O(Σ deg²) memory, the only option
     once the n×n wedge matrix stops fitting.
+
+    ``fd_driver`` (csr engine only): ``"device"`` (default) peels each FD
+    partition in a single ``lax.while_loop`` dispatch — zero host↔device
+    transfers inside a partition; ``"host"`` drives rounds from a python
+    loop (the PR-1 baseline kept for A/B benchmarks).
 
     ``batch_recount`` (dense engine only): the §5.1 batch optimization
     knob —
@@ -216,9 +354,11 @@ def tip_decomposition(
     """
     if engine not in ("dense", "csr"):
         raise ValueError(engine)
+    if fd_driver not in ("device", "host"):
+        raise ValueError(fd_driver)
     gg = g if side == "u" else g.transpose()
     if engine == "csr":
-        return _tip_decomposition_csr(gg, P)
+        return _tip_decomposition_csr(gg, P, fd_driver=fd_driver)
     n = gg.n_u
     _dense_guard(gg.n_u, gg.n_v)
     A = jnp.asarray(gg.adjacency())
@@ -231,7 +371,7 @@ def tip_decomposition(
     part = np.full(n, -1, dtype=np.int32)
     sup_init = np.zeros(n, dtype=np.int64)
     ranges = [0]
-    stats = PeelStats()
+    stats = PeelStats(engine="dense", fd_driver="host")
     adapt = _AdaptiveTarget(float(wedge_w.sum()), P)
 
     # counting-work bound ∧cnt (alg.1 complexity) for the adaptive rule
@@ -351,7 +491,9 @@ def _tip_fd_peel(
 # =====================================================================
 # Tip decomposition, csr engine (sparse wedge list, core/csr.py)
 # =====================================================================
-def _tip_decomposition_csr(gg: BipartiteGraph, P: int) -> PeelResult:
+def _tip_decomposition_csr(
+    gg: BipartiteGraph, P: int, fd_driver: str = "device"
+) -> PeelResult:
     """CD + FD on the flat wedge list — no dense matrices anywhere.
 
     Support init and every update are exact int32 ``segment_sum``s over
@@ -377,7 +519,7 @@ def _tip_decomposition_csr(gg: BipartiteGraph, P: int) -> PeelResult:
     part = np.full(n, -1, dtype=np.int32)
     sup_init = np.zeros(n, dtype=np.int64)
     ranges = [0]
-    stats = PeelStats()
+    stats = PeelStats(engine="csr", fd_driver=fd_driver)
     adapt = _AdaptiveTarget(float(wedge_w.sum()), P)
 
     for i in range(P):
@@ -419,7 +561,9 @@ def _tip_decomposition_csr(gg: BipartiteGraph, P: int) -> PeelResult:
         [wedge_w[part == i].sum() for i in range(stats.p_effective)]
     )
     for i in _lpt_order(part_work):
-        rounds = _tip_fd_csr(wed, pair_bf0, part, int(i), sup_init, theta)
+        rounds = _tip_fd_csr(
+            wed, pair_bf0, part, int(i), sup_init, theta, fd_driver=fd_driver
+        )
         stats.rho_fd_total += rounds
         stats.rho_fd_max = max(stats.rho_fd_max, rounds)
 
@@ -439,24 +583,46 @@ def _tip_fd_csr(
     i: int,
     sup_init: np.ndarray,
     theta: np.ndarray,
+    fd_driver: str = "device",
 ) -> int:
     """Bottom-up peel of partition i on the pair list.
 
     Only pairs with both endpoints inside the partition matter: vertices
     of later partitions are never peeled during FD_i, and deltas to them
     are discarded anyway.
+
+    ``fd_driver="device"`` (default) runs the whole cascade in one
+    ``lax.while_loop`` (:func:`_fd_tip_device`) — a single dispatch per
+    partition, zero host round-trips.  ``"host"`` keeps the per-round
+    dispatch loop (the PR-1 baseline, benchmarked against).
     """
     mine = part == i
     if not mine.any():
         return 0
     n = part.size
     mask = mine[wed.pair_a] & mine[wed.pair_b] if wed.n_pairs else np.zeros(0, bool)
-    pa = jnp.asarray(wed.pair_a[mask])
-    pb = jnp.asarray(wed.pair_b[mask])
-    pbf = jnp.asarray(pair_bf0[mask].astype(np.int32))
 
     support0 = np.zeros(n, dtype=np.int64)
     support0[mine] = sup_init[mine]
+
+    if fd_driver == "device":
+        # bucket-pad the pair arrays so the while_loop compiles once per
+        # size bucket, not once per partition
+        size = _bucket_pad(int(mask.sum()))
+        theta_d, rounds, _ = _fd_tip_device(
+            jnp.asarray(mine), jnp.asarray(support0.astype(np.int32)),
+            jnp.asarray(_pad_zeros(wed.pair_a[mask], size)),
+            jnp.asarray(_pad_zeros(wed.pair_b[mask], size)),
+            jnp.asarray(_pad_zeros(pair_bf0[mask].astype(np.int32), size)),
+            n,
+        )
+        theta_np = np.asarray(theta_d).astype(np.int64)
+        theta[mine] = theta_np[mine]
+        return int(rounds)
+
+    pa = jnp.asarray(wed.pair_a[mask])
+    pb = jnp.asarray(wed.pair_b[mask])
+    pbf = jnp.asarray(pair_bf0[mask].astype(np.int32))
 
     def peel(S, sup):
         delta = np.asarray(
@@ -530,14 +696,26 @@ def wing_decomposition(
     P: int = 16,
     engine: str = "beindex",
     be: Optional[BEIndex] = None,
+    fd_driver: str = "device",
+    use_pallas: bool = False,
 ) -> PeelResult:
     """PBNG wing decomposition (§3.3).
 
     ``engine`` ∈ {"beindex", "dense", "csr"}: BE-Index incremental
     updates, masked-matmul re-counts, or sparse wedge-list incremental
-    updates (``core.csr`` — the scalable path)."""
+    updates (``core.csr`` — the scalable path).
+
+    ``fd_driver`` (csr engine only): ``"device"`` (default) peels each FD
+    partition in one ``lax.while_loop`` dispatch; ``"host"`` keeps the
+    per-round python loop as an A/B baseline.
+
+    ``use_pallas`` (csr engine only): run CD support updates through the
+    blocked ``kernels.support_update`` Pallas kernel on the pairs-major
+    slot layout (interpret mode off-TPU) instead of flat segment_sums."""
     if engine not in ("beindex", "dense", "csr"):
         raise ValueError(engine)
+    if fd_driver not in ("device", "host"):
+        raise ValueError(fd_driver)
     m = g.m
     edges = jnp.asarray(g.edges.astype(np.int32))
     shape = (g.n_u, g.n_v)
@@ -562,6 +740,11 @@ def wing_decomposition(
         if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
             raise OverflowError("wing supports exceed int32; shard the graph")
         support = jnp.asarray(sup0.astype(np.int32))
+        if use_pallas:
+            slots = csr.pack_update_slots(wed)
+            slot_e1 = jnp.asarray(slots["e1"])
+            slot_e2 = jnp.asarray(slots["e2"])
+            alive_slots = jnp.asarray(slots["valid"])
     else:
         _dense_guard(g.n_u, g.n_v)
         support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
@@ -572,7 +755,10 @@ def wing_decomposition(
     part = np.full(m, -1, dtype=np.int32)
     sup_init = np.zeros(m, dtype=np.int64)
     ranges = [0]
-    stats = PeelStats()
+    stats = PeelStats(
+        engine=engine,
+        fd_driver=fd_driver if engine == "csr" else "host",
+    )
     # workload proxy for edges = current support (§3.3.2)
     adapt = _AdaptiveTarget(float(sup_np.sum()), P)
 
@@ -603,10 +789,16 @@ def wing_decomposition(
                 )
                 stats.updates += int(nupd)
             elif engine == "csr":
-                alive_w, Wp, support, nupd = csr.wing_update_csr(
-                    jnp.asarray(active), alive_w, Wp, support,
-                    we1, we2, wpj, n_pairs, m,
-                )
+                if use_pallas:
+                    alive_slots, Wp, support, nupd = csr.wing_update_slots(
+                        jnp.asarray(active), alive_slots, Wp, support,
+                        slot_e1, slot_e2, n_pairs, m,
+                    )
+                else:
+                    alive_w, Wp, support, nupd = csr.wing_update_csr(
+                        jnp.asarray(active), alive_w, Wp, support,
+                        we1, we2, wpj, n_pairs, m,
+                    )
                 stats.updates += int(nupd)
             else:
                 support = _wing_recount(shape, edges, jnp.asarray(alive))
@@ -633,7 +825,9 @@ def wing_decomposition(
             stats.updates += nupd
     elif engine == "csr":
         for i in order:
-            rounds, nupd = _wing_fd_csr(wed, part, int(i), sup_init, theta)
+            rounds, nupd = _wing_fd_csr(
+                wed, part, int(i), sup_init, theta, fd_driver=fd_driver
+            )
             stats.rho_fd_total += rounds
             stats.rho_fd_max = max(stats.rho_fd_max, rounds)
             stats.updates += nupd
@@ -695,6 +889,7 @@ def _wing_fd_csr(
     i: int,
     sup_init: np.ndarray,
     theta: np.ndarray,
+    fd_driver: str = "device",
 ) -> Tuple[int, int]:
     """FD for partition i, csr engine.
 
@@ -703,6 +898,10 @@ def _wing_fd_csr(
     are re-derived for the subgraph, then partition-i edges peel with the
     incremental update.  Deltas landing on later-partition edges are
     computed but never read — their FD runs from its own ⋈init snapshot.
+
+    ``fd_driver="device"`` (default) runs the whole cascade in one
+    ``lax.while_loop`` (:func:`_fd_wing_device`); ``"host"`` keeps the
+    per-round dispatch loop (the PR-1 baseline, benchmarked against).
     """
     mine = part == i
     if not mine.any():
@@ -713,18 +912,39 @@ def _wing_fd_csr(
         (part[wed.wedge_e1] >= i) & (part[wed.wedge_e2] >= i)
         if wed.n_wedges else np.zeros(0, bool)
     )
-    kwe1 = jnp.asarray(wed.wedge_e1[keep])
-    kwe2 = jnp.asarray(wed.wedge_e2[keep])
-    kwp = jnp.asarray(wed.wedge_pair[keep])
     Wp = jnp.asarray(
         np.bincount(
             wed.wedge_pair[keep], minlength=max(n_pairs, 1)
         ).astype(np.int32)
     )
-    alive_w = jnp.ones((int(keep.sum()),), dtype=bool)
 
     support_full = np.zeros(m, dtype=np.int64)
     support_full[mine] = sup_init[mine]
+
+    if fd_driver == "device":
+        # bucket-pad the wedge arrays (dead zero wedges are inert) so
+        # the while_loop compiles once per size bucket
+        n_kept = int(keep.sum())
+        size = _bucket_pad(n_kept)
+        alive_w = np.zeros(size, dtype=bool)
+        alive_w[:n_kept] = True
+        theta_d, rounds, nupd = _fd_wing_device(
+            jnp.asarray(mine), jnp.asarray(support_full.astype(np.int32)),
+            jnp.asarray(alive_w), Wp,
+            jnp.asarray(_pad_zeros(wed.wedge_e1[keep], size)),
+            jnp.asarray(_pad_zeros(wed.wedge_e2[keep], size)),
+            jnp.asarray(_pad_zeros(wed.wedge_pair[keep], size)),
+            n_pairs, m,
+        )
+        theta_np = np.asarray(theta_d).astype(np.int64)
+        theta[mine] = theta_np[mine]
+        return int(rounds), int(nupd)
+
+    kwe1 = jnp.asarray(wed.wedge_e1[keep])
+    kwe2 = jnp.asarray(wed.wedge_e2[keep])
+    kwp = jnp.asarray(wed.wedge_pair[keep])
+    alive_w = jnp.ones((int(keep.sum()),), dtype=bool)
+
     support = jnp.asarray(support_full.astype(np.int32))
     nupd = 0
 

@@ -16,6 +16,7 @@ import numpy as np
 from .bloom_update import bloom_update_pallas
 from .butterfly_count import matmul_pallas, vertex_count_pallas
 from .flash_attention import flash_attention_pallas
+from .support_update import support_update_pallas
 from .wedge_count import wedge_count_pallas
 
 __all__ = [
@@ -25,6 +26,7 @@ __all__ = [
     "flash_attention",
     "pack_blooms",
     "pair_wedge_counts",
+    "support_update",
     "default_interpret",
 ]
 
@@ -93,6 +95,36 @@ def pair_wedge_counts(
     s = _pad_to(_pad_to(slots.astype(jnp.float32), bp, 0), bk, 1)
     W, bf = wedge_count_pallas(s, bp=bp, bk=bk, interpret=interpret)
     return W[:n], bf[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bk", "interpret"))
+def support_update(
+    pe1: jax.Array,
+    pe2: jax.Array,
+    alive: jax.Array,
+    W: jax.Array,
+    bp: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One csr support-update round through the blocked Pallas kernel.
+
+    ``pe1``/``pe2``/``alive`` are (n_pairs, K) pairs-major slot flags
+    (``core.csr.pack_update_slots``), ``W`` the per-pair alive wedge
+    counts.  Padding to (bp, bk) tiles is handled here.  Returns
+    (contrib1, contrib2, c) trimmed back to the input shape — per-slot
+    losses for each slot's two edges plus dying wedges per pair."""
+    n, kdim = pe1.shape
+
+    def padf(x):
+        return _pad_to(_pad_to(x.astype(jnp.float32), bp, 0), bk, 1)
+
+    c1, c2, c = support_update_pallas(
+        padf(pe1), padf(pe2), padf(alive),
+        _pad_to(W.astype(jnp.float32), bp, 0),
+        bp=bp, bk=bk, interpret=interpret,
+    )
+    return c1[:n, :kdim], c2[:n, :kdim], c[:n]
 
 
 def pack_blooms(

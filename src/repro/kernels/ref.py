@@ -10,6 +10,7 @@ __all__ = [
     "bloom_update_ref",
     "flash_attention_ref",
     "pair_wedge_counts_ref",
+    "support_update_ref",
 ]
 
 
@@ -18,6 +19,27 @@ def pair_wedge_counts_ref(slots: jax.Array):
     bf = C(W, 2)."""
     w = jnp.sum(slots.astype(jnp.float32), axis=1)
     return w, w * (w - 1.0) * 0.5
+
+
+def support_update_ref(pe1, pe2, alive, W):
+    """Oracle for the blocked support-update kernel, pairs-major layout.
+
+    Inputs are (n_pairs, K) f32 flags (pe1/pe2 = "slot's edge i peeled",
+    alive = wedge alive) plus per-pair alive wedge counts W.  Returns
+    (contrib1, contrib2, c): the per-slot butterfly losses charged to
+    each slot's two edges and the dying-wedge count per pair."""
+    pe1 = pe1.astype(jnp.float32)
+    pe2 = pe2.astype(jnp.float32)
+    alive = alive.astype(jnp.float32)
+    dies = alive * jnp.maximum(pe1, pe2)
+    c = jnp.sum(dies, axis=1)
+    surv_loss = (alive - dies) * c[:, None]
+    widow = dies * (W.astype(jnp.float32) - 1.0)[:, None]
+    return (
+        (1.0 - pe1) * widow + surv_loss,
+        (1.0 - pe2) * widow + surv_loss,
+        c,
+    )
 
 
 def vertex_butterflies_ref(A: jax.Array) -> jax.Array:

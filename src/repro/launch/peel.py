@@ -29,6 +29,7 @@ def _dryrun() -> int:
     from repro.core.graph import powerlaw_bipartite
     from repro.core.peel import wing_decomposition
     from repro.launch.mesh import make_peel_mesh
+    from repro.sharding.compat import shard_map
 
     mesh = make_peel_mesh(512)
     g = powerlaw_bipartite(400, 200, 2000, seed=1)
@@ -65,9 +66,9 @@ def _dryrun() -> int:
                   ("le", "lt", "lb", "alive0", "canon", "k0", "sup0",
                    "mine"))
     vb = jax.vmap(D._fd_body_one_partition)
-    fd = jax.shard_map(vb, mesh=mesh,
-                       in_specs=tuple(P("peel") for _ in args_),
-                       out_specs=(P("peel"), P("peel")))
+    fd = shard_map(vb, mesh=mesh,
+                   in_specs=tuple(P("peel") for _ in args_),
+                   out_specs=(P("peel"), P("peel")))
     fd_comp = jax.jit(fd).lower(*args_).compile()
     fd_txt = fd_comp.as_text()
     bad = [w for w in ("all-reduce", "all-gather", "reduce-scatter",
@@ -77,8 +78,47 @@ def _dryrun() -> int:
     print("[peel-dryrun] FD peel compiled at 512 devices; "
           "NO collectives in HLO ✓")
     ca = fd_comp.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):  # older jax returns [dict]
+        ca = ca[0] if ca else {}
     print(f"[peel-dryrun] FD flops/device={ca.get('flops', -1):.3e} "
           f"bytes={ca.get('bytes accessed', -1):.3e}")
+
+    # --- csr engine at 512 devices: wedge-sharded CD + wedge-packed FD
+    from repro.core import csr
+
+    wed = csr.build_wedges(g)
+    st = D.shard_wedges(wed, 512)
+    cfn = D.make_cd_round_csr(mesh, "peel", st.n_pairs, g.m)
+    sup = jnp.concatenate([st.support, jnp.zeros((1,), jnp.int32)])
+    ctxt = cfn.lower(peeled, st.alive_w, st.W_pad, sup,
+                     st.we1, st.we2, st.wp).compile().as_text()
+    print(f"[peel-dryrun] csr CD round compiled at 512 devices; "
+          f"all-reduce sites={ctxt.count('all-reduce')}")
+
+    res_c = wing_decomposition(g, P=64, engine="csr")
+    packed_c = D.pack_fd_partitions_csr(
+        wed, res_c.part, res_c.support_init, res_c.stats.p_effective)
+    n_parts_c = packed_c["we1"].shape[0]
+    pad_c = (-n_parts_c) % 512
+
+    def padc(x):
+        if pad_c == 0:
+            return jnp.asarray(x)
+        fill = np.zeros((pad_c,) + x.shape[1:], dtype=x.dtype)
+        return jnp.asarray(np.concatenate([x, fill], 0))
+
+    args_c = tuple(padc(packed_c[k]) for k in
+                   ("we1", "we2", "wp", "alive0", "W0", "sup0", "mine"))
+    fd_c = shard_map(jax.vmap(D._fd_body_one_partition_csr), mesh=mesh,
+                     in_specs=tuple(P("peel") for _ in args_c),
+                     out_specs=(P("peel"), P("peel")))
+    fd_c_txt = jax.jit(fd_c).lower(*args_c).compile().as_text()
+    bad_c = [w for w in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+             if w in fd_c_txt]
+    assert not bad_c, f"csr FD must be collective-free, found {bad_c}"
+    print("[peel-dryrun] csr FD peel compiled at 512 devices; "
+          "NO collectives in HLO ✓")
     return 0
 
 
@@ -97,20 +137,30 @@ def _run(args) -> int:
         g = powerlaw_bipartite(args.n_u, args.n_v, args.m, seed=args.seed)
     print(f"[peel] graph |U|={g.n_u} |V|={g.n_v} |E|={g.m}")
 
+    stats_out = {}
     if args.mode == "wing":
         if len(jax.devices()) > 1:
             mesh = make_peel_mesh()
-            theta, stats = D.distributed_wing_decomposition(
-                g, mesh, P_parts=args.parts)
-            print(f"[peel] distributed over {stats['n_dev']} devices: "
-                  f"{stats}")
+            if args.engine in ("beindex", "csr"):
+                mesh_engine = args.engine
+            else:
+                mesh_engine = "beindex"
+                print(f"[peel] no distributed '{args.engine}' engine; "
+                      "using beindex (pass --engine beindex|csr)")
+            theta, stats_out = D.distributed_wing_decomposition(
+                g, mesh, P_parts=args.parts, engine=mesh_engine)
+            print(f"[peel] distributed over {stats_out['n_dev']} devices: "
+                  f"{stats_out}")
         else:
-            res = wing_decomposition(g, P=args.parts, engine=args.engine)
+            res = wing_decomposition(
+                g, P=args.parts, engine=args.engine,
+                fd_driver=args.fd_driver)
             theta = res.theta
             s = res.stats
-            print(f"[peel] rho_cd={s.rho_cd} rho_fd_max={s.rho_fd_max} "
-                  f"updates={s.updates} sync_reduction="
-                  f"{s.sync_reduction:.1f}x")
+            stats_out = s.as_dict()
+            print(f"[peel] engine={s.engine} rho_cd={s.rho_cd} "
+                  f"rho_fd_max={s.rho_fd_max} updates={s.updates} "
+                  f"sync_reduction={s.sync_reduction:.1f}x")
     else:
         if args.engine in ("dense", "csr"):
             tip_engine = args.engine
@@ -119,17 +169,19 @@ def _run(args) -> int:
             print(f"[peel] tip has no '{args.engine}' engine; using dense "
                   "(pass --engine dense|csr to silence)")
         res = tip_decomposition(
-            g, side=args.side, P=args.parts, engine=tip_engine)
+            g, side=args.side, P=args.parts, engine=tip_engine,
+            fd_driver=args.fd_driver)
         theta = res.theta
         s = res.stats
-        print(f"[peel] rho_cd={s.rho_cd} rho_fd_max={s.rho_fd_max} "
-              f"recounts={s.recounts}")
+        stats_out = s.as_dict()
+        print(f"[peel] engine={s.engine} rho_cd={s.rho_cd} "
+              f"rho_fd_max={s.rho_fd_max} recounts={s.recounts}")
 
     print(f"[peel] theta: max={int(theta.max()) if theta.size else 0} "
           f"levels={len(set(theta.tolist()))}")
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(dict(theta=theta.tolist()), f)
+            json.dump(dict(theta=theta.tolist(), stats=stats_out), f)
     return 0
 
 
@@ -143,6 +195,10 @@ def main():
     ap.add_argument("--parts", type=int, default=16)
     ap.add_argument("--engine", default="beindex",
                     choices=["beindex", "dense", "csr"])
+    ap.add_argument("--fd-driver", default="device",
+                    choices=["device", "host"],
+                    help="csr FD cascade driver: one while_loop per "
+                         "partition (device) or per-round dispatch (host)")
     ap.add_argument("--side", default="u")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)

@@ -1,3 +1,4 @@
+from .compat import shard_map
 from .partition import (
     LOGICAL_RULES,
     batch_shardings,
@@ -8,6 +9,7 @@ from .partition import (
 )
 
 __all__ = [
+    "shard_map",
     "LOGICAL_RULES",
     "batch_shardings",
     "cache_shardings",

@@ -1,0 +1,27 @@
+"""jax version compatibility for SPMD primitives.
+
+The repo pins a jax whose ``shard_map`` still lives under
+``jax.experimental.shard_map``; newer releases promote it to
+``jax.shard_map``.  Every SPMD call site imports :func:`shard_map` from
+here so the peeling engines run on both.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map"]
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # jax < 0.6
+    from functools import wraps
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @wraps(_shard_map)
+    def shard_map(f, **kw):
+        # the old replication checker has no rule for while_loop (our FD
+        # bodies are one big while_loop), so it must be off here; newer
+        # jax dropped the argument entirely
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, **kw)

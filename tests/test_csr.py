@@ -1,6 +1,7 @@
 """CSR wedge-list engine ≡ BUP oracle, plus wedge-count kernel parity."""
 import os
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -121,6 +122,37 @@ def test_wing_csr_matches_bup_property(g, P):
     assert np.array_equal(got, want)
 
 
+@settings(max_examples=15, deadline=None)
+@given(graphs(max_u=12, max_v=10, max_m=40), st.integers(1, 4))
+def test_wing_engines_and_fd_drivers_agree_property(g, P):
+    """csr (device while_loop FD), csr (host-loop FD) and dense must all
+    produce identical theta — and the two FD drivers identical round /
+    update counts (same cascade, different residency)."""
+    dev = wing_decomposition(g, P=P, engine="csr", fd_driver="device")
+    host = wing_decomposition(g, P=P, engine="csr", fd_driver="host")
+    dense = wing_decomposition(g, P=P, engine="dense")
+    assert np.array_equal(dev.theta, host.theta)
+    assert np.array_equal(dev.theta, dense.theta)
+    assert dev.stats.rho_fd_total == host.stats.rho_fd_total
+    assert dev.stats.updates == host.stats.updates
+    assert dev.stats.fd_driver == "device"
+    assert host.stats.fd_driver == "host"
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(max_u=12, max_v=10, max_m=40), st.integers(1, 4),
+       st.sampled_from(["u", "v"]))
+def test_tip_engines_and_fd_drivers_agree_property(g, P, side):
+    dev = tip_decomposition(g, side=side, P=P, engine="csr",
+                            fd_driver="device")
+    host = tip_decomposition(g, side=side, P=P, engine="csr",
+                             fd_driver="host")
+    dense = tip_decomposition(g, side=side, P=P, engine="dense")
+    assert np.array_equal(dev.theta, host.theta)
+    assert np.array_equal(dev.theta, dense.theta)
+    assert dev.stats.rho_fd_total == host.stats.rho_fd_total
+
+
 # -------------------------------------------------------- scale / guard
 def test_dense_engine_guarded_csr_peels_50k_graph():
     """The acceptance graph: 50k×50k, avg degree 8.
@@ -173,6 +205,102 @@ def test_wedge_count_kernel_matches_segment_sum(seed):
             csr.edge_butterflies_csr(w, alive, use_pallas=True, interpret=True)
         )
         assert np.array_equal(s_seg, s_pal)
+
+
+@pytest.mark.parametrize("shape", [(7, 30), (64, 128), (130, 260)])
+def test_support_update_kernel_matches_ref(shape):
+    """Interpret-mode parity: blocked support-update kernel vs oracle."""
+    rng = np.random.default_rng(shape[1])
+    alive = rng.random(shape) > 0.3
+    pe1 = rng.random(shape) > 0.6
+    pe2 = rng.random(shape) > 0.6
+    W = rng.integers(0, 40, shape[0])
+    args = (jnp.asarray(pe1), jnp.asarray(pe2), jnp.asarray(alive),
+            jnp.asarray(W.astype(np.float32)))
+    c1, c2, c = ops.support_update(*args, interpret=True)
+    r1, r2, rc = kref.support_update_ref(*args)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(rc))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_wing_update_slots_matches_segment_sum(seed):
+    """One Pallas slot-layout update round == one flat wing_update_csr
+    round (support, W, alive, and update counts all identical)."""
+    g = random_bipartite(22, 18, 100, seed=seed)
+    w = csr.build_wedges(g)
+    rng = np.random.default_rng(seed + 500)
+    peeled = rng.random(g.m) < 0.3
+    we1, we2, wp = map(jnp.asarray, (w.wedge_e1, w.wedge_e2, w.wedge_pair))
+    W0 = csr.pair_wedge_counts(w)
+    sup0 = csr.edge_butterflies_csr(w)
+    a_f, W_f, s_f, n_f = csr.wing_update_csr(
+        jnp.asarray(peeled), jnp.ones((w.n_wedges,), bool), W0, sup0,
+        we1, we2, wp, w.n_pairs, g.m)
+    slots = csr.pack_update_slots(w)
+    a_s, W_s, s_s, n_s = csr.wing_update_slots(
+        jnp.asarray(peeled), jnp.asarray(slots["valid"]), W0, sup0,
+        jnp.asarray(slots["e1"]), jnp.asarray(slots["e2"]),
+        w.n_pairs, g.m, interpret=True)
+    assert np.array_equal(np.asarray(W_f), np.asarray(W_s))
+    assert np.array_equal(np.asarray(s_f), np.asarray(s_s))
+    assert int(n_f) == int(n_s)
+    packed = csr.pack_wedge_slots(w)
+    flat_alive = np.zeros(w.n_wedges, bool)
+    flat_alive[np.maximum(packed.idx, 0)[packed.valid]] = np.asarray(
+        a_s)[packed.valid]
+    assert np.array_equal(flat_alive, np.asarray(a_f))
+
+
+def test_wing_csr_pallas_cd_matches():
+    """Full decomposition with the Pallas CD update path ≡ segment_sum."""
+    g = powerlaw_bipartite(60, 40, 260, seed=3)
+    r0 = wing_decomposition(g, P=6, engine="csr")
+    r1 = wing_decomposition(g, P=6, engine="csr", use_pallas=True)
+    assert np.array_equal(r0.theta, r1.theta)
+    assert r0.stats.rho_cd == r1.stats.rho_cd
+    assert r0.stats.updates == r1.stats.updates
+
+
+def test_fd_device_driver_is_single_while_loop():
+    """The acceptance property: one partition's csr FD cascade lowers to
+    exactly one while op — zero host round-trips inside a partition."""
+    from repro.core.peel import _fd_tip_device, _fd_wing_device
+
+    g = random_bipartite(16, 13, 48, seed=0)
+    w = csr.build_wedges(g)
+    mine = jnp.ones((g.n_u,), bool)
+    sup0 = jnp.asarray(csr.vertex_butterflies_csr(w).astype(np.int32))
+    jaxpr = jax.make_jaxpr(
+        lambda *a: _fd_tip_device(*a, n=g.n_u)
+    )(mine, sup0, jnp.asarray(w.pair_a), jnp.asarray(w.pair_b),
+      jnp.asarray(w.pair_butterflies0().astype(np.int32)))
+    assert str(jaxpr).count("while[") == 1
+
+    mine_e = jnp.ones((g.m,), bool)
+    sup_e = jnp.asarray(csr.edge_butterflies0(w).astype(np.int32))
+    jaxpr_w = jax.make_jaxpr(
+        lambda *a: _fd_wing_device(*a, n_pairs=w.n_pairs, m=g.m)
+    )(mine_e, sup_e, jnp.ones((w.n_wedges,), bool),
+      jnp.asarray(w.W0.astype(np.int32)),
+      jnp.asarray(w.wedge_e1), jnp.asarray(w.wedge_e2),
+      jnp.asarray(w.wedge_pair))
+    assert str(jaxpr_w).count("while[") == 1
+
+
+def test_peel_stats_per_engine_rho():
+    """sync_reduction / as_dict must reflect the engine that actually
+    ran — csr and dense report their own rho, tagged with the engine."""
+    g = random_bipartite(20, 16, 70, seed=2)
+    rc = wing_decomposition(g, P=4, engine="csr")
+    rd = wing_decomposition(g, P=4, engine="dense")
+    assert rc.stats.engine == "csr" and rd.stats.engine == "dense"
+    dc = rc.stats.as_dict()
+    assert dc["rho"] == rc.stats.rho_cd
+    assert dc["sync_reduction"] == round(
+        rc.stats.rho_fd_total / max(rc.stats.rho_cd, 1), 3)
+    assert dc["fd_driver"] == "device"
 
 
 def test_pad_segments_roundtrip():

