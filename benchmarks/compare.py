@@ -25,7 +25,12 @@ the gate when the commit message contains ``[bench-reset]``.
 
 ``--normalize NAME`` divides every row by row NAME of its own run
 before comparing — a machine-independent mode (at the cost of the
-normalizer row's noise) for baselines that cannot come from CI.
+normalizer row's noise, and blind to regressions in the normalizer row
+itself) for baselines that cannot come from CI.  Such baselines must be
+written with ``--write-merged ... --normalize NAME`` so both sides of
+the gate are min-of-per-run-ratios; min-merging raw microseconds and
+normalizing afterwards mixes minima from different runs and biases
+every ratio low.
 """
 from __future__ import annotations
 
@@ -42,14 +47,37 @@ def load_rows(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
 
 
-def min_merge(paths) -> dict:
+def min_merge(paths, normalize: str = "", with_src: bool = False):
     """Per-row minimum across several runs of the same bench — best-of-N
     across *processes*, the only statistic stable enough to gate on when
-    single runs can vary >1.5x from scheduler/allocator noise."""
+    single runs can vary >1.5x from scheduler/allocator noise.
+
+    With ``normalize``, every run's rows are first divided by that
+    run's OWN normalizer row (each process is its own clock), and the
+    minimum is taken over the *ratios*.  Normalizing the min-merge
+    instead would let one fast outlier sample of the normalizer row
+    inflate every other row's ratio and fail the gate spuriously.
+
+    ``with_src=True`` additionally returns ``{name: path}`` of the run
+    that achieved each row's minimum (the argmin run's full row dict is
+    what ``--write-merged`` archives, so derived stats stay consistent
+    with the timing they rode in with)."""
     merged: dict = {}
+    src: dict = {}
     for path in paths:
-        for name, us in load_rows(path).items():
-            merged[name] = min(us, merged.get(name, float("inf")))
+        rows = load_rows(path)
+        if normalize:
+            if normalize not in rows:
+                raise SystemExit(
+                    f"normalizer row '{normalize}' missing from {path}")
+            scale = 1.0 / max(rows[normalize], 1e-9)
+            rows = {n: us * scale for n, us in rows.items()}
+        for name, us in rows.items():
+            if us < merged.get(name, float("inf")):
+                merged[name] = us
+                src[name] = path
+    if with_src:
+        return merged, src
     return merged
 
 
@@ -57,14 +85,18 @@ def compare(
     baseline: dict, new: dict, threshold: float, min_us: float,
     normalize: str = "",
 ) -> int:
-    scale = 1.0
+    """``new`` rows must already be in normalizer units when
+    ``normalize`` is set (see :func:`min_merge`); the baseline converts
+    here with its OWN normalizer row.  Hotness (``min_us``) always
+    checks the baseline's raw microseconds."""
+    base_norm = 1.0
     if normalize:
-        if normalize not in baseline or normalize not in new:
-            print(f"normalizer row '{normalize}' missing from "
-                  f"{'baseline' if normalize not in baseline else 'new run'}")
+        if normalize not in baseline:
+            print(f"normalizer row '{normalize}' missing from baseline")
             return 1
-        scale = baseline[normalize] / max(new[normalize], 1e-9)
-        print(f"normalizing by {normalize}: new timings x{scale:.3f}")
+        base_norm = max(baseline[normalize], 1e-9)
+        print(f"normalizing by {normalize}: per-run ratios, displayed in "
+              "baseline-equivalent us")
     regressions = []
     width = max((len(n) for n in baseline), default=4)
     print(f"{'name':<{width}}  {'base_us':>12}  {'new_us':>12}  {'ratio':>6}")
@@ -78,7 +110,7 @@ def compare(
             if hot:
                 regressions.append((name, base, float("nan"), float("nan")))
             continue
-        cur = new[name] * scale
+        cur = new[name] * base_norm if normalize else new[name]
         ratio = cur / max(base, 1e-9)
         hot = base >= min_us
         flag = ""
@@ -90,7 +122,8 @@ def compare(
         print(f"{name:<{width}}  {base:>12.1f}  {cur:>12.1f}  "
               f"{ratio:>6.2f}{flag}")
     for name in sorted(set(new) - set(baseline)):
-        print(f"{name:<{width}}  {'NEW':>12}  {new[name]:>12.1f}  {'—':>6}")
+        cur = new[name] * base_norm if normalize else new[name]
+        print(f"{name:<{width}}  {'NEW':>12}  {cur:>12.1f}  {'—':>6}")
     if regressions:
         print(f"\n{len(regressions)} hot row(s) slower than "
               f"{threshold}x baseline (or missing):")
@@ -122,22 +155,41 @@ def main() -> int:
                          "in baseline schema (baseline refresh) and exit")
     args = ap.parse_args()
     if args.write_merged:
-        merged = min_merge(args.new)
+        # With --normalize the stored us values are min-of-per-run-RATIOS
+        # rescaled by the min-merged normalizer, so compare's
+        # base/base_norm reproduces exactly the per-run-ratio minimum —
+        # a raw min-merge would mix minima from different runs and bias
+        # every normalized ratio below 1 (silently loosening the gate).
+        merged, src = min_merge(args.new, args.normalize, with_src=True)
+        if args.normalize:
+            norm_min = min_merge(args.new)[args.normalize]
+            merged = {n: r * norm_min for n, r in merged.items()}
         with open(args.new[0]) as f:
             payload = json.load(f)
-        by_name = {r["name"]: r for p in args.new
-                   for r in json.load(open(p))["rows"]
-                   if abs(float(r["us_per_call"]) - merged[r["name"]]) < 1e-9}
-        payload["rows"] = [by_name[n] for n in sorted(merged)]
+        # archive each row's derived stats from the run that PRODUCED
+        # its minimum — mixing run 1's metadata with run 3's timing
+        # would commit internally inconsistent baseline rows
+        rows_by_run = {
+            p: {r["name"]: r for r in json.load(open(p))["rows"]}
+            for p in args.new
+        }
+        rows = []
+        for n in sorted(merged):
+            row = dict(rows_by_run[src[n]][n])
+            row["us_per_call"] = merged[n]
+            rows.append(row)
+        payload["rows"] = rows
         payload["note"] = (
-            f"min-merge of {len(args.new)} smoke runs "
-            "(see benchmarks/compare.py)")
+            f"min-merge of {len(args.new)} smoke runs"
+            + (f", per-run normalized by {args.normalize}"
+               if args.normalize else "")
+            + " (see benchmarks/compare.py)")
         with open(args.write_merged, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"[bench] wrote min-merged baseline -> {args.write_merged}")
         return 0
     return compare(
-        load_rows(args.baseline), min_merge(args.new),
+        load_rows(args.baseline), min_merge(args.new, args.normalize),
         args.threshold, args.min_us, args.normalize,
     )
 

@@ -1,0 +1,59 @@
+"""Hierarchy subsystem benchmark: forest build time + batched query
+throughput (the serving-path numbers the ROADMAP north star asks for).
+
+Rows:
+  * ``hier.<ds>.build``    — θ → packed forest (batched label-propagation
+    components + host assembly), best-of-2 so one-time jit compilation
+    of the while_loop kernel is excluded.
+  * ``hier.<ds>.query50k`` — 50k mixed queries (max_k / node_of / LCA /
+    LCA-level / subtree-size) answered by :class:`HierarchyService` in
+    4096-slot batches; ``qps`` is the headline (target ≥ 10k/s on the
+    smoke graph, trivially exceeded on real hardware).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.graph import paper_proxy_dataset
+from repro.core.peel import wing_decomposition
+from repro.hierarchy import HierarchyService, build_hierarchy
+
+from .common import emit, timed
+
+N_QUERIES = 50_000
+BATCH = 4096
+
+
+def run(small: bool = True):
+    names = ["fr"] if small else ["fr", "di_af", "digg"]
+    for name in names:
+        g = paper_proxy_dataset(name)
+        res, _ = timed(wing_decomposition, g, P=16, engine="csr")
+
+        h, t_build = timed(build_hierarchy, g, res, repeat=2)
+        emit(f"hier.{name}.build", t_build,
+             nodes=h.n_nodes, levels=int(h.levels.size), m=g.m)
+
+        svc = HierarchyService(h, batch=BATCH)
+        rng = np.random.default_rng(0)
+        ops = rng.integers(0, 5, N_QUERIES).astype(np.int32)
+        a = rng.integers(0, g.m, N_QUERIES).astype(np.int32)
+        b = rng.integers(0, g.m, N_QUERIES).astype(np.int32)
+        a = np.where(ops == 4, a % h.n_nodes, a)  # subtree_size takes a node
+
+        def serve_all():
+            for i in range(0, N_QUERIES, BATCH):
+                svc.query_batch(ops[i:i + BATCH], a[i:i + BATCH],
+                                b[i:i + BATCH])
+
+        _, t_q = timed(serve_all, repeat=2)  # best-of-2 excludes compile
+        qps = N_QUERIES / max(t_q, 1e-9)
+        emit(f"hier.{name}.query50k", t_q,
+             qps=int(qps), batch=BATCH, n_queries=N_QUERIES)
+        if qps < 10_000:
+            print(f"[bench] WARNING: hierarchy qps {qps:.0f} below the "
+                  "10k/s smoke target", flush=True)
+
+
+if __name__ == "__main__":
+    run(small=False)

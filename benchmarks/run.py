@@ -19,12 +19,13 @@ def main() -> int:
     args = ap.parse_args()
     small = not args.full
 
-    from . import (counting, optimizations, p_sweep, scaling,
+    from . import (counting, hierarchy, optimizations, p_sweep, scaling,
                    tip_decomposition, wing_decomposition)
     mods = dict(
         counting=counting,
         wing=wing_decomposition,
         tip=tip_decomposition,
+        hierarchy=hierarchy,
         p_sweep=p_sweep,
         optimizations=optimizations,
         scaling=scaling,

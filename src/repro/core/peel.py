@@ -90,6 +90,15 @@ class PeelStats:
         d["sync_reduction"] = round(self.sync_reduction, 3)
         return d
 
+    @classmethod
+    def from_dict(cls, d: dict) -> "PeelStats":
+        """Inverse of :meth:`as_dict` — tolerates the derived keys
+        (``rho``, ``sync_reduction``) that :meth:`as_dict` appends, so a
+        stats row can round-trip through JSON / the hierarchy serializer
+        without losing the engine / fd_driver provenance tags."""
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
 
 @dataclasses.dataclass
 class PeelResult:
@@ -98,6 +107,20 @@ class PeelResult:
     ranges: np.ndarray       # (P+1,) range boundaries θ(1..P+1)
     support_init: np.ndarray  # ⋈init vector
     stats: PeelStats
+
+    def provenance(self) -> dict:
+        """Everything besides θ a downstream consumer (the hierarchy
+        builder/serializer) needs to reconstruct how this decomposition
+        was produced: engine-tagged stats plus the CD partition
+        assignment, range boundaries, and ⋈init — together they rebuild
+        the peeling order (entities peel by partition, then by θ within
+        the partition from the recorded support snapshot)."""
+        return dict(
+            stats=self.stats.as_dict(),
+            part=np.asarray(self.part),
+            ranges=np.asarray(self.ranges),
+            support_init=np.asarray(self.support_init),
+        )
 
 
 # =====================================================================

@@ -19,6 +19,10 @@ __all__ = [
     "bup_tip_ref",
     "bup_wing_ref",
     "wedge_count_ref",
+    "wing_components_ref",
+    "tip_components_ref",
+    "wing_hierarchy_ref",
+    "tip_hierarchy_ref",
 ]
 
 
@@ -145,3 +149,99 @@ def bup_wing_ref(g: BipartiteGraph) -> np.ndarray:
                     if alive[other]:
                         support[other] = max(k, support[other] - 1)
     return theta
+
+
+# ------------------------------------------------------ hierarchy oracle
+class _UnionFind:
+    def __init__(self, n: int):
+        self.p = list(range(n))
+
+    def find(self, x: int) -> int:
+        while self.p[x] != x:
+            self.p[x] = self.p[self.p[x]]
+            x = self.p[x]
+        return x
+
+    def union(self, a: int, b: int) -> None:
+        ra, rb = self.find(a), self.find(b)
+        if ra != rb:
+            self.p[max(ra, rb)] = min(ra, rb)
+
+
+def wing_components_ref(g: BipartiteGraph, alive_e: np.ndarray) -> List[frozenset]:
+    """Butterfly-connected components of an edge-induced subgraph.
+
+    Brute force from neighbor sets: for every U pair (u1, u2), the
+    common V neighbors reached through *alive* edges; any two of them
+    form a butterfly on the pair, so all of the pair's alive edges merge
+    into one group whenever ≥ 2 common neighbors exist.  Components are
+    the transitive closure (union-find); edges in no butterfly stay out.
+    """
+    eid: Dict[Tuple[int, int], int] = {
+        (int(u), int(v)): i for i, (u, v) in enumerate(g.edges)
+    }
+    adj: List[set] = [set() for _ in range(g.n_u)]
+    for i, (u, v) in enumerate(g.edges):
+        if alive_e[i]:
+            adj[int(u)].add(int(v))
+    uf = _UnionFind(g.m)
+    in_bf = np.zeros(g.m, dtype=bool)
+    for u1 in range(g.n_u):
+        for u2 in range(u1 + 1, g.n_u):
+            common = adj[u1] & adj[u2]
+            if len(common) < 2:
+                continue
+            es = [eid[(u1, v)] for v in common] + [eid[(u2, v)] for v in common]
+            in_bf[es] = True
+            for e in es[1:]:
+                uf.union(es[0], e)
+    comps: Dict[int, set] = {}
+    for e in range(g.m):
+        if in_bf[e]:
+            comps.setdefault(uf.find(e), set()).add(e)
+    return [frozenset(c) for c in comps.values()]
+
+
+def tip_components_ref(g: BipartiteGraph, alive_u: np.ndarray) -> List[frozenset]:
+    """Butterfly-connected components of a vertex-induced subgraph
+    (peeled side = U; transpose first for the V side).  Two U vertices
+    join when they share ≥ 2 common neighbors — i.e. a butterfly."""
+    adj: List[set] = [set() for _ in range(g.n_u)]
+    for u, v in g.edges:
+        if alive_u[int(u)]:
+            adj[int(u)].add(int(v))
+    uf = _UnionFind(g.n_u)
+    in_bf = np.zeros(g.n_u, dtype=bool)
+    for u1 in range(g.n_u):
+        for u2 in range(u1 + 1, g.n_u):
+            if len(adj[u1] & adj[u2]) >= 2:
+                in_bf[u1] = in_bf[u2] = True
+                uf.union(u1, u2)
+    comps: Dict[int, set] = {}
+    for u in range(g.n_u):
+        if in_bf[u]:
+            comps.setdefault(uf.find(u), set()).add(u)
+    return [frozenset(c) for c in comps.values()]
+
+
+def wing_hierarchy_ref(
+    g: BipartiteGraph, theta: np.ndarray
+) -> Dict[int, set]:
+    """Ground-truth k-wing hierarchy: for every distinct level k ≥ 1,
+    the butterfly-connected components of the θ ≥ k edge subgraph, as a
+    set of frozensets of edge ids."""
+    out: Dict[int, set] = {}
+    for k in np.unique(theta[theta > 0]):
+        out[int(k)] = set(wing_components_ref(g, theta >= k))
+    return out
+
+
+def tip_hierarchy_ref(
+    g: BipartiteGraph, theta: np.ndarray, side: str = "u"
+) -> Dict[int, set]:
+    """Ground-truth k-tip hierarchy of the peeled side (vertex ids)."""
+    gg = g if side == "u" else g.transpose()
+    out: Dict[int, set] = {}
+    for k in np.unique(theta[theta > 0]):
+        out[int(k)] = set(tip_components_ref(gg, theta >= k))
+    return out

@@ -1,0 +1,49 @@
+"""Hierarchy subsystem — the dense-subgraph DAG the paper actually sells.
+
+``core.peel`` produces entity numbers θ; this package turns them into the
+*hierarchy* of butterfly-dense subgraphs they induce (Sarıyüce's k-tip /
+k-wing nuclei) and serves it:
+
+* :mod:`build`     — θ → packed forest (batched label-propagation
+  connected components per level, one ``lax.while_loop``).
+* :mod:`query`     — O(1)/O(log) queries on the packed forest
+  (containment, subgraph masks, LCA, density profiles).
+* :mod:`serialize` — versioned flat-npz save/load: decompose once,
+  serve forever.
+* :mod:`serve`     — :class:`HierarchyService`, a batched query engine
+  answering vmapped mixed-op batches from device-resident arrays.
+"""
+from .build import Hierarchy, build_hierarchy
+from .query import (
+    PackedForest,
+    density_profile,
+    lca_entities,
+    lca_nodes,
+    max_k_containing,
+    node_of,
+    pack_forest,
+    subgraph_at,
+    top_densest_leaves,
+)
+from .serialize import FORMAT_VERSION, load_hierarchy, save_hierarchy
+from .serve import OPS, HierarchyService, HQuery
+
+__all__ = [
+    "Hierarchy",
+    "build_hierarchy",
+    "PackedForest",
+    "pack_forest",
+    "max_k_containing",
+    "node_of",
+    "subgraph_at",
+    "lca_nodes",
+    "lca_entities",
+    "density_profile",
+    "top_densest_leaves",
+    "FORMAT_VERSION",
+    "save_hierarchy",
+    "load_hierarchy",
+    "HierarchyService",
+    "HQuery",
+    "OPS",
+]

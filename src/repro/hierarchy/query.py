@@ -1,0 +1,198 @@
+"""O(1) / O(log) queries against the packed hierarchy forest.
+
+:class:`PackedForest` is the device-resident view of a
+:class:`~repro.hierarchy.build.Hierarchy`: flat int32 arrays (preorder
+stamps, entity→node, binary-lifting table) that every query reads with
+gathers — no tree walking, no host round-trips inside a batch.
+
+* containment      — an entity's subtree test is one interval check on
+  preorder stamps (``tin``/``tout``), so ``subgraph_at`` is a vectorized
+  compare over all entities.
+* ancestors / LCA  — binary lifting over ``up[:, j] = 2^j``-th ancestor,
+  O(log depth) per query and batch-friendly (pure elementwise algebra,
+  no data-dependent control flow).
+
+All batched entry points accept arrays and are jit-compiled; scalar use
+just passes size-1 arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .build import Hierarchy
+
+__all__ = [
+    "PackedForest",
+    "pack_forest",
+    "max_k_containing",
+    "node_of",
+    "subgraph_at",
+    "lca_nodes",
+    "lca_entities",
+    "density_profile",
+    "top_densest_leaves",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedForest:
+    """Device-resident arrays of one hierarchy (see :func:`pack_forest`)."""
+
+    n_nodes: int
+    n_entities: int
+    J: int                    # binary-lifting levels (static)
+    theta: jax.Array          # (n_entities,) int32
+    entity_node: jax.Array    # (n_entities,) int32
+    ent_tin: jax.Array        # (n_entities,) int32 — tin of entity's node
+    node_level: jax.Array     # (n_nodes,) int32
+    depth: jax.Array          # (n_nodes,) int32
+    tin: jax.Array            # (n_nodes,) int32
+    tout: jax.Array           # (n_nodes,) int32
+    node_size: jax.Array      # (n_nodes,) int32 — subtree entity count
+    up: jax.Array             # (n_nodes, J) int32 — 2^j-th ancestors
+
+
+def pack_forest(h: Hierarchy) -> PackedForest:
+    """Host → device packing; also materializes depth + lifting table."""
+    n = h.n_nodes
+    depth = np.zeros(n, dtype=np.int32)
+    for x in range(1, n):                      # parent[x] < x always
+        depth[x] = depth[h.parent[x]] + 1
+    max_depth = int(depth.max()) if n else 0
+    J = max(1, int(np.ceil(np.log2(max_depth + 1))) if max_depth else 1)
+    up = np.zeros((n, J), dtype=np.int32)
+    up[:, 0] = np.maximum(h.parent, 0)         # root lifts to itself
+    for j in range(1, J):
+        up[:, j] = up[up[:, j - 1], j - 1]
+    # entity-less hierarchies still pack (node-arg queries remain
+    # valid); a single root-pointing sentinel slot keeps the jitted
+    # *gathers* (theta[a], entity_node[a]) well-formed — entity queries
+    # are rejected host-side before dispatch, and ent_tin stays
+    # unpadded because it is only ever broadcast, never indexed.
+    theta = h.theta if h.n_entities else np.zeros(1, np.int64)
+    ent_node = h.entity_node if h.n_entities else np.zeros(1, np.int32)
+    return PackedForest(
+        n_nodes=n,
+        n_entities=h.n_entities,
+        J=J,
+        theta=jnp.asarray(theta.astype(np.int32)),
+        entity_node=jnp.asarray(ent_node),
+        ent_tin=jnp.asarray(h.tin[h.entity_node].astype(np.int32)),
+        node_level=jnp.asarray(h.node_level.astype(np.int32)),
+        depth=jnp.asarray(depth),
+        tin=jnp.asarray(h.tin),
+        tout=jnp.asarray(h.tout),
+        node_size=jnp.asarray((h.eend - h.estart).astype(np.int32)),
+        up=jnp.asarray(up),
+    )
+
+
+# =====================================================================
+# Point lookups — O(1) gathers
+# =====================================================================
+def max_k_containing(f: PackedForest, ids) -> jax.Array:
+    """Largest k whose k-subgraph still contains each entity — its θ."""
+    return f.theta[jnp.asarray(ids)]
+
+
+def node_of(f: PackedForest, ids) -> jax.Array:
+    """Deepest hierarchy node containing each entity."""
+    return f.entity_node[jnp.asarray(ids)]
+
+
+@partial(jax.jit, static_argnames=())
+def _subgraph_masks(ent_tin, tin, tout, nodes):
+    lo = tin[nodes]
+    hi = tout[nodes]
+    return (ent_tin[None, :] >= lo[:, None]) & (ent_tin[None, :] < hi[:, None])
+
+
+def subgraph_at(f: PackedForest, nodes) -> jax.Array:
+    """(len(nodes), n_entities) bool — entity mask of each node's
+    subgraph (edges for wing, one-side vertices for tip).  One interval
+    compare per entity; no tree traversal."""
+    nodes = jnp.atleast_1d(jnp.asarray(nodes))
+    return _subgraph_masks(f.ent_tin, f.tin, f.tout, nodes)
+
+
+# =====================================================================
+# LCA — binary lifting, elementwise (batch = array in, array out)
+# =====================================================================
+@partial(jax.jit, static_argnames=("J",))
+def _lca(up, depth, x, y, J: int):
+    dx = depth[x]
+    dy = depth[y]
+    swap = dy > dx
+    a = jnp.where(swap, y, x)
+    b = jnp.where(swap, x, y)
+    diff = depth[a] - depth[b]
+    for j in range(J):                     # lift a to b's depth
+        a = jnp.where((diff >> j) & 1 > 0, up[a, j], a)
+    eq = a == b
+    for j in range(J - 1, -1, -1):         # descend to just below LCA
+        ne = (up[a, j] != up[b, j]) & ~eq
+        a = jnp.where(ne, up[a, j], a)
+        b = jnp.where(ne, up[b, j], b)
+    return jnp.where(eq, a, up[a, 0])
+
+
+def lca_nodes(f: PackedForest, x, y) -> jax.Array:
+    """Lowest common ancestor node(s) — the smallest dense subgraph in
+    the hierarchy containing both."""
+    return _lca(f.up, f.depth, jnp.asarray(x), jnp.asarray(y), f.J)
+
+
+def lca_entities(f: PackedForest, e1, e2) -> jax.Array:
+    """Smallest common dense subgraph of two entities (node id); its
+    level is ``f.node_level[lca_entities(...)]``."""
+    e1 = jnp.asarray(e1)
+    e2 = jnp.asarray(e2)
+    return _lca(f.up, f.depth, f.entity_node[e1], f.entity_node[e2], f.J)
+
+
+# =====================================================================
+# Aggregates — host-side on the Hierarchy (one-shot analytics)
+# =====================================================================
+def density_profile(h: Hierarchy, k: int) -> Dict:
+    """Components of the k-subgraph (θ ≥ k): the maximal nodes with
+    level ≥ k.  Returns their ids, subtree entity counts, induced
+    subgraph sizes, and edge densities m/(nu·nv)."""
+    if k <= 0:
+        sel = np.array([0])
+    else:
+        plev = np.where(h.parent >= 0, h.node_level[np.maximum(h.parent, 0)],
+                        -1)
+        sel = np.where((h.node_level >= k) & (plev < k))[0]
+    return dict(
+        k=int(k),
+        nodes=sel,
+        n_components=int(sel.size),
+        sizes=(h.eend - h.estart)[sel],
+        m=h.node_m[sel],
+        nu=h.node_nu[sel],
+        nv=h.node_nv[sel],
+        density=h.density[sel],
+    )
+
+
+def top_densest_leaves(h: Hierarchy, t: int = 10) -> Dict:
+    """The t densest leaves — the innermost (undominated) dense
+    subgraphs, ranked by induced edge density."""
+    leaf = np.diff(h.child_off) == 0
+    ids = np.where(leaf)[0]
+    order = np.argsort(-h.density[ids], kind="stable")[:t]
+    sel = ids[order]
+    return dict(
+        nodes=sel,
+        level=h.node_level[sel],
+        density=h.density[sel],
+        m=h.node_m[sel],
+        nu=h.node_nu[sel],
+        nv=h.node_nv[sel],
+    )

@@ -1,0 +1,90 @@
+"""Versioned save/load of hierarchy forests as flat npz.
+
+A decomposition is computed once (minutes of peeling) and served
+forever (microseconds of gathers) — the artifact boundary is this
+module.  Layout: every :class:`~repro.hierarchy.build.Hierarchy` array
+under its field name, plus a single JSON ``meta`` blob carrying the
+format version, kind, and provenance (engine-tagged
+:class:`~repro.core.peel.PeelStats` dict, CD partition/ranges arrays
+ride along as first-class arrays).  Loading validates the version and
+returns a fully reconstructed ``Hierarchy`` — the engine tags survive
+the round-trip bit-for-bit (regression-tested).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Union
+
+import numpy as np
+
+from .build import Hierarchy
+
+__all__ = ["FORMAT_VERSION", "save_hierarchy", "load_hierarchy"]
+
+FORMAT_VERSION = 1
+
+_ARRAY_FIELDS = (
+    "theta", "node_level", "parent", "entity_node",
+    "member_off", "member_ids", "child_off", "child_ids",
+    "tin", "tout", "ent_order", "estart", "eend",
+    "node_m", "node_nu", "node_nv", "density",
+)
+# provenance arrays that may ride in meta (PeelResult.provenance())
+_META_ARRAYS = ("part", "ranges", "support_init")
+
+
+def save_hierarchy(path: Union[str, os.PathLike, io.IOBase],
+                   h: Hierarchy) -> None:
+    """Write ``h`` to ``path`` (npz).  Flat arrays only — no pickling,
+    so artifacts are portable across python/numpy versions.  The file
+    lands at EXACTLY ``path`` (``np.savez`` would silently append
+    ``.npz`` to suffix-less string paths, leaving the artifact where
+    neither the caller nor ``load_hierarchy`` looks)."""
+    meta = dict(h.meta)
+    arrays = {f: getattr(h, f) for f in _ARRAY_FIELDS}
+    for key in _META_ARRAYS:
+        if key in meta:
+            arrays[f"meta_{key}"] = np.asarray(meta.pop(key))
+    header = dict(
+        format_version=FORMAT_VERSION,
+        kind=h.kind,
+        n_entities=int(h.n_entities),
+        meta=meta,
+    )
+    payload = dict(
+        header=np.frombuffer(
+            json.dumps(header).encode("utf-8"), dtype=np.uint8
+        ),
+        **arrays,
+    )
+    if isinstance(path, (str, os.PathLike)):
+        with open(path, "wb") as fh:
+            np.savez_compressed(fh, **payload)
+    else:
+        np.savez_compressed(path, **payload)
+
+
+def load_hierarchy(path: Union[str, os.PathLike, io.IOBase]) -> Hierarchy:
+    """Load a hierarchy artifact; raises ``ValueError`` on a format
+    version this code does not understand."""
+    with np.load(path) as z:
+        header = json.loads(bytes(z["header"].tobytes()).decode("utf-8"))
+        version = header.get("format_version")
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"hierarchy artifact format {version!r} unsupported "
+                f"(this build reads {FORMAT_VERSION})"
+            )
+        arrays = {f: z[f] for f in _ARRAY_FIELDS}
+        meta = header["meta"]
+        for key in _META_ARRAYS:
+            if f"meta_{key}" in z.files:
+                meta[key] = z[f"meta_{key}"]
+    return Hierarchy(
+        kind=header["kind"],
+        n_entities=int(header["n_entities"]),
+        meta=meta,
+        **arrays,
+    )

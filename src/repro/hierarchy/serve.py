@@ -1,0 +1,202 @@
+"""Batched hierarchy query engine — decomposition-as-a-service.
+
+:class:`HierarchyService` is the hierarchy twin of
+``serve.ContinuousBatcher``: requests join a queue, the engine drains
+them in fixed-size *slot batches*, and one jitted dispatch answers the
+whole batch from device-resident arrays.  Slot occupancy is data (a
+padded tail of no-op queries), not shape, so one XLA program serves any
+query mix — exactly the continuous-batching contract of the token
+engine, minus the sequential decode loop (hierarchy queries are
+single-shot, so every slot retires each step).
+
+Mixed ops ride in one batch: the kernel computes every answer family
+(gathers + one binary-lifting LCA) and selects per slot by op code —
+branchless, so vmapped batches cost the same as homogeneous ones.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+from typing import Deque, List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .build import Hierarchy
+from .query import PackedForest, _lca, pack_forest, subgraph_at
+
+__all__ = ["OPS", "HQuery", "HierarchyService"]
+
+# op code → semantics ("a"/"b" are entity ids unless noted)
+OPS = dict(
+    max_k=0,          # largest k whose k-subgraph contains entity a
+    node_of=1,        # deepest hierarchy node containing entity a
+    lca_node=2,       # smallest common dense subgraph of entities a, b
+    lca_level=3,      # ... and its level k
+    subtree_size=4,   # entity count of node a's subgraph (a = node id)
+)
+_OP_NAMES = {v: k for k, v in OPS.items()}
+
+
+@dataclasses.dataclass
+class HQuery:
+    """One query; ``result`` is filled by the engine."""
+
+    uid: int
+    op: str
+    a: int
+    b: int = 0
+    result: Optional[int] = None
+    done: bool = False
+
+
+@partial(jax.jit, static_argnames=("J",))
+def _answer_batch(
+    theta, entity_node, node_level, depth, node_size, up,
+    ops, a, b, J: int,
+):
+    """All answer families for every slot, then a per-slot select.
+    Dispatch is keyed through :data:`OPS` by name, so the op table and
+    the kernel cannot silently desynchronize."""
+    lca = _lca(up, depth, entity_node[a], entity_node[b], J)
+    answers = {
+        "max_k": theta[a],
+        "node_of": entity_node[a],
+        "lca_node": lca,
+        "lca_level": node_level[lca],
+        "subtree_size": node_size[a],
+    }
+    assert answers.keys() == OPS.keys()
+    return jnp.select(
+        [ops == OPS[name] for name in answers],
+        list(answers.values()),
+        default=jnp.int32(-1),
+    )
+
+
+class HierarchyService:
+    """Slot-batched query serving over a :class:`PackedForest`.
+
+    ``batch`` is the slot count of the one compiled program; partially
+    full batches pad with no-op slots (masked out on return).  All state
+    the kernel reads lives on device once — steady-state service is
+    pure dispatch + one small host transfer per batch.
+    """
+
+    def __init__(self, h: Union[Hierarchy, PackedForest], batch: int = 1024):
+        self.forest = pack_forest(h) if isinstance(h, Hierarchy) else h
+        self.batch = int(batch)
+        self.queue: Deque[HQuery] = deque()
+        self.served = 0
+        self.dispatches = 0
+
+    # ------------------------------------------------------------ admin
+    def _check_ids(self, op_codes, a, b) -> None:
+        """Host-side bounds check: jitted gathers CLAMP out-of-range
+        indices, which would turn a malformed client id into a
+        confidently wrong answer instead of an error."""
+        node_arg = op_codes == OPS["subtree_size"]
+        a_lim = np.where(node_arg, self.forest.n_nodes,
+                         self.forest.n_entities)
+        bad = (a < 0) | (a >= a_lim)
+        pair = (op_codes == OPS["lca_node"]) | (op_codes == OPS["lca_level"])
+        bad |= pair & ((b < 0) | (b >= self.forest.n_entities))
+        if bad.any():
+            i = int(np.argmax(bad))
+            raise ValueError(
+                f"query id out of range: op={_OP_NAMES[int(op_codes[i])]} "
+                f"a={int(a[i])} b={int(b[i])} "
+                f"(n_entities={self.forest.n_entities}, "
+                f"n_nodes={self.forest.n_nodes})"
+            )
+
+    def submit(self, q: HQuery) -> None:
+        """Fail fast at the API boundary (scalar checks — run() then
+        dispatches queued queries without re-validating them)."""
+        if q.op not in OPS:
+            raise ValueError(f"unknown op {q.op!r} (choose from {set(OPS)})")
+        a_lim = (self.forest.n_nodes if q.op == "subtree_size"
+                 else self.forest.n_entities)
+        bad = not 0 <= q.a < a_lim
+        if q.op in ("lca_node", "lca_level"):
+            bad |= not 0 <= q.b < self.forest.n_entities
+        if bad:
+            raise ValueError(
+                f"query id out of range: op={q.op} a={q.a} b={q.b} "
+                f"(n_entities={self.forest.n_entities}, "
+                f"n_nodes={self.forest.n_nodes})"
+            )
+        self.queue.append(q)
+
+    def pending(self) -> int:
+        return len(self.queue)
+
+    # ------------------------------------------------------------ serve
+    def query_batch(
+        self, ops: np.ndarray, a: np.ndarray, b: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Raw batched entry: parallel arrays of op codes and args →
+        int32 answers.  Used directly by benchmarks; ``run`` wraps it."""
+        ops = np.asarray(ops, dtype=np.int32)
+        a = np.asarray(a, dtype=np.int32)
+        b = np.zeros_like(a) if b is None else np.asarray(b, dtype=np.int32)
+        self._check_ids(ops, a, b)
+        return self._dispatch(ops, a, b)
+
+    def _dispatch(self, ops, a, b) -> np.ndarray:
+        """One jitted batch dispatch — ids must already be validated
+        (submit() checked queued queries; raw callers go through
+        :meth:`query_batch`)."""
+        f = self.forest
+        out = _answer_batch(
+            f.theta, f.entity_node, f.node_level, f.depth, f.node_size,
+            f.up, jnp.asarray(ops), jnp.asarray(a), jnp.asarray(b), f.J,
+        )
+        self.served += int(ops.size)
+        self.dispatches += 1
+        return np.asarray(out)
+
+    def subgraph_masks(self, nodes) -> np.ndarray:
+        """Batched ``subgraph_at`` — (len(nodes), n_entities) bool.
+        Separate entry point because the answer is a mask, not a
+        scalar per slot."""
+        nodes = np.asarray(nodes)
+        if nodes.size and (
+            (nodes < 0) | (nodes >= self.forest.n_nodes)
+        ).any():
+            raise ValueError(
+                f"node id out of range (n_nodes={self.forest.n_nodes})")
+        self.dispatches += 1
+        out = np.asarray(subgraph_at(self.forest, jnp.asarray(nodes)))
+        self.served += out.shape[0]
+        return out
+
+    def run(self) -> List[HQuery]:
+        """Drain the queue in slot batches; returns completed queries
+        in uid order (the ContinuousBatcher contract)."""
+        completed: List[HQuery] = []
+        while self.queue:
+            todo = [
+                self.queue.popleft()
+                for _ in range(min(self.batch, len(self.queue)))
+            ]
+            n = len(todo)
+            # pad with subtree_size(root): node 0 always exists, even on
+            # an entity-less hierarchy where max_k(0) would be invalid
+            ops = np.full(self.batch, OPS["subtree_size"], dtype=np.int32)
+            a = np.zeros(self.batch, dtype=np.int32)
+            b = np.zeros(self.batch, dtype=np.int32)
+            for i, q in enumerate(todo):
+                ops[i] = OPS[q.op]
+                a[i] = q.a
+                b[i] = q.b
+            # queries were validated at submit; padding is always legal
+            res = self._dispatch(ops, a, b)
+            self.served -= self.batch - n  # padded slots served nothing
+            for i, q in enumerate(todo):
+                q.result = int(res[i])
+                q.done = True
+            completed.extend(todo)
+        return sorted(completed, key=lambda q: q.uid)

@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro.configs import ARCHS, get_config  # noqa: E402
 from repro.launch.hlo_analysis import collective_bytes  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.sharding.compat import set_mesh  # noqa: E402
 import repro.models as M  # noqa: E402
 from repro.models.model import SHAPE_SETS  # noqa: E402
 from repro.sharding import (  # noqa: E402
@@ -61,7 +62,7 @@ def dryrun_cell(arch: str, shape: str, multi_pod: bool = False,
     pabs = M.abstract_params(cfg, jnp.bfloat16)
     p_sh = param_shardings(axes, pabs, mesh)
     t0 = time.time()
-    ctx = jax.set_mesh(mesh)  # so constrain() sees axis names
+    ctx = set_mesh(mesh)  # so constrain() sees axis names
     ctx.__enter__()
 
     if info["kind"] == "train":

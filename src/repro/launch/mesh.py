@@ -8,17 +8,14 @@ from __future__ import annotations
 
 import jax
 
-try:  # jax >= 0.5
-    from jax.sharding import AxisType
-except ImportError:  # older jax: auto (GSPMD) semantics are the only mode
-    AxisType = None
+from repro.sharding.compat import HAS_AXIS_TYPE, AxisType
 
 __all__ = ["make_production_mesh", "make_peel_mesh", "make_local_mesh"]
 
 
 def _mesh(shape, axes):
     # GSPMD auto-propagation semantics (explicit-mode is jax>=0.9 default)
-    if AxisType is None:
+    if not HAS_AXIS_TYPE:
         return jax.make_mesh(shape, axes)
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))

@@ -122,6 +122,38 @@ def _dryrun() -> int:
     return 0
 
 
+def _emit_hierarchy(args, g, result, kind: str, stats=None) -> None:
+    """Build the dense-subgraph hierarchy from peel output and write the
+    versioned artifact (see ``repro.hierarchy``): decompose once, serve
+    forever.  ``stats`` carries the provenance row for raw-θ input (the
+    distributed path has no PeelResult to attach it from)."""
+    import time
+
+    import numpy as np
+
+    from repro.core.peel import PeelResult
+    from repro.hierarchy import (build_hierarchy, density_profile,
+                                 save_hierarchy, top_densest_leaves)
+
+    meta = None
+    if not isinstance(result, PeelResult) and stats:
+        meta = dict(stats=stats)
+    t0 = time.perf_counter()
+    h = build_hierarchy(g, result, kind=kind, side=args.side, meta=meta)
+    dt = time.perf_counter() - t0
+    save_hierarchy(args.emit_hierarchy, h)
+    lv = h.levels
+    print(f"[peel] hierarchy: {h.n_nodes} nodes over {lv.size} levels "
+          f"built in {dt * 1e3:.1f} ms -> {args.emit_hierarchy}")
+    if lv.size:
+        prof = density_profile(h, int(lv[0]))
+        top = top_densest_leaves(h, 3)
+        print(f"[peel] k={int(lv[0])}: {prof['n_components']} components; "
+              f"densest leaves: "
+              f"{np.round(top['density'], 3).tolist()} "
+              f"at k={top['level'].tolist()}")
+
+
 def _run(args) -> int:
     import jax
     import numpy as np
@@ -138,6 +170,7 @@ def _run(args) -> int:
     print(f"[peel] graph |U|={g.n_u} |V|={g.n_v} |E|={g.m}")
 
     stats_out = {}
+    result = None  # PeelResult when a single-device engine ran
     if args.mode == "wing":
         if len(jax.devices()) > 1:
             mesh = make_peel_mesh()
@@ -155,6 +188,7 @@ def _run(args) -> int:
             res = wing_decomposition(
                 g, P=args.parts, engine=args.engine,
                 fd_driver=args.fd_driver)
+            result = res
             theta = res.theta
             s = res.stats
             stats_out = s.as_dict()
@@ -171,6 +205,7 @@ def _run(args) -> int:
         res = tip_decomposition(
             g, side=args.side, P=args.parts, engine=tip_engine,
             fd_driver=args.fd_driver)
+        result = res
         theta = res.theta
         s = res.stats
         stats_out = s.as_dict()
@@ -179,6 +214,12 @@ def _run(args) -> int:
 
     print(f"[peel] theta: max={int(theta.max()) if theta.size else 0} "
           f"levels={len(set(theta.tolist()))}")
+    if args.emit_hierarchy:
+        # distributed path has no PeelResult — build from raw θ (the
+        # forest depends on θ only) and attach the distributed stats row
+        # so the artifact keeps its provenance
+        _emit_hierarchy(args, g, result if result is not None else theta,
+                        kind=args.mode, stats=stats_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(dict(theta=theta.tolist(), stats=stats_out), f)
@@ -202,6 +243,11 @@ def main():
     ap.add_argument("--side", default="u")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--emit-hierarchy", default=None, metavar="PATH",
+                    help="build the dense-subgraph hierarchy from the "
+                         "decomposition and save it as a versioned npz "
+                         "artifact (load with "
+                         "repro.hierarchy.load_hierarchy)")
     ap.add_argument("--dryrun", action="store_true")
     args = ap.parse_args()
     if args.dryrun:

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_local_mesh
+from repro.sharding.compat import set_mesh
 import repro.models as M
 from repro.models.config import reduced
 
@@ -25,7 +26,7 @@ def run(args) -> int:
     if args.reduced:
         cfg = reduced(cfg)
     mesh = make_local_mesh()
-    ctx = jax.set_mesh(mesh)
+    ctx = set_mesh(mesh)
     ctx.__enter__()
 
     params = M.init_params(cfg, jax.random.PRNGKey(args.seed),

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.data import DataConfig, synthetic_batches
 from repro.launch.mesh import make_local_mesh
+from repro.sharding.compat import set_mesh
 import repro.models as M
 from repro.models.config import reduced
 from repro.sharding import batch_shardings, param_shardings
@@ -48,7 +49,7 @@ def run(args) -> int:
         cfg = dataclasses.replace(cfg, max_seq=args.seq)
 
     mesh = make_local_mesh()
-    ctx = jax.set_mesh(mesh)
+    ctx = set_mesh(mesh)
     ctx.__enter__()
 
     key = jax.random.PRNGKey(args.seed)

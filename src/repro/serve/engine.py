@@ -31,7 +31,7 @@ class Request:
     uid: int
     prompt: List[int]
     max_new: int = 16
-    eos: Optional[int] = None
+    eos: Optional[int] = None  # stop at the FIRST generated eos, inclusive
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -113,6 +113,9 @@ class ContinuousBatcher:
             if self.slot_todo[i]:
                 continue  # still prefilling
             req.output.append(int(nxt[i]))
+            # eos contract: stop at the first GENERATED eos, which is
+            # included in the output; prefill (teacher-forced) tokens
+            # never trigger this (the `continue` above skips them)
             hit_eos = req.eos is not None and int(nxt[i]) == req.eos
             if len(req.output) >= req.max_new or hit_eos \
                     or self.position >= self.max_seq - 1:

@@ -4,12 +4,27 @@ The repo pins a jax whose ``shard_map`` still lives under
 ``jax.experimental.shard_map``; newer releases promote it to
 ``jax.shard_map``.  Every SPMD call site imports :func:`shard_map` from
 here so the peeling engines run on both.
+
+Same story for two mesh-context APIs the launch drivers use:
+
+* :func:`set_mesh` — ``jax.set_mesh`` is jax ≥ 0.6; on the pinned
+  toolchain entering the ``Mesh`` context manager is the equivalent
+  (named axes become visible to ``with_sharding_constraint`` and
+  friends), and ``Mesh`` has been a context manager since long before
+  the pin.
+* :data:`AxisType` — ``jax.sharding.AxisType`` is jax ≥ 0.5.  Older
+  jax only has GSPMD auto-propagation semantics, so the shim is a
+  sentinel enum whose ``Auto`` member callers may pass around; mesh
+  constructors must simply omit ``axis_types`` when
+  ``HAS_AXIS_TYPE`` is False (there is nothing to configure).
 """
 from __future__ import annotations
 
+import enum
+
 import jax
 
-__all__ = ["shard_map"]
+__all__ = ["shard_map", "set_mesh", "AxisType", "HAS_AXIS_TYPE"]
 
 if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
@@ -25,3 +40,29 @@ else:  # jax < 0.6
         # jax dropped the argument entirely
         kw.setdefault("check_rep", False)
         return _shard_map(f, **kw)
+
+
+if hasattr(jax, "set_mesh"):
+    set_mesh = jax.set_mesh
+else:  # jax < 0.6: the Mesh object itself is the context manager
+
+    def set_mesh(mesh):
+        """Enter ``mesh`` as the ambient mesh; returns a context
+        manager exactly like ``jax.set_mesh`` (use as
+        ``ctx = set_mesh(m); ctx.__enter__()`` or ``with set_mesh(m)``).
+        """
+        return mesh
+
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType
+
+    HAS_AXIS_TYPE = True
+except ImportError:  # older jax: GSPMD auto semantics are the only mode
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    HAS_AXIS_TYPE = False

@@ -1,0 +1,394 @@
+"""Hierarchy subsystem: golden forests, oracle parity across engines,
+query answers, serialization, and the batched query service."""
+import io
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import ref
+from repro.core.graph import BipartiteGraph, powerlaw_bipartite
+from repro.core.peel import PeelStats, tip_decomposition, wing_decomposition
+from repro.hierarchy import (
+    HierarchyService,
+    HQuery,
+    build_hierarchy,
+    density_profile,
+    lca_entities,
+    lca_nodes,
+    load_hierarchy,
+    max_k_containing,
+    node_of,
+    pack_forest,
+    save_hierarchy,
+    subgraph_at,
+    top_densest_leaves,
+)
+from repro.hierarchy.build import _label_components
+
+
+# ------------------------------------------------------------------ helpers
+def _two_blobs():
+    """Two K22 butterfly blobs + one butterfly-free bridge edge.
+
+    Edge ids (lexicographic): 0..3 = K22 on U{0,1}×V{0,1},
+    4 = bridge (1,2), 5..8 = K22 on U{2,3}×V{2,3}.
+    Wing θ = [1,1,1,1,0,1,1,1,1]; tip-U θ = [1,1,1,1].
+    """
+    edges = [(0, 0), (0, 1), (1, 0), (1, 1),
+             (2, 2), (2, 3), (3, 2), (3, 3), (1, 2)]
+    return BipartiteGraph.from_edges(4, 4, edges)
+
+
+def _nested():
+    """K33 (θ=4) and K22 (θ=1) blobs + butterfly-free bridge (2,3).
+
+    At level 1 the K33 component has no θ=1 edges, so its node is
+    *collapsed* — the level-4 node hangs straight off the root.
+    """
+    e = [(u, v) for u in range(3) for v in range(3)]          # K33
+    e += [(u, v) for u in (3, 4) for v in (3, 4)]             # K22
+    e += [(2, 3)]                                             # bridge
+    return BipartiteGraph.from_edges(5, 5, e)
+
+
+def _level_components(h, k):
+    """Components of the θ≥k subgraph from the packed forest, as the
+    oracle's set-of-frozensets."""
+    plev = np.where(h.parent >= 0, h.node_level[np.maximum(h.parent, 0)], -1)
+    sel = np.where((h.node_level >= k) & (plev < k))[0]
+    return {frozenset(int(e) for e in h.subtree_entities(x)) for x in sel}
+
+
+def _lca_walk(h, x, y):
+    """Brute-force LCA by parent walking."""
+    anc = set()
+    while x != -1:
+        anc.add(x)
+        x = int(h.parent[x])
+    while y not in anc:
+        y = int(h.parent[y])
+    return y
+
+
+# ------------------------------------------------------------------ golden
+def test_golden_two_blobs_wing():
+    g = _two_blobs()
+    for engine in ("dense", "beindex", "csr"):
+        h = build_hierarchy(g, wing_decomposition(g, P=3, engine=engine))
+        assert np.array_equal(h.theta, [1, 1, 1, 1, 0, 1, 1, 1, 1])
+        assert h.n_nodes == 3
+        assert np.array_equal(h.node_level, [0, 1, 1])
+        assert np.array_equal(h.parent, [-1, 0, 0])
+        # the bridge edge is the root's only own member
+        assert sorted(h.members(0)) == [4]
+        subs = {frozenset(int(e) for e in h.subtree_entities(x))
+                for x in (1, 2)}
+        assert subs == {frozenset({0, 1, 2, 3}), frozenset({5, 6, 7, 8})}
+        # both K22 leaves are complete bipartite: density 1
+        assert np.allclose(h.density[1:], 1.0)
+        assert h.meta["stats"]["engine"] == engine
+
+
+def test_golden_two_blobs_tip():
+    g = _two_blobs()
+    for engine in ("dense", "csr"):
+        res = tip_decomposition(g, side="u", P=3, engine=engine)
+        h = build_hierarchy(g, res, kind="tip", side="u")
+        assert np.array_equal(h.theta, [1, 1, 1, 1])
+        assert h.n_nodes == 3
+        assert np.array_equal(h.node_level, [0, 1, 1])
+        subs = {frozenset(int(u) for u in h.subtree_entities(x))
+                for x in (1, 2)}
+        assert subs == {frozenset({0, 1}), frozenset({2, 3})}
+
+
+def test_golden_nested_collapses_chain():
+    g = _nested()
+    res = wing_decomposition(g, P=4, engine="csr")
+    h = build_hierarchy(g, res)
+    # root + K22 node at level 1 + K33 node at level 4 — NO redundant
+    # level-1 node around the K33 (its component there has no θ=1 edge)
+    assert h.n_nodes == 3
+    assert sorted(h.node_level.tolist()) == [0, 1, 4]
+    assert np.array_equal(h.parent, [-1, 0, 0])
+    k33 = int(np.where(h.node_level == 4)[0][0])
+    assert h.node_m[k33] == 9 and h.node_nu[k33] == 3 and h.node_nv[k33] == 3
+    assert h.density[k33] == 1.0
+    # level profile at k=1 still shows BOTH blobs (collapsed node counts)
+    prof = density_profile(h, 1)
+    assert prof["n_components"] == 2
+    assert sorted(prof["m"].tolist()) == [4, 9]
+
+
+# ------------------------------------------------------- oracle + engines
+@pytest.mark.parametrize("seed,nu,nv,m", [(3, 40, 30, 160), (7, 60, 40, 260)])
+def test_wing_forest_matches_oracle_all_engines(seed, nu, nv, m):
+    g = powerlaw_bipartite(nu, nv, m, seed=seed)
+    results = {e: wing_decomposition(g, P=5, engine=e)
+               for e in ("dense", "beindex", "csr")}
+    forests = {e: build_hierarchy(g, r) for e, r in results.items()}
+    want = ref.wing_hierarchy_ref(g, results["csr"].theta)
+    for e, h in forests.items():
+        for k, comps in want.items():
+            assert _level_components(h, k) == comps, (e, k)
+    hb = forests["beindex"]
+    for h in (forests["dense"], forests["csr"]):
+        assert np.array_equal(h.node_level, hb.node_level)
+        assert np.array_equal(h.parent, hb.parent)
+        assert np.array_equal(h.entity_node, hb.entity_node)
+        assert np.array_equal(h.tin, hb.tin)
+
+
+@pytest.mark.parametrize("side", ["u", "v"])
+def test_tip_forest_matches_oracle(side):
+    g = powerlaw_bipartite(50, 35, 200, seed=11)
+    results = {e: tip_decomposition(g, side=side, P=4, engine=e)
+               for e in ("dense", "csr")}
+    forests = {e: build_hierarchy(g, r, kind="tip", side=side)
+               for e, r in results.items()}
+    want = ref.tip_hierarchy_ref(g, results["csr"].theta, side=side)
+    for e, h in forests.items():
+        for k, comps in want.items():
+            assert _level_components(h, k) == comps, (e, k)
+    assert np.array_equal(forests["dense"].parent, forests["csr"].parent)
+
+
+def test_forest_invariants():
+    g = powerlaw_bipartite(70, 45, 300, seed=5)
+    h = build_hierarchy(g, wing_decomposition(g, P=6, engine="csr"))
+    # parents precede children; levels strictly increase along edges
+    assert np.all(h.parent[1:] < np.arange(1, h.n_nodes))
+    assert np.all(h.node_level[1:] > h.node_level[h.parent[1:]])
+    # member lists partition the entity set
+    assert np.array_equal(np.sort(h.member_ids), np.arange(g.m))
+    assert h.member_off[-1] == g.m
+    # subtree slices nest: child range inside parent range
+    for x in range(1, h.n_nodes):
+        p = h.parent[x]
+        assert h.estart[p] <= h.estart[x] and h.eend[x] <= h.eend[p]
+    # every entity's own node carries its θ as level
+    assert np.array_equal(h.node_level[h.entity_node], h.theta)
+
+
+def test_label_components_is_single_while_loop():
+    """The batched union-find must lower to ONE while op — a whole
+    level block's components in a single device dispatch, no Python
+    per-edge loops."""
+    alive = np.ones((4, 16), dtype=bool)
+    inc_e = np.arange(16, dtype=np.int32)
+    inc_g = (np.arange(16, dtype=np.int32) // 2)
+    lab0 = np.tile(np.arange(16, dtype=np.int32), (4, 1))
+    jaxpr = jax.make_jaxpr(
+        lambda a, l: _label_components(a, inc_e, inc_g, l, 16, 8)
+    )(alive, lab0)
+    assert str(jaxpr).count("while[") == 1
+
+
+# ----------------------------------------------------------------- queries
+def test_queries_match_oracle():
+    g = powerlaw_bipartite(60, 40, 260, seed=7)
+    res = wing_decomposition(g, P=5, engine="csr")
+    h = build_hierarchy(g, res)
+    f = pack_forest(h)
+    rng = np.random.default_rng(0)
+    ids = rng.integers(0, g.m, 64)
+    assert np.array_equal(np.asarray(max_k_containing(f, ids)),
+                          res.theta[ids])
+    assert np.array_equal(np.asarray(node_of(f, ids)), h.entity_node[ids])
+
+    nodes = rng.integers(0, h.n_nodes, 8)
+    masks = np.asarray(subgraph_at(f, nodes))
+    for row, x in zip(masks, nodes):
+        assert set(np.where(row)[0]) == set(h.subtree_entities(int(x)))
+
+    e1 = rng.integers(0, g.m, 64)
+    e2 = rng.integers(0, g.m, 64)
+    got = np.asarray(lca_entities(f, e1, e2))
+    for a, b, l in zip(e1, e2, got):
+        assert l == _lca_walk(h, int(h.entity_node[a]),
+                              int(h.entity_node[b])), (a, b)
+    # lca of a node with itself / its ancestor
+    x = int(nodes[0])
+    assert int(np.asarray(lca_nodes(f, [x], [x]))[0]) == x
+    assert int(np.asarray(lca_nodes(f, [x], [0]))[0]) == 0
+
+
+def test_density_profile_and_top_leaves():
+    g = powerlaw_bipartite(60, 40, 260, seed=7)
+    res = wing_decomposition(g, P=5, engine="csr")
+    h = build_hierarchy(g, res)
+    for k in h.levels[:4]:
+        prof = density_profile(h, int(k))
+        want = ref.wing_hierarchy_ref(g, res.theta)[int(k)]
+        assert prof["n_components"] == len(want)
+        assert sorted(prof["sizes"].tolist()) == sorted(
+            len(c) for c in want)
+        # density really is m/(nu·nv) of the induced subgraph
+        np.testing.assert_allclose(
+            prof["density"], prof["m"] / (prof["nu"] * prof["nv"]))
+    top = top_densest_leaves(h, 5)
+    leaf = np.diff(h.child_off) == 0
+    assert all(leaf[x] for x in top["nodes"])
+    d = top["density"]
+    assert np.all(d[:-1] >= d[1:])
+
+
+# ------------------------------------------------------------- serialization
+def test_serialize_roundtrip():
+    g = powerlaw_bipartite(50, 30, 200, seed=2)
+    res = wing_decomposition(g, P=4, engine="csr")
+    h = build_hierarchy(g, res)
+    buf = io.BytesIO()
+    save_hierarchy(buf, h)
+    buf.seek(0)
+    h2 = load_hierarchy(buf)
+    assert h2.kind == h.kind and h2.n_entities == h.n_entities
+    for f in ("theta", "node_level", "parent", "entity_node", "member_off",
+              "member_ids", "child_off", "child_ids", "tin", "tout",
+              "ent_order", "estart", "eend", "node_m", "node_nu",
+              "node_nv", "density"):
+        assert np.array_equal(getattr(h2, f), getattr(h, f)), f
+    # provenance arrays survive too
+    assert np.array_equal(h2.meta["part"], res.part)
+    assert np.array_equal(h2.meta["ranges"], res.ranges)
+    # queries on the reloaded artifact are identical
+    f1, f2 = pack_forest(h), pack_forest(h2)
+    ids = np.arange(g.m)
+    assert np.array_equal(np.asarray(lca_entities(f1, ids, ids[::-1])),
+                          np.asarray(lca_entities(f2, ids, ids[::-1])))
+
+
+def test_serialize_version_guard():
+    g = _two_blobs()
+    h = build_hierarchy(g, wing_decomposition(g, P=2, engine="csr"))
+    buf = io.BytesIO()
+    import repro.hierarchy.serialize as S
+    old = S.FORMAT_VERSION
+    try:
+        S.FORMAT_VERSION = 99
+        save_hierarchy(buf, h)
+    finally:
+        S.FORMAT_VERSION = old
+    buf.seek(0)
+    with pytest.raises(ValueError, match="format"):
+        load_hierarchy(buf)
+
+
+def test_peelstats_roundtrip_through_serializer():
+    """Regression (bugfix hygiene): the engine / fd_driver provenance
+    tags of PeelStats.as_dict() must survive the artifact round-trip,
+    and from_dict must invert as_dict despite the derived keys."""
+    g = powerlaw_bipartite(40, 25, 150, seed=9)
+    for engine, fd_driver in (("csr", "device"), ("csr", "host"),
+                              ("beindex", "host")):
+        res = wing_decomposition(g, P=3, engine=engine, fd_driver=fd_driver)
+        h = build_hierarchy(g, res)
+        buf = io.BytesIO()
+        save_hierarchy(buf, h)
+        buf.seek(0)
+        got = load_hierarchy(buf).meta["stats"]
+        assert got == res.stats.as_dict()
+        st = PeelStats.from_dict(got)
+        assert st == res.stats
+        assert (st.engine, st.fd_driver) == (engine, res.stats.fd_driver)
+
+
+# ----------------------------------------------------------------- service
+def test_service_mixed_batch_matches_direct():
+    g = powerlaw_bipartite(60, 40, 260, seed=7)
+    res = wing_decomposition(g, P=5, engine="csr")
+    h = build_hierarchy(g, res)
+    f = pack_forest(h)
+    svc = HierarchyService(h, batch=64)
+    rng = np.random.default_rng(1)
+    queries = []
+    for i in range(200):  # deliberately not a multiple of the batch size
+        op = ["max_k", "node_of", "lca_node", "lca_level",
+              "subtree_size"][i % 5]
+        a = int(rng.integers(0, h.n_nodes if op == "subtree_size" else g.m))
+        b = int(rng.integers(0, g.m))
+        queries.append(HQuery(uid=i, op=op, a=a, b=b))
+        svc.submit(queries[-1])
+    done = svc.run()
+    assert [q.uid for q in done] == list(range(200))
+    assert svc.served == 200 and svc.pending() == 0
+    for q in done:
+        if q.op == "max_k":
+            want = int(res.theta[q.a])
+        elif q.op == "node_of":
+            want = int(h.entity_node[q.a])
+        elif q.op == "lca_node":
+            want = _lca_walk(h, int(h.entity_node[q.a]),
+                             int(h.entity_node[q.b]))
+        elif q.op == "lca_level":
+            want = int(h.node_level[_lca_walk(
+                h, int(h.entity_node[q.a]), int(h.entity_node[q.b]))])
+        else:
+            want = int(h.eend[q.a] - h.estart[q.a])
+        assert q.result == want, (q.uid, q.op)
+    # mask-shaped queries via the dedicated entry point
+    masks = svc.subgraph_masks(np.asarray([0, 1]))
+    assert masks.shape == (2, g.m) and masks[0].all()
+    assert np.array_equal(masks, np.asarray(subgraph_at(f, [0, 1])))
+
+
+def test_service_rejects_unknown_op():
+    g = _two_blobs()
+    h = build_hierarchy(g, wing_decomposition(g, P=2, engine="csr"))
+    svc = HierarchyService(h)
+    with pytest.raises(ValueError, match="unknown op"):
+        svc.submit(HQuery(uid=0, op="nope", a=0))
+
+
+def test_service_rejects_out_of_range_ids():
+    """Jitted gathers clamp out-of-range indices — without a host-side
+    bounds check a malformed client id would yield a confidently wrong
+    answer instead of an error."""
+    g = _two_blobs()
+    h = build_hierarchy(g, wing_decomposition(g, P=2, engine="csr"))
+    svc = HierarchyService(h)
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit(HQuery(uid=0, op="max_k", a=g.m + 5))
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit(HQuery(uid=0, op="lca_node", a=0, b=-1))
+    with pytest.raises(ValueError, match="out of range"):
+        svc.submit(HQuery(uid=0, op="subtree_size", a=h.n_nodes))
+    # node-arg op accepts node ids past n_entities (n_nodes may exceed it)
+    svc.submit(HQuery(uid=1, op="subtree_size", a=h.n_nodes - 1))
+    with pytest.raises(ValueError, match="out of range"):
+        svc.query_batch(np.asarray([0]), np.asarray([g.m]))
+    with pytest.raises(ValueError, match="out of range"):
+        svc.subgraph_masks(np.asarray([h.n_nodes]))
+    # the valid query still serves: last node is a K22 leaf (4 edges)
+    assert svc.run()[0].result == 4
+
+
+def test_save_writes_exact_path(tmp_path):
+    """np.savez silently appends '.npz' to suffix-less string paths;
+    save_hierarchy must land the artifact exactly where asked."""
+    g = _two_blobs()
+    h = build_hierarchy(g, wing_decomposition(g, P=2, engine="csr"))
+    p = tmp_path / "artifact_no_suffix"
+    save_hierarchy(str(p), h)
+    assert p.exists() and not (tmp_path / "artifact_no_suffix.npz").exists()
+    assert np.array_equal(load_hierarchy(str(p)).parent, h.parent)
+
+
+def test_empty_and_degenerate_graphs():
+    # no edges at all: the forest is just the root
+    g = BipartiteGraph.from_edges(3, 3, np.zeros((0, 2), np.int32))
+    h = build_hierarchy(g, wing_decomposition(g, P=2))
+    assert h.n_nodes == 1 and h.n_entities == 0
+    # node-arg queries still serve on an entity-less hierarchy — the
+    # batch padding must not trip the bounds check (regression)
+    svc = HierarchyService(h, batch=8)
+    svc.submit(HQuery(uid=0, op="subtree_size", a=0))
+    assert svc.run()[0].result == 0
+    # butterfly-free graph: every edge is a root member
+    g = BipartiteGraph.from_edges(2, 2, [[0, 0], [1, 1]])
+    h = build_hierarchy(g, wing_decomposition(g, P=2))
+    assert h.n_nodes == 1
+    assert sorted(h.members(0)) == [0, 1]
+    f = pack_forest(h)
+    assert int(np.asarray(lca_entities(f, [0], [1]))[0]) == 0

@@ -7,7 +7,6 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.models as M
 from repro.configs import get_config
@@ -104,12 +103,6 @@ def test_incomplete_checkpoint_invisible(tmp_path):
     assert latest_step(path) == 3
 
 
-@pytest.mark.xfail(
-    strict=True,
-    reason="known seed failure: launch.train uses jax.set_mesh (a "
-           "jax>=0.6 API) but the toolchain pins jax<0.5 — tracked in "
-           "ROADMAP open items",
-)
 def test_crash_and_resume(tmp_path):
     """Kill training mid-run; resume must continue from the checkpoint
     and finish with the same data order (bit-reproducible pipeline)."""
@@ -132,20 +125,19 @@ def test_crash_and_resume(tmp_path):
     assert latest_step(ckpt) == 30
 
 
-@pytest.mark.xfail(
-    strict=True,
-    reason="known seed failure: imports jax.sharding.AxisType (a "
-           "jax>=0.5 API) but the toolchain pins jax<0.5 — tracked in "
-           "ROADMAP open items",
-)
 def test_elastic_remesh_subprocess():
-    """Restore state onto a different device count (pod loss): 8 -> 4."""
+    """Restore state onto a different device count (pod loss): 8 -> 4.
+
+    Imports ``AxisType`` through ``repro.sharding.compat`` (the pinned
+    jax<0.5 has no ``jax.sharding.AxisType``; the shim provides the
+    sentinel enum there and the real one on newer jax)."""
     import textwrap
     env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     src = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import AxisType
+        from repro.sharding.compat import AxisType
+        assert hasattr(AxisType, "Auto")
         import repro.models as M
         from repro.configs import get_config
         from repro.models.config import reduced
