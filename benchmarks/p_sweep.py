@@ -29,6 +29,9 @@ def run(small: bool = True):
         res_h, t_h = timed(
             wing_decomposition, g, P=P, engine="csr", fd_driver="host",
             repeat=2)
+        res_v, t_v = timed(
+            wing_decomposition, g, P=P, engine="csr",
+            fd_driver="vmapped", repeat=2)
         sd = res_d.stats
         emit(f"psweep.{name}.P{P}.csr", t_d, rho_cd=sd.rho_cd,
              rho_fd_max=sd.rho_fd_max,
@@ -37,6 +40,11 @@ def run(small: bool = True):
              speedup_vs_hostfd=round(t_h / max(t_d, 1e-9), 2))
         emit(f"psweep.{name}.P{P}.csr_hostfd", t_h,
              rho_cd=res_h.stats.rho_cd, fd_driver="host")
+        # the P-sensitivity of the single-dispatch FD: lock-step cost
+        # grows with partition-drain imbalance, dispatch savings with P
+        emit(f"psweep.{name}.P{P}.csr_vmapped", t_v,
+             rho_fd_max=res_v.stats.rho_fd_max, fd_driver="vmapped",
+             vs_device=round(t_v / max(t_d, 1e-9), 2))
 
 
 if __name__ == "__main__":

@@ -1,16 +1,37 @@
-"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
-results written by repro.launch.dryrun / repro.launch.roofline.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline / §Benchmark tables from
+the JSON results written by repro.launch.dryrun, repro.launch.roofline
+and benchmarks.run (``BENCH_*.json``).
 
-    PYTHONPATH=src python -m benchmarks.report
+    PYTHONPATH=src python -m benchmarks.report [BENCH_csr.json ...]
+
+The §Benchmarks section renders EVERY row of the given bench files —
+including the FD/CD A/B ratio rows whose names contain ``/`` (e.g.
+``wing.fr.fd.device/host``): a ``/`` in a row name is a ratio label,
+not a path separator, and must never be filtered or split.  When no
+bench file is passed, the committed baseline
+(``benchmarks/baselines/BENCH_csr.json``) is rendered.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRY = os.path.join(ROOT, "experiments", "dryrun", "results.json")
 ROOF = os.path.join(ROOT, "experiments", "roofline", "results.json")
+BASELINE = os.path.join(ROOT, "benchmarks", "baselines", "BENCH_csr.json")
+
+# A/B pairs synthesized from sibling time rows: (suffix_a, suffix_b,
+# ratio label).  The label becomes "<common prefix>.<label>" — names
+# that deliberately contain '/' so a < 1.0 ratio reads "a is faster".
+AB_PAIRS = [
+    ("pbng_csr", "pbng_csr_hostfd", "fd.device/host"),
+    ("pbng_csr_vmapped", "pbng_csr", "fd.vmapped/device"),
+    ("pbng_csr_vmapped_pallas", "pbng_csr_vmapped", "fd.pallas/segsum"),
+    ("csr", "csr_hostfd", "fd.device/host"),
+    ("csr_pal", "csr", "cd.pair_aligned/wedge"),
+]
 
 
 def _fmt(x, unit=""):
@@ -89,11 +110,82 @@ def roofline_table() -> str:
     return "\n".join(lines) + "\n"
 
 
-def main():
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.2f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.1f}ms"
+    return f"{us:.0f}us"
+
+
+def _escape(name: str) -> str:
+    """Markdown-table safety: only '|' breaks a cell.  '/' is a legal
+    row-name character (A/B ratio rows) and renders verbatim."""
+    return name.replace("|", "\\|")
+
+
+def ab_rows(rows: dict) -> list:
+    """Synthesize the A/B ratio rows from sibling time rows.
+
+    For every configured (a, b) suffix pair present with a common
+    prefix — e.g. ``wing.fr.pbng_csr`` / ``wing.fr.pbng_csr_hostfd`` —
+    emit ``(prefix.label, ratio)`` where ratio = t_a / t_b (< 1.0 means
+    the numerator variant is faster)."""
+    out = []
+    for name, us in sorted(rows.items()):
+        for suf_a, suf_b, label in AB_PAIRS:
+            if not name.endswith("." + suf_a):
+                continue
+            prefix = name[: -len(suf_a) - 1]
+            sibling = f"{prefix}.{suf_b}"
+            if sibling in rows and rows[sibling] > 0:
+                out.append((f"{prefix}.{label}", us / rows[sibling]))
+    return out
+
+
+def bench_table(paths: list) -> str:
+    """§Benchmarks: every row of the bench JSONs (min-merged across
+    files), then the synthesized A/B ratio rows.  No row is skipped —
+    names containing '/' are ratio labels and render verbatim."""
+    rows: dict = {}
+    derived: dict = {}
+    for path in paths:
+        if not os.path.exists(path):
+            return f"_bench results not found: {path}_\n"
+        payload = json.load(open(path))
+        for r in payload["rows"]:
+            us = float(r["us_per_call"])
+            if us < rows.get(r["name"], float("inf")):
+                rows[r["name"]] = us
+                derived[r["name"]] = {
+                    k: v for k, v in r.items()
+                    if k not in ("name", "us_per_call")
+                }
+    lines = ["| row | best-of time | derived |", "|---|---|---|"]
+    for name in sorted(rows):
+        extra = " ".join(f"{k}={v}" for k, v in derived[name].items())
+        lines.append(
+            f"| {_escape(name)} | {_fmt_us(rows[name])} | {extra} |")
+    ab = ab_rows(rows)
+    if ab:
+        lines.append("")
+        lines.append("### A/B ratios (t_a / t_b — < 1.0 ⇒ a faster)")
+        lines.append("")
+        lines.append("| a/b | ratio |")
+        lines.append("|---|---|")
+        for name, ratio in ab:
+            lines.append(f"| {_escape(name)} | {ratio:.2f} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
     print("## §Dry-run\n")
     print(dryrun_table())
     print("\n## §Roofline\n")
     print(roofline_table())
+    print("\n## §Benchmarks\n")
+    print(bench_table(argv if argv else [BASELINE]))
 
 
 if __name__ == "__main__":

@@ -39,6 +39,27 @@ print(json.dumps(stats))
 """
 
 
+_SCRIPT_CSR = """
+import json, time
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.graph import powerlaw_bipartite
+from repro.core.distributed import distributed_wing_decomposition
+n = {n_dev}
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("peel",))
+g = powerlaw_bipartite(300, 150, 1400, seed=4)
+out = {{}}
+for pal in (False, True):
+    t0 = time.time()
+    theta, stats = distributed_wing_decomposition(
+        g, mesh, P_parts=32, engine="csr", pair_aligned=pal)
+    stats.update(wall_s=time.time() - t0, theta_sum=int(theta.sum()))
+    out["pal" if pal else "wedge"] = stats
+assert out["pal"]["theta_sum"] == out["wedge"]["theta_sum"]
+print(json.dumps(out))
+"""
+
+
 def run(small: bool = True):
     devs = (1, 4) if small else (1, 2, 4, 8, 16)
     base = None
@@ -57,6 +78,21 @@ def run(small: bool = True):
         emit(f"scaling.wing.dev{n}", stats["wall_s"],
              rho_cd=stats["rho_cd"], links_per_dev=stats["links_per_dev"],
              parts_per_dev=-(-stats["n_parts"] // n))
+        # csr CD sharding A/B: round-robin wedge shards (two psums per
+        # round) vs pair-aligned shards (ONE psum) — report.py renders
+        # the cd.pair_aligned/wedge ratio row from these
+        out = subprocess.run(
+            [sys.executable, "-c",
+             textwrap.dedent(_SCRIPT_CSR.format(n_dev=n))],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        both = json.loads(out.stdout.strip().splitlines()[-1])
+        emit(f"scaling.wing.dev{n}.csr", both["wedge"]["wall_s"],
+             rho_cd=both["wedge"]["rho_cd"], psums_per_round=2,
+             cd_sharding="wedge")
+        emit(f"scaling.wing.dev{n}.csr_pal", both["pal"]["wall_s"],
+             rho_cd=both["pal"]["rho_cd"], psums_per_round=1,
+             cd_sharding="pair_aligned")
 
 
 if __name__ == "__main__":

@@ -85,6 +85,15 @@ def run(small: bool = True):
             repeat=2)
         assert np.array_equal(res_csr_h.theta, res.theta), name
 
+        # single-dispatch Phase 2: ALL partitions in ONE while_loop.
+        # The honest three-way FD A/B (report.py renders the ratio rows
+        # fd.device/host and fd.vmapped/device from these).
+        res_csr_v, t_csr_v = timed(
+            wing_decomposition, g, P=16, engine="csr",
+            fd_driver="vmapped", repeat=2)
+        assert np.array_equal(res_csr_v.theta, res.theta), name
+        assert res_csr_v.stats.rho_fd_total == res_csr.stats.rho_fd_total
+
         (theta_pc, st_pc), t_pc = timed(wing_decomposition_bepc, g)
         assert np.array_equal(theta_pc, res.theta), name
 
@@ -106,11 +115,36 @@ def run(small: bool = True):
              rho_sync=res_csr_h.stats.rho_cd,
              sync_reduction=round(res_csr_h.stats.sync_reduction, 1),
              fd_driver="host")
+        emit(f"wing.{name}.pbng_csr_vmapped", t_csr_v, engine="csr",
+             fd_driver="vmapped",
+             rho_fd_max=res_csr_v.stats.rho_fd_max,
+             vs_device=round(t_csr_v / max(t_csr, 1e-9), 2))
         emit(f"wing.{name}.be_pc", t_pc, recounts=st_pc.recounts,
              kind="top-down-baseline")
         if g.m <= 3000:
             _, t_bup = timed(ref.bup_wing_ref, g)
             emit(f"wing.{name}.bup", t_bup, kind="sequential-oracle")
+
+    # ---- in-loop Pallas support_update A/B (one synthetic graph: the
+    # kernel runs in interpret mode on CPU, so the paper proxies would
+    # dominate the smoke budget; parity is what the row certifies, the
+    # compiled-kernel speed story lives on TPU)
+    from repro.core.graph import powerlaw_bipartite
+
+    gp = powerlaw_bipartite(60, 40, 260, seed=7)
+    res_v, t_v = timed(
+        wing_decomposition, gp, P=6, engine="csr", fd_driver="vmapped",
+        repeat=2)
+    res_vp, t_vp = timed(
+        wing_decomposition, gp, P=6, engine="csr", fd_driver="vmapped",
+        use_pallas=True, repeat=2)
+    assert np.array_equal(res_vp.theta, res_v.theta)
+    assert res_vp.stats.updates == res_v.stats.updates
+    emit("wing.pl60.pbng_csr_vmapped", t_v, engine="csr",
+         fd_driver="vmapped")
+    emit("wing.pl60.pbng_csr_vmapped_pallas", t_vp, engine="csr",
+         fd_driver="vmapped", fd_update="pallas",
+         note="interpret-mode;compiled-on-TPU-target")
 
 
 if __name__ == "__main__":

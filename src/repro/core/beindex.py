@@ -32,6 +32,10 @@ __all__ = ["BEIndex", "build_beindex"]
 
 @dataclasses.dataclass(frozen=True)
 class BEIndex:
+    """Flat Bloom-Edge-Index (§2.3): every (edge, twin) pair of every
+    maximal priority bloom as parallel link arrays — the paper's
+    pointer-based index rebuilt as segment-sum-able flat storage."""
+
     nb: int
     bloom_k: np.ndarray    # (nb,) int32 — #twin pairs per bloom
     link_edge: np.ndarray  # (L,) int32
@@ -40,9 +44,11 @@ class BEIndex:
 
     @property
     def n_links(self) -> int:
+        """Number of (edge, twin, bloom) links in the index."""
         return int(self.link_edge.shape[0])
 
     def total_butterflies(self) -> int:
+        """⋈(G) = Σ_B C(k_B, 2) — every butterfly sits in one bloom."""
         k = self.bloom_k.astype(np.int64)
         return int((k * (k - 1) // 2).sum())
 

@@ -89,6 +89,7 @@ def edge_butterflies(A: jax.Array, edges: jax.Array) -> jax.Array:
 
 
 def total_butterflies(A: jax.Array) -> jax.Array:
+    """⋈(G): each butterfly counts once per U endpoint, so halve."""
     return jnp.sum(vertex_butterflies(A)) / 2.0
 
 

@@ -87,6 +87,7 @@ class Wedges:
 
     @property
     def n_wedges(self) -> int:
+        """Number of enumerated wedges (= Σ_v C(d_v, 2))."""
         return int(self.wedge_pair.shape[0])
 
     def pair_butterflies0(self) -> np.ndarray:
@@ -340,6 +341,7 @@ def edge_butterflies0(w: Wedges) -> np.ndarray:
 
 
 def total_butterflies_csr(w: Wedges) -> int:
+    """⋈(G) = Σ_p C(W_p, 2) — exact int64 on host."""
     return int(w.pair_butterflies0().sum())
 
 

@@ -38,11 +38,14 @@ __all__ = [
     "ShardedCSRState",
     "shard_links",
     "shard_wedges",
+    "shard_wedges_pair_aligned",
     "cd_round_sharded",
     "cd_round_sharded_csr",
     "make_cd_round_csr",
+    "make_cd_round_csr_pair_aligned",
     "pack_fd_partitions",
     "pack_fd_partitions_csr",
+    "pack_fd_partitions_tip_csr",
     "fd_peel_sharded",
     "fd_peel_sharded_csr",
     "distributed_wing_decomposition",
@@ -55,6 +58,10 @@ __all__ = [
 # =====================================================================
 @dataclasses.dataclass
 class ShardedWingState:
+    """Link-sharded CD state: index arrays split over the mesh axis,
+    supports / bloom numbers replicated (O(m) + O(nb), tiny next to the
+    links)."""
+
     le: jax.Array          # (L_pad,) link -> edge, sharded
     lt: jax.Array          # (L_pad,) link -> twin
     lb: jax.Array          # (L_pad,) link -> bloom
@@ -142,48 +149,76 @@ def cd_round_sharded(round_fn, st: ShardedWingState, peeled: jax.Array
 # ONE shard, c_B and k_alive become shard-local state and a round costs
 # a single psum (the loss) — half the collectives, and bloom bookkeeping
 # never crosses the interconnect.
+def _greedy_balance(counts: np.ndarray, n_dev: int):
+    """LPT-greedy segment→shard placement shared by the bloom- and
+    pair-aligned one-psum CD layouts.
+
+    Segments (blooms / U-pairs) are placed largest-first onto the
+    least-loaded shard (heap, O(S log n_dev) — ties break to the lowest
+    shard id like the original argmin).  Everything else is vectorized
+    numpy: per shard, segments keep ascending-id order.  Returns
+    ``(shard_of, local_id, seg_start, loads, n_local)`` — per segment
+    its shard, shard-local id and first item column; per shard its item
+    load and segment count."""
+    import heapq
+
+    S = int(counts.size)
+    if S == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z, np.zeros(n_dev, np.int64), np.zeros(n_dev, np.int64)
+    shard_of = np.zeros(S, dtype=np.int64)
+    heap = [(0, s) for s in range(max(n_dev, 1))]
+    heapq.heapify(heap)
+    for sid in np.argsort(-counts, kind="stable"):
+        load, s = heapq.heappop(heap)
+        shard_of[sid] = s
+        heapq.heappush(heap, (load + int(counts[sid]), s))
+    order = np.argsort(shard_of, kind="stable")   # group by shard, id-sorted
+    grouped = shard_of[order]
+    starts = np.flatnonzero(np.r_[True, np.diff(grouped) > 0])
+    sizes = np.diff(np.r_[starts, S])
+    rank = np.arange(S, dtype=np.int64) - np.repeat(starts, sizes)
+    local_id = np.empty(S, dtype=np.int64)
+    local_id[order] = rank
+    cs = np.cumsum(counts[order]) - counts[order]  # items before, global
+    seg_start = np.empty(S, dtype=np.int64)
+    seg_start[order] = cs - np.repeat(cs[starts], sizes)
+    loads = np.bincount(
+        shard_of, weights=counts.astype(np.float64), minlength=n_dev
+    ).astype(np.int64)
+    n_local = np.bincount(shard_of, minlength=n_dev)
+    return shard_of, local_id, seg_start, loads, n_local
+
+
 def shard_links_bloom_aligned(be: BEIndex, m: int, n_dev: int) -> dict:
+    """Greedy-balance blooms over shards by link count so every bloom's
+    links land on ONE device; returns [n_dev, ...] blocks with
+    shard-local bloom ids (see the one-psum rationale above)."""
     order = np.argsort(be.link_bloom, kind="stable")
     le, lt, lb = (be.link_edge[order], be.link_twin[order],
                   be.link_bloom[order])
     counts = np.bincount(lb, minlength=be.nb)
-    # greedy balance blooms over shards by link count (LPT-flavoured)
-    shard_of = np.zeros(be.nb, dtype=np.int64)
-    load = np.zeros(n_dev, dtype=np.int64)
-    for bid in np.argsort(-counts, kind="stable"):
-        s = int(np.argmin(load))
-        shard_of[bid] = s
-        load[s] += counts[bid]
-    Lmax = int(load.max()) if n_dev else 1
-    Lmax = max(Lmax, 1)
-    # local bloom ids per shard
-    nb_local = np.zeros(n_dev, dtype=np.int64)
-    loc_bloom = np.zeros(be.nb, dtype=np.int64)
-    for bid in range(be.nb):
-        s = shard_of[bid]
-        loc_bloom[bid] = nb_local[s]
-        nb_local[s] += 1
-    Bmax = max(int(nb_local.max()), 1)
+    shard_of, loc_bloom, seg_start, loads, nb_local = _greedy_balance(
+        counts, n_dev)
+    Lmax = max(int(loads.max()) if n_dev else 1, 1)
+    Bmax = max(int(nb_local.max()) if nb_local.size else 1, 1)
 
     le_s = np.full((n_dev, Lmax), m, np.int32)
     lt_s = np.full((n_dev, Lmax), m, np.int32)
     lb_s = np.full((n_dev, Lmax), Bmax, np.int32)
     alive = np.zeros((n_dev, Lmax), bool)
     k0 = np.zeros((n_dev, Bmax), np.int32)
-    fill = np.zeros(n_dev, dtype=np.int64)
-    off = np.zeros(be.nb + 1, dtype=np.int64)
-    np.cumsum(counts, out=off[1:])
-    for bid in range(be.nb):
-        s = shard_of[bid]
-        n = counts[bid]
-        a, b = off[bid], off[bid + 1]
-        f = fill[s]
-        le_s[s, f: f + n] = le[a:b]
-        lt_s[s, f: f + n] = lt[a:b]
-        lb_s[s, f: f + n] = loc_bloom[bid]
-        alive[s, f: f + n] = True
-        k0[s, loc_bloom[bid]] = be.bloom_k[bid]
-        fill[s] += n
+    if lb.size:
+        off = np.zeros(be.nb + 1, dtype=np.int64)
+        np.cumsum(counts, out=off[1:])
+        sh = shard_of[lb]
+        pos = np.arange(lb.size, dtype=np.int64) - off[lb] + seg_start[lb]
+        le_s[sh, pos] = le
+        lt_s[sh, pos] = lt
+        lb_s[sh, pos] = loc_bloom[lb]
+        alive[sh, pos] = True
+    if be.nb:
+        k0[shard_of, loc_bloom] = be.bloom_k
     return dict(le=le_s, lt=lt_s, lb=lb_s, alive=alive, k0=k0,
                 Bmax=Bmax, m=m)
 
@@ -232,6 +267,9 @@ def make_cd_round_bloom(mesh: Mesh, axis: str, Bmax: int, m: int):
 # — the engine that survives past the dense wall also shards.
 @dataclasses.dataclass
 class ShardedCSRState:
+    """Wedge-sharded CD state: the flat wedge list split over the mesh
+    axis, per-pair counts W and supports replicated."""
+
     we1: jax.Array         # (L_pad,) wedge -> edge 1, sharded (sentinel m)
     we2: jax.Array         # (L_pad,) wedge -> edge 2
     wp: jax.Array          # (L_pad,) wedge -> pair (sentinel n_pairs)
@@ -305,6 +343,97 @@ def make_cd_round_csr(mesh: Mesh, axis: str, n_pairs: int, m: int):
         body, mesh=mesh,
         in_specs=(spec_r, spec_l, spec_r, spec_r, spec_l, spec_l, spec_l),
         out_specs=(spec_l, spec_r, spec_r),
+    )
+    return jax.jit(fn)
+
+
+# =====================================================================
+# CD variant — pair-aligned ("bloom-aligned") wedge sharding, one psum
+# =====================================================================
+# Baseline csr CD needs TWO psums per round: dying-wedge counts c_p
+# (pairs straddle shards) then per-edge losses.  If every pair's wedges
+# live on ONE shard — pairs play the role of blooms — c_p and W_p become
+# shard-local state and a round costs a single psum (the loss): half the
+# collectives, mirroring ``shard_links_bloom_aligned`` for the engine
+# that scales past the BE-Index.
+def shard_wedges_pair_aligned(wed: csr.Wedges, n_dev: int) -> dict:
+    """Greedy-balance pairs over shards by wedge count (LPT-flavoured),
+    keeping all of a pair's wedges on one shard with shard-local pair
+    ids.  Returns [n_dev, ...] blocks: ``we1``/``we2`` (sentinel edge
+    m), ``wp`` (local pair ids, sentinel Pmax), ``alive``, ``W0`` (local
+    alive wedge counts, [n_dev, Pmax]), plus ``Pmax`` and ``m``."""
+    m = wed.m
+    n_pairs = wed.n_pairs
+    order = np.argsort(wed.wedge_pair, kind="stable")
+    we1, we2, wp = (wed.wedge_e1[order], wed.wedge_e2[order],
+                    wed.wedge_pair[order])
+    counts = np.bincount(wp, minlength=n_pairs)
+    shard_of, loc_pair, seg_start, loads, np_local = _greedy_balance(
+        counts, n_dev)
+    Lmax = max(int(loads.max()) if n_dev else 1, 1)
+    Pmax = max(int(np_local.max()) if np_local.size else 1, 1)
+
+    we1_s = np.full((n_dev, Lmax), m, np.int32)
+    we2_s = np.full((n_dev, Lmax), m, np.int32)
+    wp_s = np.full((n_dev, Lmax), Pmax, np.int32)
+    alive = np.zeros((n_dev, Lmax), bool)
+    W0 = np.zeros((n_dev, Pmax), np.int32)
+    if wp.size:
+        off = np.zeros(n_pairs + 1, dtype=np.int64)
+        np.cumsum(counts, out=off[1:])
+        sh = shard_of[wp]
+        pos = np.arange(wp.size, dtype=np.int64) - off[wp] + seg_start[wp]
+        we1_s[sh, pos] = we1
+        we2_s[sh, pos] = we2
+        wp_s[sh, pos] = loc_pair[wp]
+        alive[sh, pos] = True
+    if n_pairs:
+        W0[shard_of, loc_pair] = counts
+    return dict(we1=we1_s, we2=we2_s, wp=wp_s, alive=alive, W0=W0,
+                Pmax=Pmax, m=m)
+
+
+def make_cd_round_csr_pair_aligned(mesh: Mesh, axis: str, Pmax: int, m: int):
+    """One-psum csr CD round over pair-aligned wedge shards.
+
+    Same widow/survivor algebra as :func:`_cd_round_body_csr`, but c_p
+    and W_p are shard-local (a pair's wedges never straddle shards), so
+    the per-edge loss reduction is the ONLY collective per round."""
+
+    def body(peeled_pad, alive_w, W_loc, support_pad, we1, we2, wp):
+        # all sharded inputs are per-shard [1, ...] blocks
+        pe1 = peeled_pad[we1]
+        pe2 = peeled_pad[we2]
+        w_dies = alive_w & (pe1 | pe2)
+        c = jax.ops.segment_sum(
+            w_dies.astype(jnp.int32).reshape(-1),
+            wp.reshape(-1), num_segments=Pmax + 1)   # LOCAL — no psum
+        surv = alive_w & ~w_dies
+        surv_loss = jnp.where(surv.reshape(-1), c[wp.reshape(-1)], 0)
+        W_flat = W_loc.reshape(-1)
+        Wm1 = jnp.concatenate([W_flat - 1, jnp.zeros((1,), jnp.int32)])
+        loss_local = (
+            jax.ops.segment_sum(
+                jnp.where((w_dies & ~pe1).reshape(-1),
+                          Wm1[wp.reshape(-1)], 0) + surv_loss,
+                we1.reshape(-1), num_segments=m + 1)
+            + jax.ops.segment_sum(
+                jnp.where((w_dies & ~pe2).reshape(-1),
+                          Wm1[wp.reshape(-1)], 0) + surv_loss,
+                we2.reshape(-1), num_segments=m + 1)
+        )
+        loss = jax.lax.psum(loss_local, axis)        # the ONLY collective
+        support_pad = support_pad - loss
+        W_loc = W_loc - c[:Pmax].reshape(W_loc.shape)
+        alive_w = alive_w & ~w_dies
+        return alive_w, W_loc, support_pad
+
+    spec_l = P(axis)
+    spec_r = P()
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_r, spec_l, spec_l, spec_r, spec_l, spec_l, spec_l),
+        out_specs=(spec_l, spec_l, spec_r),
     )
     return jax.jit(fn)
 
@@ -492,6 +621,7 @@ def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
 def pack_fd_partitions_csr(
     wed: csr.Wedges, part: np.ndarray, sup_init: np.ndarray,
     n_parts: int, pad_to: Optional[int] = None,
+    bucket: bool = False, slots: bool = False, flat: bool = False,
 ) -> dict:
     """Stack per-partition wedge sub-lists into [n_parts, ...] arrays.
 
@@ -499,31 +629,73 @@ def pack_fd_partitions_csr(
     ≥ i (the same induced subgraph the single-device csr FD uses); edge
     ids are partition-local with a sentinel slot Emax for never-peeled
     later-partition edges, pair ids are relabeled per partition.  Same
-    sentinel/pad machinery as :func:`pack_fd_partitions`."""
+    sentinel/pad machinery as :func:`pack_fd_partitions`.
+
+    ``bucket=True`` rounds the stacked dims (Lmax, Emax, Pmax) up to
+    quarter-power-of-two buckets (``peel._bucket_pad``) so the jitted
+    single-dispatch FD driver (``peel._fd_while_vmapped`` consumers)
+    recompiles once per shape *bucket* instead of once per partition
+    layout — the same trick the per-partition launcher used, applied to
+    the whole stack.  Partitions whose individual sizes straddle
+    different buckets still land in ONE stacked layout (and therefore
+    one while_loop); the bucket only bounds recompiles across graphs.
+
+    ``flat=True`` additionally emits the ragged-concatenated arrays the
+    single-device single-dispatch driver consumes (see
+    :func:`_pack_fd_flat_csr` — the touching-wedge lists are disjoint,
+    so concatenation carries zero padding waste).
+
+    ``slots=True`` additionally packs each partition's wedge list into
+    the pairs-major slot layout the blocked Pallas ``support_update``
+    kernel consumes (`core.csr.PaddedCSR` per partition, stacked):
+    ``slot_e1``/``slot_e2`` are [n_parts, R, K] partition-local edge ids
+    (sentinel Emax on padding slots), ``slot_valid`` the initial alive
+    matrix.  Rows of all partitions share one (R, K) shape so the FD
+    while_loop body can flatten the partition axis into the kernel's row
+    grid — one kernel launch per round covering every partition."""
     m = part.size
     pe1 = part[wed.wedge_e1] if wed.n_wedges else np.zeros(0, np.int32)
     pe2 = part[wed.wedge_e2] if wed.n_wedges else np.zeros(0, np.int32)
+    pmin = np.minimum(pe1, pe2)
     per = []
     for i in range(n_parts):
         mine_idx = np.where(part == i)[0]
         loc = np.full(m, -1, dtype=np.int64)
         loc[mine_idx] = np.arange(mine_idx.size)
-        keep = (pe1 >= i) & (pe2 >= i)
+        keep_ge = (pe1 >= i) & (pe2 >= i)
+        # only wedges TOUCHING partition i can die during FD_i (edges of
+        # later partitions never peel here), and survivor charges from
+        # untouched ≥i wedges land only on discarded later-partition
+        # edges — so the wedge list holds the touching wedges while the
+        # untouched ones fold into the static W0 count (they stay alive
+        # the whole phase).  Exact, and it makes the stacked lists
+        # disjoint across partitions: each wedge appears exactly once,
+        # in partition min(part[e1], part[e2]).
+        keep = keep_ge & (pmin == i)
         kwe1 = wed.wedge_e1[keep]
         kwe2 = wed.wedge_e2[keep]
         pair_ids, wp_loc = np.unique(wed.wedge_pair[keep],
                                      return_inverse=True)
+        cnt_ge = np.bincount(wed.wedge_pair[keep_ge],
+                             minlength=max(wed.n_pairs, 1))
         per.append(dict(
             edges=mine_idx,
             we1=np.where(part[kwe1] == i, loc[kwe1], -1),
             we2=np.where(part[kwe2] == i, loc[kwe2], -1),
             wp=wp_loc,
-            W0=np.bincount(wp_loc, minlength=max(pair_ids.size, 1)),
+            W0=(cnt_ge[pair_ids] if pair_ids.size
+                else np.zeros(1, np.int64)),
             sup0=sup_init[mine_idx],
         ))
     Lmax = max((p["we1"].size for p in per), default=1) or 1
     Emax = max((p["edges"].size for p in per), default=1) or 1
     Pmax = max((p["W0"].size for p in per), default=1) or 1
+    if bucket:
+        from .peel import _bucket_pad
+
+        Lmax = _bucket_pad(Lmax)
+        Emax = _bucket_pad(Emax, floor=8)
+        Pmax = _bucket_pad(Pmax, floor=8)
     if pad_to:
         Lmax, Emax, Pmax = (max(Lmax, pad_to), max(Emax, pad_to),
                             max(Pmax, pad_to))
@@ -550,11 +722,169 @@ def pack_fd_partitions_csr(
         mine[i, : p["edges"].size] = True
         sup0[i, : p["edges"].size] = p["sup0"]
         gids[i, : p["edges"].size] = p["edges"]
-    return dict(
+    packed = dict(
         we1=we1, we2=we2, wp=pk("wp", Lmax, 0), alive0=alive0,
         W0=pk("W0", Pmax, 0), sup0=sup0, mine=mine, gids=gids,
         sizes=(Lmax, Emax, Pmax),
     )
+    if flat:
+        packed.update(_pack_fd_flat_csr(per, n_parts, Emax, bucket=bucket))
+    if slots:
+        packed.update(_pack_fd_slots_csr(per, n_parts, Emax, bucket=bucket))
+    return packed
+
+
+def _pack_fd_flat_csr(per: list, n_parts: int, Emax: int,
+                      bucket: bool = False) -> dict:
+    """Ragged-concatenated wedge arrays for the single-dispatch FD.
+
+    The touching-wedge lists are disjoint across partitions, so instead
+    of stacking them [n_parts, Lmax] (up to Lmax/mean padding waste) the
+    single-device vmapped driver concatenates them into ONE flat list
+    with pre-globalized segment ids: partition b's local edge e becomes
+    segment b·(Emax+1)+e, its local pair p becomes base_b+p.  Per-round
+    work is then O(Σ|list_i|) regardless of partition imbalance.  Pad
+    wedges (bucketed tail) point at partition 0's sentinel edge and a
+    dedicated dead pair and start dead."""
+    sizes = [p["wp"].size for p in per]
+    npairs = [int(p["W0"].size) for p in per]
+    pair_base = np.zeros(n_parts + 1, dtype=np.int64)
+    np.cumsum(npairs, out=pair_base[1:])
+    Ptot = int(pair_base[-1])
+    Wtot = int(sum(sizes))
+    Wpad = Wtot
+    Ppad = Ptot + 1
+    if bucket:
+        from .peel import _bucket_pad
+
+        Wpad = _bucket_pad(max(Wtot, 1))
+        Ppad = _bucket_pad(Ptot + 1, floor=8)
+    fe1 = np.full(Wpad, Emax, dtype=np.int32)   # partition-0 sentinel
+    fe2 = np.full(Wpad, Emax, dtype=np.int32)
+    fwp = np.full(Wpad, Ptot, dtype=np.int32)   # dedicated dead pair
+    falive = np.zeros(Wpad, dtype=bool)
+    fW0 = np.zeros(Ppad, dtype=np.int32)
+    pos = 0
+    for i, p in enumerate(per):
+        k = p["wp"].size
+        off = i * (Emax + 1)
+        e1 = np.where(p["we1"] < 0, Emax, p["we1"]) + off
+        e2 = np.where(p["we2"] < 0, Emax, p["we2"]) + off
+        fe1[pos: pos + k] = e1
+        fe2[pos: pos + k] = e2
+        fwp[pos: pos + k] = p["wp"] + pair_base[i]
+        falive[pos: pos + k] = True
+        fW0[pair_base[i]: pair_base[i + 1]] = p["W0"]
+        pos += k
+    return dict(flat_we1=fe1, flat_we2=fe2, flat_wp=fwp,
+                flat_alive0=falive, flat_W0=fW0,
+                flat_sizes=(Wpad, Ppad))
+
+
+def _pack_fd_slots_csr(per: list, n_parts: int, Emax: int,
+                       bucket: bool = False) -> dict:
+    """Stacked pairs-major slot layout for the Pallas in-loop FD update.
+
+    Row r of partition i's block holds the wedges of local pair r
+    (``core.csr.pad_segments`` per partition), all blocks padded to one
+    (R, K) shape.  Slot edge ids are partition-local with sentinel Emax
+    (the extra never-peeled edge slot), so the FD body's peeled-flag
+    gathers and loss scatters need no masking."""
+    # the kernel carries counts as f32 — same exactness boundary as
+    # core.csr.pack_update_slots (W only decreases; checking W0 suffices)
+    wmax = max((int(p["W0"].max()) if p["W0"].size else 0 for p in per),
+               default=0)
+    if wmax >= 2 ** 24:
+        raise OverflowError(
+            "pair wedge counts exceed f32 integer range (2^24); "
+            "use the segment_sum FD body (use_pallas=False)")
+    packs = [csr.pad_segments(p["wp"].astype(np.int64),
+                              max(p["W0"].size, 1)) for p in per]
+    R = max((pk.n_rows_pad for pk in packs), default=1) or 1
+    K = max((pk.width for pk in packs), default=1) or 1
+    if bucket:
+        from .peel import _bucket_pad
+
+        R = _bucket_pad(R, floor=8)
+        K = _bucket_pad(K, floor=128)
+    slot_e1 = np.full((n_parts, R, K), Emax, dtype=np.int32)
+    slot_e2 = np.full((n_parts, R, K), Emax, dtype=np.int32)
+    slot_valid = np.zeros((n_parts, R, K), dtype=bool)
+    for i, (p, pk) in enumerate(zip(per, packs)):
+        if p["wp"].size == 0:
+            continue
+        idx = np.maximum(pk.idx, 0)
+        # local edge ids; -1 (edge of a later partition) → sentinel Emax
+        e1 = np.where(p["we1"] < 0, Emax, p["we1"]).astype(np.int32)
+        e2 = np.where(p["we2"] < 0, Emax, p["we2"]).astype(np.int32)
+        r, c = pk.idx.shape
+        slot_e1[i, :r, :c] = np.where(pk.valid, e1[idx], Emax)
+        slot_e2[i, :r, :c] = np.where(pk.valid, e2[idx], Emax)
+        slot_valid[i, :r, :c] = pk.valid
+    return dict(slot_e1=slot_e1, slot_e2=slot_e2, slot_valid=slot_valid,
+                slot_sizes=(R, K))
+
+
+def pack_fd_partitions_tip_csr(
+    wed: csr.Wedges, pair_bf0: np.ndarray, part: np.ndarray,
+    sup_init: np.ndarray, n_parts: int, bucket: bool = False,
+) -> dict:
+    """Tip counterpart of :func:`pack_fd_partitions_csr`.
+
+    Tip FD needs only the pairs with BOTH endpoints inside the partition
+    (vertices of later partitions never peel during FD_i and deltas onto
+    them are discarded), so the stacked pair lists are disjoint across
+    partitions — no duplication.  Pair butterfly counts are static (the
+    V side is never peeled), so there is no per-partition wedge state:
+    pad pairs carry bf=0 and are algebra-neutral.
+
+    The kept pair lists are disjoint across partitions (each pair lives
+    where both endpoints do), so they concatenate ragged with
+    pre-globalized vertex ids — zero stacking padding.  Returns
+    ``pa``/``pb`` (W,) globalized segment ids b·Emax+u, ``bf`` (W,)
+    static pair butterflies (0 on the bucketed pad tail — algebra
+    neutral), plus [n_parts, Emax] ``mine``/``sup0``/``gids``."""
+    n = part.size
+    pa_p = part[wed.pair_a] if wed.n_pairs else np.zeros(0, np.int32)
+    pb_p = part[wed.pair_b] if wed.n_pairs else np.zeros(0, np.int32)
+    per = []
+    for i in range(n_parts):
+        mine_idx = np.where(part == i)[0]
+        loc = np.full(n, -1, dtype=np.int64)
+        loc[mine_idx] = np.arange(mine_idx.size)
+        keep = (pa_p == i) & (pb_p == i)
+        per.append(dict(
+            nodes=mine_idx,
+            pa=loc[wed.pair_a[keep]], pb=loc[wed.pair_b[keep]],
+            bf=pair_bf0[keep].astype(np.int32),
+            sup0=sup_init[mine_idx],
+        ))
+    Emax = max((p["nodes"].size for p in per), default=1) or 1
+    Wtot = int(sum(p["pa"].size for p in per))
+    Wpad = max(Wtot, 1)
+    if bucket:
+        from .peel import _bucket_pad
+
+        Emax = _bucket_pad(Emax, floor=8)
+        Wpad = _bucket_pad(Wpad)
+    pa = np.zeros(Wpad, dtype=np.int32)
+    pb = np.zeros(Wpad, dtype=np.int32)
+    bf = np.zeros(Wpad, dtype=np.int32)
+    mine = np.zeros((n_parts, Emax), dtype=bool)
+    sup0 = np.zeros((n_parts, Emax), dtype=np.int32)
+    gids = np.zeros((n_parts, Emax), dtype=np.int32)
+    pos = 0
+    for i, p in enumerate(per):
+        k = p["pa"].size
+        pa[pos: pos + k] = p["pa"] + i * Emax
+        pb[pos: pos + k] = p["pb"] + i * Emax
+        bf[pos: pos + k] = p["bf"]
+        pos += k
+        mine[i, : p["nodes"].size] = True
+        sup0[i, : p["nodes"].size] = p["sup0"]
+        gids[i, : p["nodes"].size] = p["nodes"]
+    return dict(pa=pa, pb=pb, bf=bf, mine=mine, sup0=sup0, gids=gids,
+                sizes=(Wpad, Emax))
 
 
 def _fd_body_one_partition_csr(we1, we2, wp, alive0, W0, sup0, mine):
@@ -638,24 +968,40 @@ def distributed_wing_decomposition(
     be: Optional[BEIndex] = None,
     bloom_aligned: bool = False,
     engine: str = "beindex",
+    pair_aligned: bool = False,
 ) -> Tuple[np.ndarray, dict]:
     """Full PBNG wing decomposition on a device mesh.
 
     ``engine="beindex"``: link-sharded CD rounds (two psums;
     ``bloom_aligned=True`` uses the one-psum §Perf variant) + link-packed
     FD.  ``engine="csr"``: wedge-sharded CD rounds + wedge-packed FD —
-    O(Σ deg²) memory end to end, no BE-Index built.  FD is
+    O(Σ deg²) memory end to end, no BE-Index built;
+    ``pair_aligned=True`` shards wedges pair-aligned (all of a pair's
+    wedges on one device) so the dying-count reduction c_p is
+    shard-local and CD pays ONE psum per round instead of two.  FD is
     communication-free either way.  Returns (theta, stats).
+
+    Example (8 forced host devices)::
+
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        theta, stats = distributed_wing_decomposition(
+            g, mesh, engine="csr", pair_aligned=True)
     """
     if engine not in ("beindex", "csr"):
         raise ValueError(engine)
+    if pair_aligned and engine != "csr":
+        raise ValueError(
+            "pair_aligned shards the wedge list: csr engine only "
+            "(the beindex analogue is bloom_aligned)"
+        )
     if engine == "csr":
         if bloom_aligned or be is not None:
             raise ValueError(
                 "engine='csr' builds no BE-Index: bloom_aligned/be "
                 "only apply to engine='beindex'"
             )
-        return _distributed_wing_csr(g, mesh, axis, P_parts)
+        return _distributed_wing_csr(g, mesh, axis, P_parts,
+                                     pair_aligned=pair_aligned)
     if be is None:
         be = build_beindex(g)
     m = g.m
@@ -713,22 +1059,53 @@ def distributed_wing_decomposition(
 
 
 def _distributed_wing_csr(
-    g: BipartiteGraph, mesh: Mesh, axis: str, P_parts: int
+    g: BipartiteGraph, mesh: Mesh, axis: str, P_parts: int,
+    pair_aligned: bool = False,
 ) -> Tuple[np.ndarray, dict]:
-    """csr engine on a mesh: wedge-sharded CD + wedge-packed FD."""
+    """csr engine on a mesh: wedge-sharded CD + wedge-packed FD.
+
+    ``pair_aligned`` swaps the round-robin wedge padding for the
+    pair-aligned layout (one psum per CD round instead of two)."""
     wed = csr.build_wedges(g)
     m = g.m
     n_dev = int(mesh.devices.size)
-    st = shard_wedges(wed, n_dev)
-    round_fn = make_cd_round_csr(mesh, axis, st.n_pairs, m)
+    if pair_aligned:
+        packed = shard_wedges_pair_aligned(wed, n_dev)
+        round_fn = make_cd_round_csr_pair_aligned(
+            mesh, axis, packed["Pmax"], m)
+        pa_alive = jnp.asarray(packed["alive"])
+        pa_W = jnp.asarray(packed["W0"])
+        pa_we1 = jnp.asarray(packed["we1"])
+        pa_we2 = jnp.asarray(packed["we2"])
+        pa_wp = jnp.asarray(packed["wp"])
+        sup0 = csr.edge_butterflies0(wed)
+        if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
+            raise OverflowError(
+                "wing supports exceed int32; shard the graph")
+        support = jnp.asarray(sup0.astype(np.int32))
+        st = None
+    else:
+        st = shard_wedges(wed, n_dev)
+        round_fn = make_cd_round_csr(mesh, axis, st.n_pairs, m)
+        support = st.support
 
     def step(active: np.ndarray) -> np.ndarray:
-        nonlocal st
+        nonlocal st, support, pa_alive, pa_W
+        if pair_aligned:
+            peeled_pad = jnp.concatenate(
+                [jnp.asarray(active), jnp.zeros((1,), bool)])
+            support_pad = jnp.concatenate(
+                [support, jnp.zeros((1,), jnp.int32)])
+            pa_alive, pa_W, support_pad = round_fn(
+                peeled_pad, pa_alive, pa_W, support_pad,
+                pa_we1, pa_we2, pa_wp)
+            support = support_pad[:-1]
+            return np.asarray(support).astype(np.int64)
         st = cd_round_sharded_csr(round_fn, st, jnp.asarray(active))
         return np.asarray(st.support).astype(np.int64)
 
     part, sup_init, rho_cd = _cd_partition_loop(
-        np.asarray(st.support).astype(np.int64), P_parts, step)
+        np.asarray(support).astype(np.int64), P_parts, step)
     n_parts = int(part.max()) + 1
 
     packed = pack_fd_partitions_csr(wed, part, sup_init, n_parts)
@@ -739,6 +1116,7 @@ def _distributed_wing_csr(
         theta[packed["gids"][i][mine]] = theta_loc[i][mine]
     stats = dict(
         engine="csr",
+        cd_sharding="pair_aligned" if pair_aligned else "wedge",
         rho_cd=rho_cd,
         rho_fd_total=int(rounds.sum()),
         rho_fd_max=int(rounds.max()) if rounds.size else 0,
@@ -771,6 +1149,7 @@ def _tip_cd_recount_body(A_blk, alive_blk, A_full, alive_full, row0):
 
 
 def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
+    """Jitted row-sharded tip batch re-count; returns (fn, rows/shard)."""
     blk = -(-n // n_dev)
 
     def body(A_pad, alive_pad, shard_idx):
@@ -830,6 +1209,20 @@ def distributed_tip_decomposition(
     side: str = "u",
     P_parts: int = 8,
 ) -> Tuple[np.ndarray, dict]:
+    """Full PBNG tip decomposition on a device mesh.
+
+    CD re-counts supports with row-sharded masked matmuls (zero
+    collectives per round at container scale — A is replicated); FD
+    stacks padded partitions and peels them under ``shard_map`` with no
+    communication, pairwise butterfly counts computed once per partition
+    inside the kernel (static: V is never peeled).  Returns
+    (theta, stats) with θ bit-identical to the single-device engines.
+
+    Example (8 forced host devices)::
+
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        theta, stats = distributed_tip_decomposition(g, mesh, side="u")
+    """
     from . import counting
 
     gg = g if side == "u" else g.transpose()

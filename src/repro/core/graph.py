@@ -39,13 +39,16 @@ class BipartiteGraph:
     # ---------------------------------------------------------------- basic
     @property
     def m(self) -> int:
+        """Edge count |E|."""
         return int(self.edges.shape[0])
 
     @property
     def n(self) -> int:
+        """Combined vertex count |U| + |V|."""
         return self.n_u + self.n_v
 
     def degrees(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(d_u, d_v) int64 degree vectors."""
         du = np.bincount(self.edges[:, 0], minlength=self.n_u)
         dv = np.bincount(self.edges[:, 1], minlength=self.n_v)
         return du.astype(np.int64), dv.astype(np.int64)
@@ -77,6 +80,8 @@ class BipartiteGraph:
         return A
 
     def transpose(self) -> "BipartiteGraph":
+        """Swap U and V (tip decomposition of the V side peels the
+        transpose's U side)."""
         e = self.edges[:, ::-1].copy()
         order = np.lexsort((e[:, 1], e[:, 0]))
         return BipartiteGraph(self.n_v, self.n_u, e[order])
@@ -84,6 +89,7 @@ class BipartiteGraph:
     # --------------------------------------------------------------- build
     @staticmethod
     def from_edges(n_u: int, n_v: int, edges) -> "BipartiteGraph":
+        """Canonical constructor: dedup + lexsort + bounds-check edges."""
         e = np.asarray(edges, dtype=np.int32).reshape(-1, 2)
         if e.size:
             e = np.unique(e, axis=0)

@@ -102,6 +102,14 @@ class PeelStats:
 
 @dataclasses.dataclass
 class PeelResult:
+    """Everything a decomposition produced.
+
+    ``theta`` are the tip/wing numbers (the deliverable); ``part`` /
+    ``ranges`` / ``support_init`` are the CD partition assignment, range
+    boundaries θ(1..P+1), and the ⋈init support snapshot — together the
+    provenance the hierarchy builder/serializer persists; ``stats`` is
+    the engine-tagged :class:`PeelStats` row."""
+
     theta: np.ndarray        # entity numbers
     part: np.ndarray         # CD partition id per entity
     ranges: np.ndarray       # (P+1,) range boundaries θ(1..P+1)
@@ -154,10 +162,13 @@ class _AdaptiveTarget:
         self.scale = 1.0
 
     def target(self, i: int) -> float:
+        """Workload target for partition i: remaining / remaining parts,
+        damped by the last overshoot ratio."""
         rem_parts = max(self.P - i, 1)
         return self.scale * self.remaining / rem_parts
 
     def consumed(self, initial_estimate: float, final_estimate: float) -> None:
+        """Record partition i's actual workload and update the damping."""
         self.remaining = max(self.remaining - final_estimate, 0.0)
         if final_estimate > 0 and initial_estimate > 0:
             # predictive local behaviour: next partition will overshoot
@@ -272,6 +283,195 @@ def _fd_while_device(mine: jax.Array, sup0: jax.Array, update, aux):
     return theta, rounds, nupd
 
 
+def _fd_while_vmapped(mine: jax.Array, sup0: jax.Array, update, aux):
+    """The FULL Phase 2 — every partition's cascade — as ONE batched
+    ``lax.while_loop``: the single-dispatch companion of
+    :func:`_fd_while_device`.
+
+    ``mine``/``sup0`` carry a leading partition axis [B, E]; each
+    iteration advances every still-alive partition by exactly one peel
+    round (its own k-advance + ≤k peel), so per-partition round counts
+    are bit-identical to the per-partition drivers and the loop's trip
+    count is the FD *critical path* rho_fd_max.  Finished partitions
+    idle (empty peel sets are algebra-neutral) until the last one
+    drains — the whole Phase 2 is one dispatch, zero host round-trips,
+    zero collectives: PBNG's "no global synchronization" claim stated
+    structurally for the entire fine-grained phase, not per partition.
+
+    ``update(S, aux) -> (loss, aux', n_upd)`` consumes the batched peel
+    mask S [B, E] and returns batched losses plus the scalar update
+    count of the round.  Returns (theta [B, E], rounds [B], updates).
+    """
+
+    def cond(state):
+        alive, *_ = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, sup, aux, theta, k, rounds, nupd = state
+        live = jnp.any(alive, axis=1)
+        cur = jnp.where(alive, sup, _FD_BIG)
+        k = jnp.maximum(k, jnp.min(cur, axis=1))
+        S = alive & (sup <= k[:, None])
+        # per live partition S is non-empty (k ≥ its min alive support):
+        # every iteration is one real peel round of every live partition
+        theta = jnp.where(S, k[:, None], theta)
+        alive = alive & ~S
+        loss, aux, nu = update(S, aux)
+        return (alive, sup - loss, aux, theta, k,
+                rounds + live.astype(jnp.int32), nupd + nu)
+
+    # derive loop-constant inits from varying inputs (cf. _fd_while_device)
+    zero_e = sup0 * 0
+    zero_p = jnp.min(zero_e, axis=1)
+    init = (mine, sup0, aux, zero_e, zero_p, zero_p, jnp.int32(0))
+    _, _, _, theta, _, rounds, nupd = jax.lax.while_loop(cond, body, init)
+    return theta, rounds, nupd
+
+
+@jax.jit
+def _fd_tip_vmapped(
+    pag: jax.Array,      # (W,) int32 — globalized pair endpoints b·Emax+u
+    pbg: jax.Array,
+    bff: jax.Array,      # (W,) int32 — static pair butterflies (0 on pad)
+    mine: jax.Array,     # (B, E) bool — partition members
+    sup0: jax.Array,     # (B, E) int32 — ⋈init (zero outside mine)
+):
+    """All tip-FD partitions in a single while_loop (one dispatch).
+
+    :func:`csr.tip_delta_csr` over the ragged-concatenated pair lists
+    with the partition axis folded into pre-globalized segment ids
+    (partition b's vertex u → segment b·Emax+u): one flat
+    ``segment_sum`` pass per round covers every partition.  Padding
+    pairs carry bf=0 and are algebra-neutral."""
+    B, Emax = mine.shape
+
+    def update(S, aux):
+        Sf = S.reshape(-1)
+        loss = (
+            jax.ops.segment_sum(
+                jnp.where(Sf[pbg], bff, 0), pag, num_segments=B * Emax)
+            + jax.ops.segment_sum(
+                jnp.where(Sf[pag], bff, 0), pbg, num_segments=B * Emax)
+        ).reshape(B, Emax)
+        return loss, aux, jnp.int32(0)
+
+    return _fd_while_vmapped(mine, sup0, update, jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("n_pairs",))
+def _fd_wing_vmapped(
+    e1g: jax.Array,      # (W,) int32 — globalized edge ids b·(Emax+1)+e
+    e2g: jax.Array,
+    wpg: jax.Array,      # (W,) int32 — globalized pair ids (dead pad → n_pairs-ish slot)
+    alive0: jax.Array,   # (W,) bool — wedges touching their partition
+    W0: jax.Array,       # (n_pairs,) int32 — alive ≥i wedges per pair
+    mine: jax.Array,     # (B, E) bool
+    sup0: jax.Array,     # (B, E) int32
+    n_pairs: int,
+):
+    """All wing-FD partitions in a single while_loop (one dispatch).
+
+    The per-round update is :func:`csr.wing_loss_csr`'s widow/survivor
+    algebra over the ragged-CONCATENATED wedge lists: the partition axis
+    is folded into pre-globalized segment ids (partition b's edge e →
+    segment b·(Emax+1)+e), so every round is ONE flat ``segment_sum``
+    pass whose work is Σ|touching wedges| with zero stacking padding —
+    and one scatter-add instead of a batched one.  No collectives
+    anywhere."""
+    B, Emax = mine.shape
+
+    def update(S, aux):
+        alive_w, W = aux                      # (W,), (n_pairs,)
+        S_pad = jnp.concatenate(
+            [S, jnp.zeros((B, 1), bool)], axis=1).reshape(-1)
+        pe1 = S_pad[e1g]
+        pe2 = S_pad[e2g]
+        w_dies = alive_w & (pe1 | pe2)
+        c = jax.ops.segment_sum(
+            w_dies.astype(jnp.int32), wpg, num_segments=n_pairs)
+        surv = alive_w & ~w_dies
+        surv_loss = jnp.where(surv, c[wpg], 0)
+        nseg = B * (Emax + 1)
+        loss = (
+            jax.ops.segment_sum(
+                jnp.where(w_dies & ~pe1, W[wpg] - 1, 0) + surv_loss,
+                e1g, num_segments=nseg)
+            + jax.ops.segment_sum(
+                jnp.where(w_dies & ~pe2, W[wpg] - 1, 0) + surv_loss,
+                e2g, num_segments=nseg)
+        ).reshape(B, Emax + 1)[:, :Emax]
+        nu = jnp.sum((w_dies & (~pe1 | ~pe2)).astype(jnp.int32)) + jnp.sum(
+            (surv & (c[wpg] > 0)).astype(jnp.int32)
+        )
+        return loss, (alive_w & ~w_dies, W - c), nu
+
+    return _fd_while_vmapped(mine, sup0, update, (alive0, W0))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _fd_wing_vmapped_pallas(
+    slot_e1: jax.Array,     # (B, R, K) int32 — local edge ids, sentinel E
+    slot_e2: jax.Array,
+    valid0: jax.Array,      # (B, R, K) bool — initial alive slots
+    W0: jax.Array,          # (B, R) int32 — alive wedges per slot row
+    mine: jax.Array,        # (B, E) bool
+    sup0: jax.Array,        # (B, E) int32
+    interpret: bool = True,
+):
+    """Single-dispatch wing FD with the blocked Pallas ``support_update``
+    kernel INSIDE the while_loop body.
+
+    The stacked pairs-major slot blocks flatten along rows into one
+    (B·R, K) matrix, so each round is ONE kernel launch covering every
+    partition (the partition axis rides the kernel's row grid — no vmap
+    over ``pallas_call`` needed); only the loss scatter back onto the
+    per-partition edge slots stays a ``segment_sum``.  Counts are
+    re-integerized from f32 straight out of the kernel — exact while
+    W_p < 2²⁴ (guarded at pack time), parity-tested against the
+    segment-sum body.
+    """
+    from repro.kernels import ops as kops  # local import: keep core light
+
+    B, Emax = mine.shape
+    _, R, K = slot_e1.shape
+    # globalize slot edge ids: partition b's edge e → b·(Emax+1) + e
+    # (sentinel Emax lands in b's own discard slot)
+    off = (jnp.arange(B, dtype=jnp.int32) * (Emax + 1))[:, None, None]
+    e1g = (slot_e1 + off).reshape(B * R, K)
+    e2g = (slot_e2 + off).reshape(B * R, K)
+
+    def update(S, aux):
+        alive_slots, W = aux                       # (B·R, K), (B·R)
+        S_pad = jnp.concatenate(
+            [S, jnp.zeros((B, 1), bool)], axis=1).reshape(-1)
+        pe1 = S_pad[e1g]
+        pe2 = S_pad[e2g]
+        c1, c2, c_row = kops.support_update(
+            pe1, pe2, alive_slots, W, interpret=interpret
+        )
+        c1 = jnp.rint(c1).astype(jnp.int32)
+        c2 = jnp.rint(c2).astype(jnp.int32)
+        c_row = jnp.rint(c_row).astype(jnp.int32)
+        nseg = B * (Emax + 1)
+        loss = (
+            jax.ops.segment_sum(c1.reshape(-1), e1g.reshape(-1),
+                                num_segments=nseg)
+            + jax.ops.segment_sum(c2.reshape(-1), e2g.reshape(-1),
+                                  num_segments=nseg)
+        ).reshape(B, Emax + 1)[:, :Emax]
+        dies = alive_slots & (pe1 | pe2)
+        surv = alive_slots & ~dies
+        nu = jnp.sum((dies & (~pe1 | ~pe2)).astype(jnp.int32)) + jnp.sum(
+            (surv & (c_row[:, None] > 0)).astype(jnp.int32)
+        )
+        return loss, (alive_slots & ~dies, W - c_row), nu
+
+    return _fd_while_vmapped(
+        mine, sup0, update, (valid0.reshape(B * R, K), W0.reshape(B * R))
+    )
+
+
 @partial(jax.jit, static_argnames=("n",))
 def _fd_tip_device(
     mine: jax.Array,      # (n,) bool — partition members
@@ -354,7 +554,23 @@ def tip_decomposition(
     engine: str = "dense",
     fd_driver: str = "device",
 ) -> PeelResult:
-    """PBNG tip decomposition (§3.2).
+    """PBNG tip decomposition (§3.2) — θ per U (or V) vertex.
+
+    ``engine``/``fd_driver`` matrix (all combinations θ-bit-identical):
+
+    ========  =====================================  ====================
+    engine    support counting / update              fd_driver
+    ========  =====================================  ====================
+    dense     masked MXU matmul re-counts, O(n²)     (host cascade)
+    csr       incremental pair updates, O(Σ deg²)    device │ vmapped │ host
+    ========  =====================================  ====================
+
+    Example::
+
+        from repro.core import random_bipartite, tip_decomposition
+        g = random_bipartite(1000, 800, 8000, seed=0)
+        res = tip_decomposition(g, side="u", engine="csr", P=8)
+        print(res.theta.max(), res.stats.rho_cd)
 
     ``engine="dense"`` (default) re-counts with masked MXU matmuls;
     ``engine="csr"`` peels on the sparse wedge list (``core.csr``) with
@@ -363,8 +579,11 @@ def tip_decomposition(
 
     ``fd_driver`` (csr engine only): ``"device"`` (default) peels each FD
     partition in a single ``lax.while_loop`` dispatch — zero host↔device
-    transfers inside a partition; ``"host"`` drives rounds from a python
-    loop (the PR-1 baseline kept for A/B benchmarks).
+    transfers inside a partition; ``"vmapped"`` stacks ALL partitions
+    into one shape-bucketed layout and runs the whole Phase 2 as ONE
+    batched while_loop (a single dispatch total); ``"host"`` drives
+    rounds from a python loop (the PR-1 baseline kept for A/B
+    benchmarks).
 
     ``batch_recount`` (dense engine only): the §5.1 batch optimization
     knob —
@@ -377,7 +596,7 @@ def tip_decomposition(
     """
     if engine not in ("dense", "csr"):
         raise ValueError(engine)
-    if fd_driver not in ("device", "host"):
+    if fd_driver not in ("device", "host", "vmapped"):
         raise ValueError(fd_driver)
     gg = g if side == "u" else g.transpose()
     if engine == "csr":
@@ -580,15 +799,23 @@ def _tip_decomposition_csr(
 
     # ------------------------------------------------------------- FD
     theta = np.zeros(n, dtype=np.int64)
-    part_work = np.array(
-        [wedge_w[part == i].sum() for i in range(stats.p_effective)]
-    )
-    for i in _lpt_order(part_work):
-        rounds = _tip_fd_csr(
-            wed, pair_bf0, part, int(i), sup_init, theta, fd_driver=fd_driver
+    if fd_driver == "vmapped":
+        rounds_v = _tip_fd_vmapped_csr(
+            wed, pair_bf0, part, sup_init, theta, stats.p_effective
         )
-        stats.rho_fd_total += rounds
-        stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+        stats.rho_fd_total = int(rounds_v.sum())
+        stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
+    else:
+        part_work = np.array(
+            [wedge_w[part == i].sum() for i in range(stats.p_effective)]
+        )
+        for i in _lpt_order(part_work):
+            rounds = _tip_fd_csr(
+                wed, pair_bf0, part, int(i), sup_init, theta,
+                fd_driver=fd_driver
+            )
+            stats.rho_fd_total += rounds
+            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
 
     return PeelResult(
         theta=theta,
@@ -654,6 +881,86 @@ def _tip_fd_csr(
         return sup - delta
 
     return _fd_cascade(mine, support0, theta, peel)
+
+
+def _tip_fd_vmapped_csr(
+    wed: csr.Wedges,
+    pair_bf0: np.ndarray,
+    part: np.ndarray,
+    sup_init: np.ndarray,
+    theta: np.ndarray,
+    n_parts: int,
+) -> np.ndarray:
+    """Single-dispatch tip Phase 2: pack all partitions into one stacked
+    shape-bucketed layout and peel them in ONE batched while_loop
+    (:func:`_fd_tip_vmapped`).  Writes θ in place; returns the (B,)
+    per-partition round counts (bit-identical to the per-partition
+    drivers — same cascade, one dispatch)."""
+    if n_parts == 0:
+        return np.zeros(0, dtype=np.int64)
+    from .distributed import pack_fd_partitions_tip_csr
+
+    packed = pack_fd_partitions_tip_csr(
+        wed, pair_bf0, part, sup_init, n_parts, bucket=True
+    )
+    theta_st, rounds, _ = _fd_tip_vmapped(
+        jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
+        jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
+        jnp.asarray(packed["sup0"]),
+    )
+    mm = packed["mine"]
+    theta[packed["gids"][mm]] = np.asarray(theta_st).astype(np.int64)[mm]
+    return np.asarray(rounds).astype(np.int64)
+
+
+def _wing_fd_vmapped_csr(
+    wed: csr.Wedges,
+    part: np.ndarray,
+    sup_init: np.ndarray,
+    theta: np.ndarray,
+    n_parts: int,
+    use_pallas: bool = False,
+) -> Tuple[np.ndarray, int]:
+    """Single-dispatch wing Phase 2 (see :func:`_tip_fd_vmapped_csr`).
+
+    ``use_pallas`` swaps the vmapped segment-sum body for the blocked
+    Pallas ``support_update`` kernel over the stacked slot layout
+    (:func:`_fd_wing_vmapped_pallas`) — interpret mode off-TPU, θ and
+    round/update counts parity-locked either way.  Returns (rounds (B,),
+    update count)."""
+    if n_parts == 0:
+        return np.zeros(0, dtype=np.int64), 0
+    from .distributed import pack_fd_partitions_csr
+
+    packed = pack_fd_partitions_csr(
+        wed, part, sup_init, n_parts, bucket=True,
+        flat=not use_pallas, slots=use_pallas,
+    )
+    if use_pallas:
+        from repro.kernels import ops as kops  # local: keep core light
+
+        R, _ = packed["slot_sizes"]
+        W0 = packed["W0"]
+        W_rows = np.zeros((n_parts, R), dtype=np.int32)
+        w = min(R, W0.shape[1])
+        W_rows[:, :w] = W0[:, :w]
+        theta_st, rounds, nupd = _fd_wing_vmapped_pallas(
+            jnp.asarray(packed["slot_e1"]), jnp.asarray(packed["slot_e2"]),
+            jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
+            jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]),
+            interpret=kops.default_interpret(),
+        )
+    else:
+        theta_st, rounds, nupd = _fd_wing_vmapped(
+            jnp.asarray(packed["flat_we1"]), jnp.asarray(packed["flat_we2"]),
+            jnp.asarray(packed["flat_wp"]), jnp.asarray(packed["flat_alive0"]),
+            jnp.asarray(packed["flat_W0"]), jnp.asarray(packed["mine"]),
+            jnp.asarray(packed["sup0"]),
+            n_pairs=int(packed["flat_W0"].shape[0]),
+        )
+    mm = packed["mine"]
+    theta[packed["gids"][mm]] = np.asarray(theta_st).astype(np.int64)[mm]
+    return np.asarray(rounds).astype(np.int64), int(nupd)
 
 
 # =====================================================================
@@ -722,22 +1029,47 @@ def wing_decomposition(
     fd_driver: str = "device",
     use_pallas: bool = False,
 ) -> PeelResult:
-    """PBNG wing decomposition (§3.3).
+    """PBNG wing decomposition (§3.3) — θ per edge.
+
+    ``engine``/``fd_driver`` matrix (all combinations θ-bit-identical):
+
+    ========  =====================================  ====================
+    engine    support counting / update              fd_driver
+    ========  =====================================  ====================
+    beindex   BE-Index widow/survivor (alg. 4/6)     (host cascade)
+    dense     masked MXU matmul re-counts, O(n²)     (host cascade)
+    csr       incremental wedge-list updates         device │ vmapped │ host
+    ========  =====================================  ====================
+
+    Example::
+
+        from repro.core import random_bipartite, wing_decomposition
+        g = random_bipartite(1000, 800, 8000, seed=0)
+        res = wing_decomposition(g, engine="csr", fd_driver="vmapped")
+        print(res.theta.max(), res.stats.sync_reduction)
 
     ``engine`` ∈ {"beindex", "dense", "csr"}: BE-Index incremental
     updates, masked-matmul re-counts, or sparse wedge-list incremental
     updates (``core.csr`` — the scalable path).
 
     ``fd_driver`` (csr engine only): ``"device"`` (default) peels each FD
-    partition in one ``lax.while_loop`` dispatch; ``"host"`` keeps the
-    per-round python loop as an A/B baseline.
+    partition in one ``lax.while_loop`` dispatch; ``"vmapped"`` stacks
+    ALL partitions into one shape-bucketed layout and runs the whole
+    Phase 2 as ONE batched while_loop — a single dispatch total, the
+    paper's "no global synchronization" stated structurally for the
+    entire fine-grained phase; ``"host"`` keeps the per-round python
+    loop as an A/B baseline.  All drivers produce bit-identical θ and
+    identical per-partition round/update counts.
 
     ``use_pallas`` (csr engine only): run CD support updates through the
     blocked ``kernels.support_update`` Pallas kernel on the pairs-major
-    slot layout (interpret mode off-TPU) instead of flat segment_sums."""
+    slot layout (interpret mode off-TPU) instead of flat segment_sums.
+    With ``fd_driver="vmapped"`` the same kernel also runs INSIDE the FD
+    while_loop body over the stacked partition slot layout (one kernel
+    launch per round covering every partition)."""
     if engine not in ("beindex", "dense", "csr"):
         raise ValueError(engine)
-    if fd_driver not in ("device", "host"):
+    if fd_driver not in ("device", "host", "vmapped"):
         raise ValueError(fd_driver)
     m = g.m
     edges = jnp.asarray(g.edges.astype(np.int32))
@@ -847,13 +1179,22 @@ def wing_decomposition(
             stats.rho_fd_max = max(stats.rho_fd_max, rounds)
             stats.updates += nupd
     elif engine == "csr":
-        for i in order:
-            rounds, nupd = _wing_fd_csr(
-                wed, part, int(i), sup_init, theta, fd_driver=fd_driver
+        if fd_driver == "vmapped":
+            rounds_v, nupd = _wing_fd_vmapped_csr(
+                wed, part, sup_init, theta, stats.p_effective,
+                use_pallas=use_pallas,
             )
-            stats.rho_fd_total += rounds
-            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+            stats.rho_fd_total = int(rounds_v.sum())
+            stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
             stats.updates += nupd
+        else:
+            for i in order:
+                rounds, nupd = _wing_fd_csr(
+                    wed, part, int(i), sup_init, theta, fd_driver=fd_driver
+                )
+                stats.rho_fd_total += rounds
+                stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+                stats.updates += nupd
     else:
         for i in order:
             rounds, nrec = _wing_fd_dense(g, part, int(i), sup_init, theta)
@@ -916,11 +1257,12 @@ def _wing_fd_csr(
 ) -> Tuple[int, int]:
     """FD for partition i, csr engine.
 
-    Sub-structure = wedges with both edges in partitions ≥ i (the same
-    induced subgraph the dense FD re-counts on); per-pair alive counts
-    are re-derived for the subgraph, then partition-i edges peel with the
-    incremental update.  Deltas landing on later-partition edges are
-    computed but never read — their FD runs from its own ⋈init snapshot.
+    Sub-structure = the ≥i induced subgraph (the same one the dense FD
+    re-counts on): per-pair alive counts W_p are re-derived over ALL ≥i
+    wedges, but the wedge *list* carries only the wedges touching
+    partition i — later-partition-only wedges never die during FD_i and
+    their survivor charges land on edges whose deltas are discarded
+    anyway (their FD runs from its own ⋈init snapshot).
 
     ``fd_driver="device"`` (default) runs the whole cascade in one
     ``lax.while_loop`` (:func:`_fd_wing_device`); ``"host"`` keeps the
@@ -931,13 +1273,21 @@ def _wing_fd_csr(
         return 0, 0
     m = part.size
     n_pairs = wed.n_pairs
-    keep = (
-        (part[wed.wedge_e1] >= i) & (part[wed.wedge_e2] >= i)
-        if wed.n_wedges else np.zeros(0, bool)
-    )
+    if wed.n_wedges:
+        p1 = part[wed.wedge_e1]
+        p2 = part[wed.wedge_e2]
+        keep_ge = (p1 >= i) & (p2 >= i)
+        # only wedges TOUCHING partition i can die during FD_i; the
+        # untouched ≥i wedges stay alive all phase and their survivor
+        # charges land on discarded later-partition edges — fold them
+        # into the static W_p init instead of carrying them (exact; see
+        # distributed.pack_fd_partitions_csr)
+        keep = keep_ge & (np.minimum(p1, p2) == i)
+    else:
+        keep_ge = keep = np.zeros(0, bool)
     Wp = jnp.asarray(
         np.bincount(
-            wed.wedge_pair[keep], minlength=max(n_pairs, 1)
+            wed.wedge_pair[keep_ge], minlength=max(n_pairs, 1)
         ).astype(np.int32)
     )
 

@@ -42,6 +42,7 @@ def _common_matrix(g: BipartiteGraph) -> np.ndarray:
 
 
 def butterfly_count_total(g: BipartiteGraph) -> int:
+    """⋈(G) ground truth: Σ over U pairs of C(#common neighbours, 2)."""
     W = _common_matrix(g)
     np.fill_diagonal(W, 0)
     return int((W * (W - 1) // 2).sum() // 2)
@@ -157,12 +158,14 @@ class _UnionFind:
         self.p = list(range(n))
 
     def find(self, x: int) -> int:
+        """Root of x's set, with path halving."""
         while self.p[x] != x:
             self.p[x] = self.p[self.p[x]]
             x = self.p[x]
         return x
 
     def union(self, a: int, b: int) -> None:
+        """Merge the sets of a and b (min root wins, for determinism)."""
         ra, rb = self.find(a), self.find(b)
         if ra != rb:
             self.p[max(ra, rb)] = min(ra, rb)

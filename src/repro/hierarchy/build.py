@@ -85,6 +85,7 @@ class Hierarchy:
 
     @property
     def n_nodes(self) -> int:
+        """Number of forest nodes (dense subgraphs) after chain collapse."""
         return int(self.node_level.shape[0])
 
     @property
@@ -104,6 +105,7 @@ class Hierarchy:
         ]
 
     def children(self, node: int) -> np.ndarray:
+        """Child node ids (denser subgraphs nested inside this one)."""
         return self.child_ids[
             int(self.child_off[node]):int(self.child_off[node + 1])
         ]

@@ -83,6 +83,20 @@ class HierarchyService:
     full batches pad with no-op slots (masked out on return).  All state
     the kernel reads lives on device once — steady-state service is
     pure dispatch + one small host transfer per batch.
+
+    Args: ``h`` — a built :class:`Hierarchy` (packed on the fly) or an
+    already-packed forest; ``batch`` — slots per jitted dispatch.
+
+    Example::
+
+        from repro.core import random_bipartite, wing_decomposition
+        from repro.hierarchy import build_hierarchy, HierarchyService, HQuery
+        g = random_bipartite(200, 150, 900, seed=0)
+        h = build_hierarchy(g, wing_decomposition(g, engine="csr"),
+                            kind="wing")
+        svc = HierarchyService(h, batch=256)
+        svc.submit(HQuery(uid=0, op="max_k", a=3))
+        print(svc.run()[0].result)
     """
 
     def __init__(self, h: Union[Hierarchy, PackedForest], batch: int = 1024):
@@ -131,6 +145,7 @@ class HierarchyService:
         self.queue.append(q)
 
     def pending(self) -> int:
+        """Number of queued queries not yet served by :meth:`run`."""
         return len(self.queue)
 
     # ------------------------------------------------------------ serve

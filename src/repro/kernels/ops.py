@@ -109,11 +109,14 @@ def support_update(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One csr support-update round through the blocked Pallas kernel.
 
-    ``pe1``/``pe2``/``alive`` are (n_pairs, K) pairs-major slot flags
-    (``core.csr.pack_update_slots``), ``W`` the per-pair alive wedge
-    counts.  Padding to (bp, bk) tiles is handled here.  Returns
+    ``pe1``/``pe2``/``alive`` are (n_rows, K) pairs-major slot flags,
+    ``W`` the per-row alive wedge counts.  Rows are pairs of ONE graph
+    for the CD path (``core.csr.pack_update_slots``) or the flattened
+    partition×pair stack for the in-loop FD path
+    (``core.peel._fd_wing_vmapped_pallas`` — partitions ride the row
+    grid).  Padding to (bp, bk) tiles is handled here.  Returns
     (contrib1, contrib2, c) trimmed back to the input shape — per-slot
-    losses for each slot's two edges plus dying wedges per pair."""
+    losses for each slot's two edges plus dying wedges per row."""
     n, kdim = pe1.shape
 
     def padf(x):

@@ -24,10 +24,12 @@ def pair_wedge_counts_ref(slots: jax.Array):
 def support_update_ref(pe1, pe2, alive, W):
     """Oracle for the blocked support-update kernel, pairs-major layout.
 
-    Inputs are (n_pairs, K) f32 flags (pe1/pe2 = "slot's edge i peeled",
-    alive = wedge alive) plus per-pair alive wedge counts W.  Returns
+    Inputs are (n_rows, K) f32 flags (pe1/pe2 = "slot's edge i peeled",
+    alive = wedge alive) plus per-row alive wedge counts W; rows are
+    graph pairs (CD path) or the flattened partition×pair stack (the
+    in-loop FD path) — the algebra is row-local either way.  Returns
     (contrib1, contrib2, c): the per-slot butterfly losses charged to
-    each slot's two edges and the dying-wedge count per pair."""
+    each slot's two edges and the dying-wedge count per row."""
     pe1 = pe1.astype(jnp.float32)
     pe2 = pe2.astype(jnp.float32)
     alive = alive.astype(jnp.float32)

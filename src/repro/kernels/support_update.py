@@ -29,6 +29,17 @@ Counts travel as f32 through the MXU-aligned tiles — exact while W_p
 fits f32 integers (< 2²⁴); the flat ``segment_sum`` path stays the
 engine's exactness reference.  ``interpret=True`` runs the same kernel
 on CPU for CI parity tests; compiled on TPU.
+
+Two consumers drive the kernel:
+
+  * **CD rounds** — ``core.csr.wing_update_slots`` over one graph-wide
+    slot matrix (``wing_decomposition(use_pallas=True)``);
+  * **the FD while_loop body** — ``core.peel._fd_wing_vmapped_pallas``
+    flattens the stacked per-partition slot blocks along rows into one
+    (B·R, K) matrix, so a single launch per peel round covers every
+    partition of the single-dispatch Phase 2.  The row grid is
+    oblivious to the partition structure: c_p stays a pure row
+    reduction either way.
 """
 from __future__ import annotations
 

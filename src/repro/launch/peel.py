@@ -95,6 +95,18 @@ def _dryrun() -> int:
     print(f"[peel-dryrun] csr CD round compiled at 512 devices; "
           f"all-reduce sites={ctxt.count('all-reduce')}")
 
+    # --- pair-aligned csr CD at 512 devices: ONE psum per round
+    pal = D.shard_wedges_pair_aligned(wed, 512)
+    pfn = D.make_cd_round_csr_pair_aligned(mesh, "peel", pal["Pmax"], g.m)
+    ptxt = pfn.lower(peeled, jnp.asarray(pal["alive"]),
+                     jnp.asarray(pal["W0"]), sup,
+                     jnp.asarray(pal["we1"]), jnp.asarray(pal["we2"]),
+                     jnp.asarray(pal["wp"])).compile().as_text()
+    n_pal = ptxt.count("all-reduce(") + ptxt.count("all-reduce-start(")
+    assert n_pal == 1, f"pair-aligned CD must pay ONE psum, found {n_pal}"
+    print("[peel-dryrun] pair-aligned csr CD compiled at 512 devices; "
+          "exactly ONE all-reduce per round ✓")
+
     res_c = wing_decomposition(g, P=64, engine="csr")
     packed_c = D.pack_fd_partitions_csr(
         wed, res_c.part, res_c.support_init, res_c.stats.p_effective)
@@ -119,6 +131,26 @@ def _dryrun() -> int:
     assert not bad_c, f"csr FD must be collective-free, found {bad_c}"
     print("[peel-dryrun] csr FD peel compiled at 512 devices; "
           "NO collectives in HLO ✓")
+
+    # --- single-dispatch vmapped FD (single device): the whole Phase 2
+    # must lower to exactly ONE while_loop with zero collectives
+    from repro.core.peel import _fd_wing_vmapped
+
+    packed_v = D.pack_fd_partitions_csr(
+        wed, res_c.part, res_c.support_init, res_c.stats.p_effective,
+        bucket=True, flat=True)
+    args_v = tuple(jnp.asarray(packed_v[k]) for k in
+                   ("flat_we1", "flat_we2", "flat_wp", "flat_alive0",
+                    "flat_W0", "mine", "sup0"))
+    n_pairs_v = int(packed_v["flat_W0"].shape[0])
+    jaxpr = str(jax.make_jaxpr(
+        lambda *a: _fd_wing_vmapped(*a, n_pairs=n_pairs_v))(*args_v))
+    n_while = jaxpr.count("while[")
+    assert n_while == 1, f"vmapped FD must be ONE while_loop, got {n_while}"
+    assert not any(c in jaxpr for c in ("psum", "all_gather", "ppermute")), \
+        "vmapped FD must be collective-free"
+    print("[peel-dryrun] vmapped csr FD: whole Phase 2 is ONE while_loop, "
+          "zero collectives ✓")
     return 0
 
 
@@ -180,8 +212,12 @@ def _run(args) -> int:
                 mesh_engine = "beindex"
                 print(f"[peel] no distributed '{args.engine}' engine; "
                       "using beindex (pass --engine beindex|csr)")
+            if args.pair_aligned and mesh_engine != "csr":
+                print("[peel] --pair-aligned applies to --engine csr only; "
+                      "ignoring (beindex analogue: bloom_aligned)")
             theta, stats_out = D.distributed_wing_decomposition(
-                g, mesh, P_parts=args.parts, engine=mesh_engine)
+                g, mesh, P_parts=args.parts, engine=mesh_engine,
+                pair_aligned=args.pair_aligned and mesh_engine == "csr")
             print(f"[peel] distributed over {stats_out['n_dev']} devices: "
                   f"{stats_out}")
         else:
@@ -237,9 +273,15 @@ def main():
     ap.add_argument("--engine", default="beindex",
                     choices=["beindex", "dense", "csr"])
     ap.add_argument("--fd-driver", default="device",
-                    choices=["device", "host"],
+                    choices=["device", "vmapped", "host"],
                     help="csr FD cascade driver: one while_loop per "
-                         "partition (device) or per-round dispatch (host)")
+                         "partition (device), ONE while_loop for the "
+                         "whole Phase 2 (vmapped — single dispatch), or "
+                         "per-round dispatch (host)")
+    ap.add_argument("--pair-aligned", action="store_true",
+                    help="distributed csr CD only: shard wedges "
+                         "pair-aligned so each CD round pays ONE psum "
+                         "instead of two")
     ap.add_argument("--side", default="u")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)

@@ -1,0 +1,72 @@
+"""benchmarks.report must render EVERY bench row — including names
+containing '/' (A/B ratio labels, not path separators) — and synthesize
+the FD/CD A/B ratio rows from sibling time rows."""
+import json
+import sys
+
+import pytest
+
+
+@pytest.fixture()
+def bench_file(tmp_path):
+    payload = dict(
+        schema=1, backend="cpu", python="3.10", jax="0.4.37",
+        rows=[
+            dict(name="wing.fr.pbng_csr", us_per_call=2_000_000.0,
+                 fd_driver="device"),
+            dict(name="wing.fr.pbng_csr_hostfd", us_per_call=2_500_000.0),
+            dict(name="wing.fr.pbng_csr_vmapped", us_per_call=3_000_000.0),
+            dict(name="wing.pl120.pbng_csr_vmapped", us_per_call=100_000.0),
+            dict(name="wing.pl120.pbng_csr_vmapped_pallas",
+                 us_per_call=400_000.0),
+            dict(name="scaling.wing.dev4.csr", us_per_call=500_000.0,
+                 psums_per_round=2),
+            dict(name="scaling.wing.dev4.csr_pal", us_per_call=450_000.0,
+                 psums_per_round=1),
+            # a raw row whose NAME already contains '/': must render
+            # verbatim, never be skipped or split
+            dict(name="wing.fr.fd.device/host", us_per_call=800_000.0),
+        ],
+    )
+    path = tmp_path / "BENCH_test.json"
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def _load_report():
+    sys.path.insert(0, ".")
+    from benchmarks import report
+
+    return report
+
+
+def test_bench_table_renders_slash_rows(bench_file):
+    report = _load_report()
+    out = report.bench_table([bench_file])
+    # every row name present, including the literal '/' one
+    assert "wing.fr.fd.device/host" in out
+    for n in ("wing.fr.pbng_csr", "wing.fr.pbng_csr_hostfd",
+              "wing.pl120.pbng_csr_vmapped_pallas",
+              "scaling.wing.dev4.csr_pal"):
+        assert n in out, n
+
+
+def test_ab_ratio_rows_synthesized(bench_file):
+    report = _load_report()
+    rows = {r["name"]: float(r["us_per_call"])
+            for r in json.load(open(bench_file))["rows"]}
+    ab = dict(report.ab_rows(rows))
+    assert ab["wing.fr.fd.device/host"] == pytest.approx(2.0 / 2.5)
+    assert ab["wing.fr.fd.vmapped/device"] == pytest.approx(3.0 / 2.0)
+    assert ab["wing.pl120.fd.pallas/segsum"] == pytest.approx(4.0)
+    assert ab["scaling.wing.dev4.cd.pair_aligned/wedge"] == pytest.approx(
+        0.45 / 0.5)
+    # and the rendered table carries them
+    out = report.bench_table([bench_file])
+    assert "fd.vmapped/device" in out
+    assert "cd.pair_aligned/wedge" in out
+
+
+def test_bench_table_missing_file():
+    report = _load_report()
+    assert "not found" in report.bench_table(["/nonexistent/BENCH.json"])

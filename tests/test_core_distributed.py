@@ -217,6 +217,97 @@ def test_csr_cd_round_two_psums():
     assert "OK" in out
 
 
+def test_pair_aligned_single_psum():
+    """Pair-aligned csr CD round must contain exactly one all-reduce —
+    c_p and W_p are shard-local once every pair's wedges live on one
+    device — and θ must stay bit-identical to the oracle."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite, powerlaw_bipartite
+        from repro.core import csr, ref
+        from repro.core import distributed as D
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(80, 40, 350, seed=2)
+        wed = csr.build_wedges(g)
+        packed = D.shard_wedges_pair_aligned(wed, 8)
+        fn = D.make_cd_round_csr_pair_aligned(
+            mesh, "peel", packed["Pmax"], g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.zeros((g.m + 1,), jnp.int32)
+        txt = fn.lower(peeled, jnp.asarray(packed["alive"]),
+                       jnp.asarray(packed["W0"]), sup,
+                       jnp.asarray(packed["we1"]), jnp.asarray(packed["we2"]),
+                       jnp.asarray(packed["wp"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 1, n
+        for seed in (0, 1, 2):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            want = ref.bup_wing_ref(g)
+            theta, stats = D.distributed_wing_decomposition(
+                g, mesh, axis="peel", P_parts=4, engine="csr",
+                pair_aligned=True)
+            assert np.array_equal(theta, want), seed
+            assert stats["cd_sharding"] == "pair_aligned"
+        print("OK", n)
+    """)
+    assert "OK" in out
+
+
+def test_pair_aligned_single_device_matches_engine():
+    """Degenerate 1-device mesh: pair-aligned CD must still agree with
+    the single-device csr engine (same algebra, no collectives to
+    save)."""
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.distributed import distributed_wing_decomposition
+        from repro.core.peel import wing_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(1), ("peel",))
+        g = powerlaw_bipartite(100, 50, 420, seed=5)
+        theta, stats = distributed_wing_decomposition(
+            g, mesh, axis="peel", P_parts=6, engine="csr",
+            pair_aligned=True)
+        ref_theta = wing_decomposition(g, P=6, engine="csr").theta
+        assert np.array_equal(theta, ref_theta)
+        assert stats["n_dev"] == 1
+        print("OK", stats)
+    """, n_dev=1)
+    assert "OK" in out
+
+
+def test_pair_aligned_cd_512dev_single_psum():
+    """The production-mesh shape: ONE all-reduce per pair-aligned CD
+    round at 512 dry-run devices (the same lowering `launch.peel
+    --dryrun` asserts, kept in the suite so regressions fail fast)."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core import csr
+        from repro.core import distributed as D
+        mesh = Mesh(np.array(jax.devices()).reshape(512), ("peel",))
+        g = powerlaw_bipartite(100, 50, 500, seed=1)
+        wed = csr.build_wedges(g)
+        packed = D.shard_wedges_pair_aligned(wed, 512)
+        fn = D.make_cd_round_csr_pair_aligned(
+            mesh, "peel", packed["Pmax"], g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.zeros((g.m + 1,), jnp.int32)
+        txt = fn.lower(peeled, jnp.asarray(packed["alive"]),
+                       jnp.asarray(packed["W0"]), sup,
+                       jnp.asarray(packed["we1"]), jnp.asarray(packed["we2"]),
+                       jnp.asarray(packed["wp"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 1, n
+        print("OK", n)
+    """, n_dev=512)
+    assert "OK" in out
+
+
 def test_distributed_tip_matches_oracle():
     out = _run("""
         import numpy as np, jax

@@ -125,17 +125,24 @@ def test_wing_csr_matches_bup_property(g, P):
 @settings(max_examples=15, deadline=None)
 @given(graphs(max_u=12, max_v=10, max_m=40), st.integers(1, 4))
 def test_wing_engines_and_fd_drivers_agree_property(g, P):
-    """csr (device while_loop FD), csr (host-loop FD) and dense must all
-    produce identical theta — and the two FD drivers identical round /
-    update counts (same cascade, different residency)."""
+    """csr (device while_loop FD), csr (vmapped single-dispatch FD), csr
+    (host-loop FD) and dense must all produce identical theta — and the
+    three FD drivers identical round / update counts (same cascade,
+    different residency)."""
     dev = wing_decomposition(g, P=P, engine="csr", fd_driver="device")
+    vm = wing_decomposition(g, P=P, engine="csr", fd_driver="vmapped")
     host = wing_decomposition(g, P=P, engine="csr", fd_driver="host")
     dense = wing_decomposition(g, P=P, engine="dense")
     assert np.array_equal(dev.theta, host.theta)
+    assert np.array_equal(dev.theta, vm.theta)
     assert np.array_equal(dev.theta, dense.theta)
     assert dev.stats.rho_fd_total == host.stats.rho_fd_total
+    assert dev.stats.rho_fd_total == vm.stats.rho_fd_total
+    assert dev.stats.rho_fd_max == vm.stats.rho_fd_max
     assert dev.stats.updates == host.stats.updates
+    assert dev.stats.updates == vm.stats.updates
     assert dev.stats.fd_driver == "device"
+    assert vm.stats.fd_driver == "vmapped"
     assert host.stats.fd_driver == "host"
 
 
@@ -287,6 +294,130 @@ def test_fd_device_driver_is_single_while_loop():
       jnp.asarray(w.wedge_e1), jnp.asarray(w.wedge_e2),
       jnp.asarray(w.wedge_pair))
     assert str(jaxpr_w).count("while[") == 1
+
+
+def test_vmapped_fd_single_while_zero_collectives():
+    """The acceptance property of the single-dispatch FD: the FULL csr
+    Phase 2 — every partition — lowers to exactly ONE while op with zero
+    collectives, for both the segment-sum and the in-loop Pallas body
+    (not one while per partition: one, total)."""
+    from repro.core import distributed as D
+    from repro.core.peel import _fd_wing_vmapped, _fd_wing_vmapped_pallas
+
+    g = powerlaw_bipartite(60, 40, 260, seed=3)
+    wed = csr.build_wedges(g)
+    res = wing_decomposition(g, P=6, engine="csr")
+    assert res.stats.p_effective > 1  # a real multi-partition cascade
+    packed = D.pack_fd_partitions_csr(
+        wed, res.part, res.support_init, res.stats.p_effective,
+        bucket=True, flat=True, slots=True,
+    )
+    args = tuple(jnp.asarray(packed[k]) for k in
+                 ("flat_we1", "flat_we2", "flat_wp", "flat_alive0",
+                  "flat_W0", "mine", "sup0"))
+    n_pairs = int(packed["flat_W0"].shape[0])
+    jaxpr = str(jax.make_jaxpr(
+        lambda *a: _fd_wing_vmapped(*a, n_pairs=n_pairs))(*args))
+    assert jaxpr.count("while[") == 1
+    for coll in ("psum", "all_reduce", "all_gather", "ppermute",
+                 "all_to_all"):
+        assert coll not in jaxpr, coll
+
+    R, _ = packed["slot_sizes"]
+    W_rows = np.zeros((packed["W0"].shape[0], R), np.int32)
+    w = min(R, packed["W0"].shape[1])
+    W_rows[:, :w] = packed["W0"][:, :w]
+    argsp = (jnp.asarray(packed["slot_e1"]), jnp.asarray(packed["slot_e2"]),
+             jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
+             jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]))
+    jaxpr_p = str(jax.make_jaxpr(
+        lambda *a: _fd_wing_vmapped_pallas(*a, interpret=True))(*argsp))
+    assert jaxpr_p.count("while[") == 1
+    for coll in ("psum", "all_reduce", "all_gather", "ppermute",
+                 "all_to_all"):
+        assert coll not in jaxpr_p, coll
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_wing_fd_vmapped_pallas_matches(seed):
+    """vmapped FD with the in-loop Pallas support_update kernel ≡ the
+    segment-sum body AND the per-partition driver: bit-identical θ,
+    identical round/update counts (interpret-mode parity)."""
+    g = powerlaw_bipartite(40, 30, 180, seed=seed)
+    dev = wing_decomposition(g, P=4, engine="csr", fd_driver="device")
+    vm = wing_decomposition(g, P=4, engine="csr", fd_driver="vmapped")
+    vmp = wing_decomposition(g, P=4, engine="csr", fd_driver="vmapped",
+                             use_pallas=True)
+    assert np.array_equal(dev.theta, vm.theta)
+    assert np.array_equal(dev.theta, vmp.theta)
+    assert dev.stats.rho_fd_total == vm.stats.rho_fd_total \
+        == vmp.stats.rho_fd_total
+    assert dev.stats.rho_fd_max == vm.stats.rho_fd_max \
+        == vmp.stats.rho_fd_max
+    assert dev.stats.updates == vm.stats.updates == vmp.stats.updates
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(max_u=12, max_v=10, max_m=40), st.integers(1, 4),
+       st.sampled_from(["u", "v"]))
+def test_tip_fd_vmapped_matches_property(g, P, side):
+    dev = tip_decomposition(g, side=side, P=P, engine="csr",
+                            fd_driver="device")
+    vm = tip_decomposition(g, side=side, P=P, engine="csr",
+                           fd_driver="vmapped")
+    assert np.array_equal(dev.theta, vm.theta)
+    assert dev.stats.rho_fd_total == vm.stats.rho_fd_total
+    assert dev.stats.rho_fd_max == vm.stats.rho_fd_max
+
+
+def test_vmapped_fd_mixed_shape_buckets():
+    """Partitions whose individual sizes straddle different quarter-pow2
+    buckets must still land in ONE stacked layout and one while_loop —
+    and peel exactly.  A dense blob + a sparse tail forces a large and a
+    small partition."""
+    from repro.core import distributed as D
+    from repro.core.peel import _bucket_pad
+
+    rng = np.random.default_rng(7)
+    # dense 8×8 complete blob (huge uniform supports) + a moderate
+    # 30×20 block at 0.3 density on a DISJOINT V block: CD puts the
+    # moderate block in partition 0 and the blob in partition 1, with
+    # wedge-list sizes in different quarter-pow2 buckets
+    blob = [(u, v) for u in range(8) for v in range(8)]
+    mid = [(8 + u, 8 + v) for u in range(30) for v in range(20)
+           if rng.random() < 0.3]
+    edges = np.asarray(blob + mid, dtype=np.int32)
+    g = BipartiteGraph.from_edges(38, 28, edges)
+    res = wing_decomposition(g, P=4, engine="csr")
+    n_parts = res.stats.p_effective
+    assert n_parts > 1
+    wed = csr.build_wedges(g)
+    # per-partition touching-wedge list sizes must fall in distinct
+    # quarter-pow2 buckets (the per-partition launcher would compile one
+    # while_loop per bucket; the vmapped driver still gets ONE layout)
+    pe1 = res.part[wed.wedge_e1]
+    pe2 = res.part[wed.wedge_e2]
+    pmin = np.minimum(pe1, pe2)
+    sizes = [int(((pe1 >= i) & (pe2 >= i) & (pmin == i)).sum())
+             for i in range(n_parts)]
+    buckets = {_bucket_pad(s) for s in sizes}
+    assert len(buckets) > 1, (sizes, buckets)
+
+    packed = D.pack_fd_partitions_csr(
+        wed, res.part, res.support_init, n_parts, bucket=True, flat=True)
+    # one stacked layout: the rectangular stack pads every partition to
+    # the SAME bucketed slot count; the flat concat holds all real
+    # wedges in one bucketed run
+    assert packed["we1"].shape[1] == _bucket_pad(max(sizes))
+    assert packed["flat_we1"].shape[0] == _bucket_pad(sum(sizes))
+    assert int(packed["flat_alive0"].sum()) == sum(sizes)
+    for drv in ("vmapped",):
+        r = wing_decomposition(g, P=4, engine="csr", fd_driver=drv)
+        assert np.array_equal(r.theta, res.theta)
+        assert r.stats.rho_fd_total == res.stats.rho_fd_total
+    rp = wing_decomposition(g, P=4, engine="csr", fd_driver="vmapped",
+                            use_pallas=True)
+    assert np.array_equal(rp.theta, res.theta)
 
 
 def test_peel_stats_per_engine_rho():
