@@ -23,14 +23,23 @@ ROOF = os.path.join(ROOT, "experiments", "roofline", "results.json")
 BASELINE = os.path.join(ROOT, "benchmarks", "baselines", "BENCH_csr.json")
 
 # A/B pairs synthesized from sibling time rows: (suffix_a, suffix_b,
-# ratio label).  The label becomes "<common prefix>.<label>" — names
-# that deliberately contain '/' so a < 1.0 ratio reads "a is faster".
+# ratio label, name-prefix families the pair is benchmarked in).  The
+# label becomes "<common prefix>.<label>" — names that deliberately
+# contain '/' so a < 1.0 ratio reads "a is faster".  The families scope
+# the half-missing-sibling 'n/a' marker to rows where the sibling is
+# SUPPOSED to exist: a variant a family never benchmarks by design
+# (e.g. tip has no hostfd row) must not drown real dropped-sibling gaps
+# in structural noise.
 AB_PAIRS = [
-    ("pbng_csr", "pbng_csr_hostfd", "fd.device/host"),
-    ("pbng_csr_vmapped", "pbng_csr", "fd.vmapped/device"),
-    ("pbng_csr_vmapped_pallas", "pbng_csr_vmapped", "fd.pallas/segsum"),
-    ("csr", "csr_hostfd", "fd.device/host"),
-    ("csr_pal", "csr", "cd.pair_aligned/wedge"),
+    ("pbng_csr", "pbng_csr_hostfd", "fd.device/host", ("wing.",)),
+    ("pbng_csr_vmapped", "pbng_csr", "fd.vmapped/device",
+     ("wing.", "tip.")),
+    ("pbng_csr_vmapped_pallas", "pbng_csr_vmapped", "fd.pallas/segsum",
+     ("wing.pl",)),
+    ("csr", "csr_hostfd", "fd.device/host", ("psweep.",)),
+    ("csr_vmapped", "csr", "fd.vmapped/device", ("psweep.",)),
+    ("csr_pal", "csr", "cd.pair_aligned/wedge", ("scaling.",)),
+    ("tip_aligned", "tip_csr", "cd.aligned/roundrobin", ("scaling.",)),
 ]
 
 
@@ -130,16 +139,32 @@ def ab_rows(rows: dict) -> list:
     For every configured (a, b) suffix pair present with a common
     prefix — e.g. ``wing.fr.pbng_csr`` / ``wing.fr.pbng_csr_hostfd`` —
     emit ``(prefix.label, ratio)`` where ratio = t_a / t_b (< 1.0 means
-    the numerator variant is faster)."""
+    the numerator variant is faster).  A prefix where only ONE side of
+    the pair exists still emits its row, with ratio ``None`` — the
+    renderer marks it ``n/a`` so a dropped/renamed sibling is a visible
+    gap in the report instead of a silently missing ratio."""
     out = []
+    seen = set()
     for name, us in sorted(rows.items()):
-        for suf_a, suf_b, label in AB_PAIRS:
-            if not name.endswith("." + suf_a):
+        for suf_a, suf_b, label, families in AB_PAIRS:
+            if not name.startswith(families):
                 continue
-            prefix = name[: -len(suf_a) - 1]
-            sibling = f"{prefix}.{suf_b}"
-            if sibling in rows and rows[sibling] > 0:
-                out.append((f"{prefix}.{label}", us / rows[sibling]))
+            if name.endswith("." + suf_a):
+                prefix = name[: -len(suf_a) - 1]
+            elif name.endswith("." + suf_b):
+                prefix = name[: -len(suf_b) - 1]
+            else:
+                continue
+            key = f"{prefix}.{label}"
+            if key in seen:
+                continue
+            seen.add(key)
+            t_a = rows.get(f"{prefix}.{suf_a}")
+            t_b = rows.get(f"{prefix}.{suf_b}")
+            if t_a is not None and t_b is not None and t_b > 0:
+                out.append((key, t_a / t_b))
+            else:
+                out.append((key, None))
     return out
 
 
@@ -174,7 +199,9 @@ def bench_table(paths: list) -> str:
         lines.append("| a/b | ratio |")
         lines.append("|---|---|")
         for name, ratio in ab:
-            lines.append(f"| {_escape(name)} | {ratio:.2f} |")
+            cell = "n/a (pair side missing)" if ratio is None \
+                else f"{ratio:.2f}"
+            lines.append(f"| {_escape(name)} | {cell} |")
     return "\n".join(lines) + "\n"
 
 

@@ -60,9 +60,31 @@ print(json.dumps(out))
 """
 
 
+_SCRIPT_TIP = """
+import json, time
+import numpy as np, jax
+from jax.sharding import Mesh
+from repro.core.graph import powerlaw_bipartite
+from repro.core.distributed import distributed_tip_decomposition
+n = {n_dev}
+mesh = Mesh(np.array(jax.devices()).reshape(n), ("peel",))
+g = powerlaw_bipartite(300, 150, 1400, seed=4)
+out = {{}}
+for aligned in (False, True):
+    t0 = time.time()
+    theta, stats = distributed_tip_decomposition(
+        g, mesh, side="u", P_parts=32, engine="csr", aligned=aligned)
+    stats.update(wall_s=time.time() - t0, theta_sum=int(theta.sum()))
+    out["aligned" if aligned else "rr"] = stats
+assert out["aligned"]["theta_sum"] == out["rr"]["theta_sum"]
+print(json.dumps(out))
+"""
+
+
 def run(small: bool = True):
     devs = (1, 4) if small else (1, 2, 4, 8, 16)
     base = None
+    tip_base = None
     for n in devs:
         env = dict(os.environ)
         env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
@@ -93,6 +115,26 @@ def run(small: bool = True):
         emit(f"scaling.wing.dev{n}.csr_pal", both["pal"]["wall_s"],
              rho_cd=both["pal"]["rho_cd"], psums_per_round=1,
              cd_sharding="pair_aligned")
+        # tip csr CD sharding A/B: round-robin vs vertex-aligned pair
+        # entries — both pay ONE psum per round (pair butterflies are
+        # static), so the A/B isolates the greedy balance; report.py
+        # renders the cd.aligned/roundrobin ratio row from these
+        out = subprocess.run(
+            [sys.executable, "-c",
+             textwrap.dedent(_SCRIPT_TIP.format(n_dev=n))],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        tips = json.loads(out.stdout.strip().splitlines()[-1])
+        if tip_base is None:
+            tip_base = tips["rr"]["theta_sum"]
+        assert tips["rr"]["theta_sum"] == tip_base, \
+            "device count changed tip results!"
+        emit(f"scaling.tip.dev{n}.tip_csr", tips["rr"]["wall_s"],
+             rho_cd=tips["rr"]["rho_cd"], psums_per_round=1,
+             cd_sharding="pair", side="u")
+        emit(f"scaling.tip.dev{n}.tip_aligned", tips["aligned"]["wall_s"],
+             rho_cd=tips["aligned"]["rho_cd"], psums_per_round=1,
+             cd_sharding="vertex_aligned", side="u")
 
 
 if __name__ == "__main__":

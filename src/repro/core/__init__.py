@@ -4,6 +4,8 @@ Public API:
     BipartiteGraph, random_bipartite, powerlaw_bipartite, paper_proxy_dataset
     build_beindex, BEIndex
     tip_decomposition, wing_decomposition      (two-phased PBNG)
+    PeelSpec, decompose (core.peelspec)        (entity-agnostic core)
+    distributed_tip_decomposition,
     distributed_wing_decomposition             (shard_map, multi-device)
     ref                                        (pure-python oracles)
 """
@@ -24,6 +26,8 @@ from .peel import (
     wing_decomposition_bepc,
     bup_levels,
 )
+from .peelspec import PeelSpec
+from . import peelspec
 from .distributed import (
     distributed_tip_decomposition,
     distributed_wing_decomposition,
@@ -41,6 +45,8 @@ __all__ = [
     "build_beindex",
     "PeelResult",
     "PeelStats",
+    "PeelSpec",
+    "peelspec",
     "tip_decomposition",
     "wing_decomposition",
     "bup_levels",

@@ -47,6 +47,8 @@ __all__ = [
     "build_wedges",
     "pad_segments",
     "pack_wedge_slots",
+    "directed_pair_incidence",
+    "pack_tip_slots",
     "pack_update_slots",
     "wedge_workload",
     "pair_wedge_counts",
@@ -54,6 +56,7 @@ __all__ = [
     "edge_butterflies_csr",
     "total_butterflies_csr",
     "tip_delta_csr",
+    "tip_delta_slots",
     "wing_loss_csr",
     "wing_update_csr",
     "wing_update_slots",
@@ -204,6 +207,79 @@ def pad_segments(
 def pack_wedge_slots(w: Wedges) -> PaddedCSR:
     """Pairs-major wedge slots: row p lists pair p's wedge indices."""
     return pad_segments(w.wedge_pair, w.n_pairs)
+
+
+def directed_pair_incidence(
+    w: Wedges, pair_bf0: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Directed pair-incidence triple ``(dst, src, bf)`` — each pair
+    {a, b} as two entries (dst=a, src=b) and (dst=b, src=a) carrying
+    the static butterfly count.  THE tip-CD layout convention, shared
+    by the vertex-major Pallas slots (:func:`pack_tip_slots`) and the
+    distributed CD shards (``distributed.shard_tip_pairs``): vertex
+    dst loses bf when src peels."""
+    dst = np.concatenate([w.pair_a, w.pair_b]).astype(np.int64)
+    src = np.concatenate([w.pair_b, w.pair_a]).astype(np.int64)
+    val = np.concatenate([pair_bf0, pair_bf0]).astype(np.int32)
+    return dst, src, val
+
+
+def pack_tip_slots(
+    w: Wedges, pair_bf0: np.ndarray, sup: Optional[np.ndarray] = None
+) -> dict:
+    """Vertex-major pair slots for the tip Pallas CD path.
+
+    Row u lists vertex u's incident pairs as directed entries: each pair
+    {a, b} appears twice — once in row a with partner b, once in row b
+    with partner a — so a peel round's delta for u is the row sum of
+    pair butterflies whose partner was peeled (``kernels.ops
+    .tip_slot_loss``; rows ARE vertices, so no scatter back).  ``bf`` is
+    0 on padding slots (algebra-neutral), ``partner`` the sentinel n.
+
+    Per-row sums are bounded by the vertex's ⋈ support; past 2²⁴ those
+    stop being exact f32 integers, so refuse up front like
+    :func:`pack_update_slots` (supports only decrease — checking ⋈init
+    once is sufficient).  Pass the caller's precomputed ⋈init as
+    ``sup`` to skip recomputing it for the guard."""
+    n = w.n_u
+    if sup is None:
+        sup = vertex_butterflies_csr(w)
+    if sup.size and int(sup.max()) >= 2 ** 24:
+        raise OverflowError(
+            "tip supports exceed f32 integer range (2^24); "
+            "use the segment_sum path (use_pallas=False)"
+        )
+    dst, src, val = directed_pair_incidence(w, pair_bf0)
+    packed = pad_segments(dst, n)
+    partner = np.full(packed.idx.shape, n, dtype=np.int32)
+    bf = np.zeros(packed.idx.shape, dtype=np.int32)
+    if dst.size:
+        idx = np.maximum(packed.idx, 0)
+        partner = np.where(packed.valid, src[idx], n).astype(np.int32)
+        bf = np.where(packed.valid, val[idx], 0).astype(np.int32)
+    return dict(partner=partner, bf=bf, n=n)
+
+
+def tip_delta_slots(
+    peeled_u: jax.Array,       # (n,) bool — U vertices peeled this round
+    slot_partner: jax.Array,   # (n_rows_pad, K) int32, sentinel n
+    slot_bf: jax.Array,        # (n_rows_pad, K) int32, 0 on padding
+    n: int,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Pallas-kernel variant of :func:`tip_delta_csr` — same static
+    pair-butterfly algebra, but the per-vertex reduction runs as blocked
+    row sums over the vertex-major slot layout
+    (:func:`pack_tip_slots`).  Exact while supports < 2²⁴ (guarded at
+    pack time); parity-tested against the segment-sum path."""
+    from repro.kernels import ops as kops  # local import: keep core light
+
+    if interpret is None:
+        interpret = kops.default_interpret()
+    pe = jnp.concatenate([peeled_u, jnp.zeros((1,), bool)])
+    vals = jnp.where(pe[slot_partner], slot_bf, 0)
+    loss = kops.tip_slot_loss(vals, interpret=interpret)
+    return jnp.rint(loss[:n]).astype(jnp.int32)
 
 
 def pack_update_slots(w: Wedges) -> dict:

@@ -2,17 +2,22 @@
 
 Maps the paper's two phases onto an SPMD mesh:
 
-* **CD** (coarse): the BE-Index *links* are sharded across devices; each
-  round every device computes its partial bloom-death counts and per-edge
-  losses with ``segment_sum`` and a single ``psum`` combines them.  One
-  collective per peeling round — the JAX statement of "little
-  synchronization".  Supports / frontier masks are replicated (O(m), tiny
-  next to the index).
+* **CD** (coarse): the peeling structure (BE-Index *links* for the
+  beindex engine, the flat *wedge list* / *pair list* for the csr tip
+  and wing engines) is sharded across devices; each round every device
+  computes its partial dying counts and per-entity losses with
+  ``segment_sum`` and ``psum`` combines them.  One or two collectives
+  per peeling round — the JAX statement of "little synchronization".
+  Supports / frontier masks are replicated (O(n), tiny next to the
+  index).  The round loop itself is ``core.peelspec.cd_loop`` — the
+  same entity-agnostic driver the single-device engines run, with a
+  :class:`~repro.core.peelspec.FixedTarget` range policy.
 
 * **FD** (fine): partitions are padded to a common size, stacked on a
   leading axis and `shard_map`-ped over the ``peel`` mesh axis.  The
-  per-partition while_loop contains **no collectives at all** — the HLO
-  proves the paper's "no global synchronization" claim structurally.
+  per-partition cascade is ``core.peelspec._fd_while_device`` — **no
+  collectives at all** — so the HLO proves the paper's "no global
+  synchronization" claim structurally.
 
 Used by ``launch/peel.py`` for the production-mesh dry-run and by the
 multi-device tests (spawned with forced host device counts).
@@ -26,12 +31,20 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..sharding.compat import shard_map
 from . import csr
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
+from .peelspec import (
+    FixedTarget,
+    PeelResult,
+    PeelSpec,
+    PeelStats,
+    _fd_while_device,
+    cd_loop,
+)
 
 __all__ = [
     "ShardedWingState",
@@ -39,15 +52,18 @@ __all__ = [
     "shard_links",
     "shard_wedges",
     "shard_wedges_pair_aligned",
+    "shard_tip_pairs",
     "cd_round_sharded",
     "cd_round_sharded_csr",
     "make_cd_round_csr",
     "make_cd_round_csr_pair_aligned",
+    "make_cd_round_tip_csr",
     "pack_fd_partitions",
     "pack_fd_partitions_csr",
     "pack_fd_partitions_tip_csr",
     "fd_peel_sharded",
     "fd_peel_sharded_csr",
+    "fd_peel_sharded_tip_csr",
     "distributed_wing_decomposition",
     "distributed_tip_decomposition",
 ]
@@ -142,24 +158,26 @@ def cd_round_sharded(round_fn, st: ShardedWingState, peeled: jax.Array
 
 
 # =====================================================================
-# CD variant — bloom-aligned link sharding (§Perf optimization)
+# Aligned ("segment-on-one-shard") layouts — shared scaffolding
 # =====================================================================
-# Baseline CD needs TWO psums per round: dying-pair counts c_B (blooms
-# straddle shards) then per-edge losses.  If every bloom's links live on
-# ONE shard, c_B and k_alive become shard-local state and a round costs
-# a single psum (the loss) — half the collectives, and bloom bookkeeping
-# never crosses the interconnect.
+# Baseline CD pays TWO psums per round when its grouping segments
+# (blooms for beindex, U-pairs for csr wing) straddle shards: one for
+# the dying counts, one for the losses.  If every segment's items live
+# on ONE shard the count state is shard-local and a round costs a
+# single psum.  The greedy-balance placement and the scatter into
+# [n_dev, Lmax] blocks are identical for every such layout (bloom-,
+# pair- and vertex-aligned); only the per-item arrays differ.
 def _greedy_balance(counts: np.ndarray, n_dev: int):
-    """LPT-greedy segment→shard placement shared by the bloom- and
-    pair-aligned one-psum CD layouts.
+    """LPT-greedy segment→shard placement shared by the aligned one-psum
+    CD layouts.
 
-    Segments (blooms / U-pairs) are placed largest-first onto the
-    least-loaded shard (heap, O(S log n_dev) — ties break to the lowest
-    shard id like the original argmin).  Everything else is vectorized
-    numpy: per shard, segments keep ascending-id order.  Returns
-    ``(shard_of, local_id, seg_start, loads, n_local)`` — per segment
-    its shard, shard-local id and first item column; per shard its item
-    load and segment count."""
+    Segments (blooms / U-pairs / vertices) are placed largest-first onto
+    the least-loaded shard (heap, O(S log n_dev) — ties break to the
+    lowest shard id like the original argmin).  Everything else is
+    vectorized numpy: per shard, segments keep ascending-id order.
+    Returns ``(shard_of, local_id, seg_start, loads, n_local)`` — per
+    segment its shard, shard-local id and first item column; per shard
+    its item load and segment count."""
     import heapq
 
     S = int(counts.size)
@@ -190,18 +208,44 @@ def _greedy_balance(counts: np.ndarray, n_dev: int):
     return shard_of, local_id, seg_start, loads, n_local
 
 
+def _aligned_layout(seg_ids: np.ndarray, n_seg: int, n_dev: int):
+    """Entity-agnostic core of every aligned layout: greedy-balance
+    segments over shards by item count, keeping ALL of a segment's items
+    on one shard, and compute the block scatter.
+
+    Returns ``(order, sh, pos, shard_of, loc_seg, Lmax, Smax,
+    counts)``: sort the item arrays by ``order``, then
+    ``arr_s[sh, pos] = arr[order]`` fills the [n_dev, Lmax] blocks;
+    ``shard_of``/``loc_seg`` give each segment's shard and shard-local
+    id (Smax = max local segments); ``counts`` the per-segment item
+    counts (already computed for the balance — callers that need them
+    must not re-derive)."""
+    order = np.argsort(seg_ids, kind="stable")
+    sorted_seg = seg_ids[order]
+    counts = np.bincount(seg_ids, minlength=n_seg)
+    shard_of, loc_seg, seg_start, loads, n_local = _greedy_balance(
+        counts, n_dev)
+    Lmax = max(int(loads.max()) if n_dev else 1, 1)
+    Smax = max(int(n_local.max()) if n_local.size else 1, 1)
+    if sorted_seg.size:
+        off = np.zeros(n_seg + 1, dtype=np.int64)
+        np.cumsum(counts, out=off[1:])
+        sh = shard_of[sorted_seg]
+        pos = (np.arange(sorted_seg.size, dtype=np.int64)
+               - off[sorted_seg] + seg_start[sorted_seg])
+    else:
+        sh = pos = np.zeros(0, dtype=np.int64)
+    return order, sh, pos, shard_of, loc_seg, Lmax, Smax, counts
+
+
 def shard_links_bloom_aligned(be: BEIndex, m: int, n_dev: int) -> dict:
     """Greedy-balance blooms over shards by link count so every bloom's
     links land on ONE device; returns [n_dev, ...] blocks with
     shard-local bloom ids (see the one-psum rationale above)."""
-    order = np.argsort(be.link_bloom, kind="stable")
+    order, sh, pos, shard_of, loc_bloom, Lmax, Bmax, _ = _aligned_layout(
+        be.link_bloom, be.nb, n_dev)
     le, lt, lb = (be.link_edge[order], be.link_twin[order],
                   be.link_bloom[order])
-    counts = np.bincount(lb, minlength=be.nb)
-    shard_of, loc_bloom, seg_start, loads, nb_local = _greedy_balance(
-        counts, n_dev)
-    Lmax = max(int(loads.max()) if n_dev else 1, 1)
-    Bmax = max(int(nb_local.max()) if nb_local.size else 1, 1)
 
     le_s = np.full((n_dev, Lmax), m, np.int32)
     lt_s = np.full((n_dev, Lmax), m, np.int32)
@@ -209,10 +253,6 @@ def shard_links_bloom_aligned(be: BEIndex, m: int, n_dev: int) -> dict:
     alive = np.zeros((n_dev, Lmax), bool)
     k0 = np.zeros((n_dev, Bmax), np.int32)
     if lb.size:
-        off = np.zeros(be.nb + 1, dtype=np.int64)
-        np.cumsum(counts, out=off[1:])
-        sh = shard_of[lb]
-        pos = np.arange(lb.size, dtype=np.int64) - off[lb] + seg_start[lb]
         le_s[sh, pos] = le
         lt_s[sh, pos] = lt
         lb_s[sh, pos] = loc_bloom[lb]
@@ -364,14 +404,10 @@ def shard_wedges_pair_aligned(wed: csr.Wedges, n_dev: int) -> dict:
     alive wedge counts, [n_dev, Pmax]), plus ``Pmax`` and ``m``."""
     m = wed.m
     n_pairs = wed.n_pairs
-    order = np.argsort(wed.wedge_pair, kind="stable")
+    order, sh, pos, shard_of, loc_pair, Lmax, Pmax, counts = (
+        _aligned_layout(wed.wedge_pair, n_pairs, n_dev))
     we1, we2, wp = (wed.wedge_e1[order], wed.wedge_e2[order],
                     wed.wedge_pair[order])
-    counts = np.bincount(wp, minlength=n_pairs)
-    shard_of, loc_pair, seg_start, loads, np_local = _greedy_balance(
-        counts, n_dev)
-    Lmax = max(int(loads.max()) if n_dev else 1, 1)
-    Pmax = max(int(np_local.max()) if np_local.size else 1, 1)
 
     we1_s = np.full((n_dev, Lmax), m, np.int32)
     we2_s = np.full((n_dev, Lmax), m, np.int32)
@@ -379,10 +415,6 @@ def shard_wedges_pair_aligned(wed: csr.Wedges, n_dev: int) -> dict:
     alive = np.zeros((n_dev, Lmax), bool)
     W0 = np.zeros((n_dev, Pmax), np.int32)
     if wp.size:
-        off = np.zeros(n_pairs + 1, dtype=np.int64)
-        np.cumsum(counts, out=off[1:])
-        sh = shard_of[wp]
-        pos = np.arange(wp.size, dtype=np.int64) - off[wp] + seg_start[wp]
         we1_s[sh, pos] = we1
         we2_s[sh, pos] = we2
         wp_s[sh, pos] = loc_pair[wp]
@@ -450,6 +482,82 @@ def cd_round_sharded_csr(round_fn, st: ShardedCSRState, peeled: jax.Array
     return dataclasses.replace(
         st, alive_w=alive_w, W_pad=W_pad, support=support_pad[:-1]
     )
+
+
+# =====================================================================
+# CD — tip csr: sharded pair incidence, ONE psum per round always
+# =====================================================================
+# Tip's CD update has NO cross-round sharded state: pair butterfly
+# counts are static (V is never peeled), so a round is a single
+# gather + segment_sum over directed pair entries (vertex u loses
+# bf(u, u') when partner u' peels) and the per-vertex loss reduction is
+# the ONLY collective regardless of layout.  ``aligned=True`` applies
+# the generalized greedy balance so ALL of a vertex's entries land on
+# one device — each vertex's loss is computed wholly locally (pure
+# disjoint-support merge through the psum) and shards are balanced by
+# incident-pair count instead of round-robin entry count.
+def shard_tip_pairs(
+    wed: csr.Wedges, pair_bf0: np.ndarray, n_dev: int,
+    aligned: bool = False,
+) -> dict:
+    """Shard the directed pair-incidence list for the tip csr CD.
+
+    Each pair {a, b} becomes two directed entries (dst=a, src=b) and
+    (dst=b, src=a) carrying the static butterfly count, so a round's
+    loss for dst is Σ bf over entries whose src peeled.  Returns
+    [n_dev, Lmax] blocks ``dst``/``src`` (global vertex ids, sentinel
+    n) and ``bf`` (0 on padding — algebra-neutral): round-robin split
+    by default, vertex-aligned greedy balance with ``aligned=True``."""
+    n = wed.n_u
+    dst, src, val = csr.directed_pair_incidence(wed, pair_bf0)
+    n_dev = max(n_dev, 1)
+    if aligned:
+        order, sh, pos, _, _, Lmax, _, _ = _aligned_layout(dst, n, n_dev)
+        dst_s = np.full((n_dev, Lmax), n, np.int32)
+        src_s = np.full((n_dev, Lmax), n, np.int32)
+        bf_s = np.zeros((n_dev, Lmax), np.int32)
+        if dst.size:
+            dst_s[sh, pos] = dst[order]
+            src_s[sh, pos] = src[order]
+            bf_s[sh, pos] = val[order]
+    else:
+        L = dst.size
+        Lmax = max(-(-L // n_dev), 1)
+        pad = n_dev * Lmax - L
+        dst_s = np.concatenate(
+            [dst, np.full(pad, n, np.int64)]).astype(np.int32)
+        src_s = np.concatenate(
+            [src, np.full(pad, n, np.int64)]).astype(np.int32)
+        bf_s = np.concatenate([val, np.zeros(pad, np.int32)])
+        dst_s = dst_s.reshape(n_dev, Lmax)
+        src_s = src_s.reshape(n_dev, Lmax)
+        bf_s = bf_s.reshape(n_dev, Lmax)
+    return dict(dst=dst_s, src=src_s, bf=bf_s, n=n)
+
+
+def make_cd_round_tip_csr(mesh: Mesh, axis: str, n: int):
+    """One-psum tip csr CD round over sharded pair-incidence blocks.
+
+    The same jitted round serves both layouts of :func:`shard_tip_pairs`
+    (round-robin and vertex-aligned): pair butterflies are static, so
+    the per-vertex loss reduction is the single collective either way.
+    """
+
+    def body(peeled_pad, support_pad, dst, src, bf):
+        contrib = jnp.where(peeled_pad[src.reshape(-1)], bf.reshape(-1), 0)
+        loss = jax.ops.segment_sum(
+            contrib, dst.reshape(-1), num_segments=n + 1)
+        loss = jax.lax.psum(loss, axis)          # the ONLY collective
+        return support_pad - loss
+
+    spec_l = P(axis)
+    spec_r = P()
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(spec_r, spec_r, spec_l, spec_l, spec_l),
+        out_specs=spec_r,
+    )
+    return jax.jit(fn)
 
 
 # =====================================================================
@@ -533,13 +641,15 @@ def pack_fd_partitions(
 
 
 def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
-    """Peel one partition bottom-up — pure lax.while_loop, NO collectives."""
+    """Peel one beindex partition bottom-up — the shared device FD
+    driver (``peelspec._fd_while_device``) with the alg.6 widow/survivor
+    update: one while_loop, NO collectives."""
     Emax = mine.shape[0]
     Bmax = k0.shape[0]
-    BIG = jnp.iinfo(jnp.int32).max  # >= any guarded support
 
-    def update(peeled, alive_link, k_alive, support):
-        pe = jnp.concatenate([peeled, jnp.zeros((1,), bool)])
+    def update(S, aux):
+        alive_link, k_alive = aux
+        pe = jnp.concatenate([S, jnp.zeros((1,), bool)])
         p_e = pe[le]
         p_t = pe[lt]
         pair_dies = alive_link & (p_e | p_t)
@@ -550,32 +660,12 @@ def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
         contrib = jnp.where(widow, k_alive[lb] - 1, 0) + jnp.where(
             surv, c[lb], 0)
         loss = jax.ops.segment_sum(contrib, le, num_segments=Emax + 1)[:-1]
-        return (alive_link & ~pair_dies, k_alive - c, support - loss)
+        return loss, (alive_link & ~pair_dies, k_alive - c), jnp.int32(0)
 
-    def cond(state):
-        alive_e, *_ = state
-        return jnp.any(alive_e)
-
-    def body(state):
-        alive_e, alive_link, k_alive, support, theta, k, rounds = state
-        cur = jnp.where(alive_e, support, BIG)
-        k = jnp.maximum(k, jnp.min(cur))
-        S = alive_e & (support <= k)
-        # S is non-empty whenever alive_e is (k >= min alive support)
-        theta = jnp.where(S, k, theta)
-        alive_e = alive_e & ~S
-        alive_link, k_alive, support = update(S, alive_link, k_alive, support)
-        return (alive_e, alive_link, k_alive, support, theta, k, rounds + 1)
-
-    # derive loop-constant inits from varying inputs so the carry's
-    # manual-axes annotation is stable under shard_map
-    zero_e = mine.astype(jnp.int32) * 0
-    zero_s = jnp.min(zero_e)
-    init = (
-        mine, alive0, k0.astype(jnp.int32), sup0.astype(jnp.int32),
-        zero_e, zero_s, zero_s,
+    theta, rounds, _ = _fd_while_device(
+        mine, sup0.astype(jnp.int32), update,
+        (alive0, k0.astype(jnp.int32)),
     )
-    alive_e, _, _, _, theta, _, rounds = jax.lax.while_loop(cond, body, init)
     return theta, rounds
 
 
@@ -632,13 +722,14 @@ def pack_fd_partitions_csr(
     sentinel/pad machinery as :func:`pack_fd_partitions`.
 
     ``bucket=True`` rounds the stacked dims (Lmax, Emax, Pmax) up to
-    quarter-power-of-two buckets (``peel._bucket_pad``) so the jitted
-    single-dispatch FD driver (``peel._fd_while_vmapped`` consumers)
-    recompiles once per shape *bucket* instead of once per partition
-    layout — the same trick the per-partition launcher used, applied to
-    the whole stack.  Partitions whose individual sizes straddle
-    different buckets still land in ONE stacked layout (and therefore
-    one while_loop); the bucket only bounds recompiles across graphs.
+    quarter-power-of-two buckets (``peelspec._bucket_pad``) so the
+    jitted single-dispatch FD driver (``peelspec._fd_while_vmapped``
+    consumers) recompiles once per shape *bucket* instead of once per
+    partition layout — the same trick the per-partition launcher used,
+    applied to the whole stack.  Partitions whose individual sizes
+    straddle different buckets still land in ONE stacked layout (and
+    therefore one while_loop); the bucket only bounds recompiles across
+    graphs.
 
     ``flat=True`` additionally emits the ragged-concatenated arrays the
     single-device single-dispatch driver consumes (see
@@ -691,7 +782,7 @@ def pack_fd_partitions_csr(
     Emax = max((p["edges"].size for p in per), default=1) or 1
     Pmax = max((p["W0"].size for p in per), default=1) or 1
     if bucket:
-        from .peel import _bucket_pad
+        from .peelspec import _bucket_pad
 
         Lmax = _bucket_pad(Lmax)
         Emax = _bucket_pad(Emax, floor=8)
@@ -755,7 +846,7 @@ def _pack_fd_flat_csr(per: list, n_parts: int, Emax: int,
     Wpad = Wtot
     Ppad = Ptot + 1
     if bucket:
-        from .peel import _bucket_pad
+        from .peelspec import _bucket_pad
 
         Wpad = _bucket_pad(max(Wtot, 1))
         Ppad = _bucket_pad(Ptot + 1, floor=8)
@@ -803,7 +894,7 @@ def _pack_fd_slots_csr(per: list, n_parts: int, Emax: int,
     R = max((pk.n_rows_pad for pk in packs), default=1) or 1
     K = max((pk.width for pk in packs), default=1) or 1
     if bucket:
-        from .peel import _bucket_pad
+        from .peelspec import _bucket_pad
 
         R = _bucket_pad(R, floor=8)
         K = _bucket_pad(K, floor=128)
@@ -828,6 +919,7 @@ def _pack_fd_slots_csr(per: list, n_parts: int, Emax: int,
 def pack_fd_partitions_tip_csr(
     wed: csr.Wedges, pair_bf0: np.ndarray, part: np.ndarray,
     sup_init: np.ndarray, n_parts: int, bucket: bool = False,
+    stacked: bool = False,
 ) -> dict:
     """Tip counterpart of :func:`pack_fd_partitions_csr`.
 
@@ -843,7 +935,12 @@ def pack_fd_partitions_tip_csr(
     pre-globalized vertex ids — zero stacking padding.  Returns
     ``pa``/``pb`` (W,) globalized segment ids b·Emax+u, ``bf`` (W,)
     static pair butterflies (0 on the bucketed pad tail — algebra
-    neutral), plus [n_parts, Emax] ``mine``/``sup0``/``gids``."""
+    neutral), plus [n_parts, Emax] ``mine``/``sup0``/``gids``.
+
+    ``stacked=True`` additionally emits the [n_parts, Lmax] blocks
+    ``st_pa``/``st_pb``/``st_bf`` (partition-LOCAL vertex ids, bf=0 on
+    padding) the per-partition shard_map FD
+    (:func:`fd_peel_sharded_tip_csr`) consumes."""
     n = part.size
     pa_p = part[wed.pair_a] if wed.n_pairs else np.zeros(0, np.int32)
     pb_p = part[wed.pair_b] if wed.n_pairs else np.zeros(0, np.int32)
@@ -863,7 +960,7 @@ def pack_fd_partitions_tip_csr(
     Wtot = int(sum(p["pa"].size for p in per))
     Wpad = max(Wtot, 1)
     if bucket:
-        from .peel import _bucket_pad
+        from .peelspec import _bucket_pad
 
         Emax = _bucket_pad(Emax, floor=8)
         Wpad = _bucket_pad(Wpad)
@@ -883,15 +980,30 @@ def pack_fd_partitions_tip_csr(
         mine[i, : p["nodes"].size] = True
         sup0[i, : p["nodes"].size] = p["sup0"]
         gids[i, : p["nodes"].size] = p["nodes"]
-    return dict(pa=pa, pb=pb, bf=bf, mine=mine, sup0=sup0, gids=gids,
-                sizes=(Wpad, Emax))
+    packed = dict(pa=pa, pb=pb, bf=bf, mine=mine, sup0=sup0, gids=gids,
+                  sizes=(Wpad, Emax))
+    if stacked:
+        Lmax = max((p["pa"].size for p in per), default=1) or 1
+        if bucket:
+            from .peelspec import _bucket_pad
+
+            Lmax = _bucket_pad(Lmax, floor=8)
+        st_pa = np.zeros((n_parts, Lmax), dtype=np.int32)
+        st_pb = np.zeros((n_parts, Lmax), dtype=np.int32)
+        st_bf = np.zeros((n_parts, Lmax), dtype=np.int32)
+        for i, p in enumerate(per):
+            k = p["pa"].size
+            st_pa[i, :k] = p["pa"]
+            st_pb[i, :k] = p["pb"]
+            st_bf[i, :k] = p["bf"]
+        packed.update(st_pa=st_pa, st_pb=st_pb, st_bf=st_bf)
+    return packed
 
 
 def _fd_body_one_partition_csr(we1, we2, wp, alive0, W0, sup0, mine):
-    """Peel one csr partition bottom-up — the shared device FD driver
-    (``peel._fd_while_device``): one while_loop, NO collectives."""
-    from .peel import _fd_while_device
-
+    """Peel one csr wing partition bottom-up — the shared device FD
+    driver (``peelspec._fd_while_device``): one while_loop, NO
+    collectives."""
     Emax = mine.shape[0]
     Pmax = W0.shape[0]
 
@@ -910,10 +1022,25 @@ def _fd_body_one_partition_csr(we1, we2, wp, alive0, W0, sup0, mine):
     return theta, rounds
 
 
+def _fd_body_one_partition_tip_csr(pa, pb, bf, mine, sup0):
+    """Peel one csr tip partition bottom-up — the shared device FD
+    driver with the static pair-butterfly update: one while_loop, NO
+    collectives."""
+    Emax = mine.shape[0]
+
+    def update(S, aux):
+        loss = csr.tip_delta_csr(S, pa, pb, bf, Emax)
+        return loss, aux, jnp.int32(0)
+
+    theta, rounds, _ = _fd_while_device(
+        mine, sup0.astype(jnp.int32), update, jnp.int32(0))
+    return theta, rounds
+
+
 def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str
                         ) -> Tuple[np.ndarray, np.ndarray]:
-    """csr counterpart of :func:`fd_peel_sharded` — shard_map over the
-    padded wedge-slot stacks, zero collectives inside partitions."""
+    """csr wing counterpart of :func:`fd_peel_sharded` — shard_map over
+    the padded wedge-slot stacks, zero collectives inside partitions."""
     return _fd_run_sharded(
         _fd_body_one_partition_csr, packed,
         ("we1", "we2", "wp", "alive0", "W0", "sup0", "mine"),
@@ -921,43 +1048,41 @@ def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str
     )
 
 
+def fd_peel_sharded_tip_csr(packed: dict, mesh: Mesh, axis: str
+                            ) -> Tuple[np.ndarray, np.ndarray]:
+    """csr tip counterpart of :func:`fd_peel_sharded` — shard_map over
+    the stacked local pair lists (``pack_fd_partitions_tip_csr`` with
+    ``stacked=True``), zero collectives inside partitions."""
+    return _fd_run_sharded(
+        _fd_body_one_partition_tip_csr, packed,
+        ("st_pa", "st_pb", "st_bf", "mine", "sup0"),
+        mesh, axis,
+    )
+
+
 # =====================================================================
 # End-to-end distributed wing decomposition
 # =====================================================================
-def _cd_partition_loop(sup_np: np.ndarray, P_parts: int, step):
-    """Shared CD driver: range selection + inner peel rounds, engine
-    supplied as ``step(active) -> refreshed int64 support``.
+def _scatter_theta(theta, packed, theta_loc, n_parts):
+    """Map packed-local θ back to global entity ids."""
+    for i in range(n_parts):
+        mine = packed["mine"][i]
+        theta[packed["gids"][i][mine]] = theta_loc[i][mine]
 
-    Returns (part, sup_init, rho_cd)."""
-    m = sup_np.size
-    alive = np.ones(m, dtype=bool)
-    part = np.full(m, -1, dtype=np.int32)
-    sup_init = np.zeros(m, dtype=np.int64)
-    total_work = float(sup_np.sum())
-    rho_cd = 0
-    for i in range(P_parts):
-        if not alive.any():
-            break
-        sup_init[alive] = sup_np[alive]
-        if i == P_parts - 1:
-            hi = int(sup_np[alive].max()) + 1
-        else:
-            tgt = total_work / P_parts
-            s = np.sort(sup_np[alive])
-            w = np.maximum(s, 1).astype(np.float64)
-            cum = np.cumsum(w)
-            pos = min(int(np.searchsorted(cum, tgt)), s.size - 1)
-            hi = int(s[pos]) + 1
-            hi = max(hi, int(sup_np[alive].min()) + 1)
-        while True:
-            active = alive & (sup_np < hi)
-            if not active.any():
-                break
-            part[active] = i
-            alive &= ~active
-            sup_np = step(active)
-            rho_cd += 1
-    return part, sup_init, rho_cd
+
+def _finish(theta, part, ranges, sup_init, stats, extras, return_result):
+    """Assemble the (theta, stats[, PeelResult]) return of the
+    distributed decompositions: JSON-able stats dict with the mesh
+    extras, full provenance only when asked for."""
+    stats_out = stats.as_dict()
+    stats_out.update(extras)
+    if not return_result:
+        return theta, stats_out
+    result = PeelResult(
+        theta=theta, part=part, ranges=ranges,
+        support_init=sup_init, stats=stats,
+    )
+    return theta, stats_out, result
 
 
 def distributed_wing_decomposition(
@@ -969,7 +1094,9 @@ def distributed_wing_decomposition(
     bloom_aligned: bool = False,
     engine: str = "beindex",
     pair_aligned: bool = False,
-) -> Tuple[np.ndarray, dict]:
+    aligned: Optional[bool] = None,
+    return_result: bool = False,
+):
     """Full PBNG wing decomposition on a device mesh.
 
     ``engine="beindex"``: link-sharded CD rounds (two psums;
@@ -979,7 +1106,15 @@ def distributed_wing_decomposition(
     ``pair_aligned=True`` shards wedges pair-aligned (all of a pair's
     wedges on one device) so the dying-count reduction c_p is
     shard-local and CD pays ONE psum per round instead of two.  FD is
-    communication-free either way.  Returns (theta, stats).
+    communication-free either way.
+
+    ``aligned`` is the entity-agnostic spelling of the one-psum layout
+    (the flag ``launch/peel.py`` passes for both tip and wing): it maps
+    to ``pair_aligned`` for csr and ``bloom_aligned`` for beindex.
+
+    Returns ``(theta, stats)`` — ``return_result=True`` appends the full
+    :class:`~repro.core.peelspec.PeelResult` (partition provenance for
+    the hierarchy serializer).
 
     Example (8 forced host devices)::
 
@@ -989,6 +1124,11 @@ def distributed_wing_decomposition(
     """
     if engine not in ("beindex", "csr"):
         raise ValueError(engine)
+    if aligned is not None:
+        if engine == "csr":
+            pair_aligned = aligned
+        else:
+            bloom_aligned = aligned
     if pair_aligned and engine != "csr":
         raise ValueError(
             "pair_aligned shards the wedge list: csr engine only "
@@ -1000,8 +1140,9 @@ def distributed_wing_decomposition(
                 "engine='csr' builds no BE-Index: bloom_aligned/be "
                 "only apply to engine='beindex'"
             )
-        return _distributed_wing_csr(g, mesh, axis, P_parts,
-                                     pair_aligned=pair_aligned)
+        return _distributed_wing_csr(
+            g, mesh, axis, P_parts, pair_aligned=pair_aligned,
+            return_result=return_result)
     if be is None:
         be = build_beindex(g)
     m = g.m
@@ -1036,32 +1177,33 @@ def distributed_wing_decomposition(
         st = cd_round_sharded(round_fn, st, jnp.asarray(active))
         return np.asarray(st.support).astype(np.int64)
 
-    part, sup_init, rho_cd = _cd_partition_loop(
-        np.asarray(support).astype(np.int64), P_parts, step)
-    n_parts = int(part.max()) + 1
+    stats = PeelStats(engine="beindex", fd_driver="device")
+    sup0 = np.asarray(support).astype(np.int64)
+    spec = PeelSpec(
+        kind="wing", n=m, sup0=sup0,
+        workload=lambda s: np.maximum(s, 1), est=lambda s: s,
+        cd_step=step,
+    )
+    part, sup_init, ranges, n_parts = cd_loop(
+        spec, P_parts, stats,
+        target=FixedTarget(float(sup0.sum()), P_parts))
 
     packed = pack_fd_partitions(g, be, part, sup_init, n_parts)
     theta_loc, rounds = fd_peel_sharded(packed, mesh, axis)
     theta = np.zeros(m, dtype=np.int64)
-    for i in range(n_parts):
-        mine = packed["mine"][i]
-        theta[packed["gids"][i][mine]] = theta_loc[i][mine]
-    stats = dict(
-        engine="beindex",
-        rho_cd=rho_cd,
-        rho_fd_total=int(rounds.sum()),
-        rho_fd_max=int(rounds.max()) if rounds.size else 0,
-        n_parts=n_parts,
-        n_links=be.n_links,
-        n_dev=n_dev,
-    )
-    return theta, stats
+    _scatter_theta(theta, packed, theta_loc, n_parts)
+    stats.rho_fd_total = int(rounds.sum())
+    stats.rho_fd_max = int(rounds.max()) if rounds.size else 0
+    return _finish(
+        theta, part, ranges, sup_init, stats,
+        dict(n_parts=n_parts, n_links=be.n_links, n_dev=int(n_dev)),
+        return_result)
 
 
 def _distributed_wing_csr(
     g: BipartiteGraph, mesh: Mesh, axis: str, P_parts: int,
-    pair_aligned: bool = False,
-) -> Tuple[np.ndarray, dict]:
+    pair_aligned: bool = False, return_result: bool = False,
+):
     """csr engine on a mesh: wedge-sharded CD + wedge-packed FD.
 
     ``pair_aligned`` swaps the round-robin wedge padding for the
@@ -1104,62 +1246,55 @@ def _distributed_wing_csr(
         st = cd_round_sharded_csr(round_fn, st, jnp.asarray(active))
         return np.asarray(st.support).astype(np.int64)
 
-    part, sup_init, rho_cd = _cd_partition_loop(
-        np.asarray(support).astype(np.int64), P_parts, step)
-    n_parts = int(part.max()) + 1
+    stats = PeelStats(engine="csr", fd_driver="device")
+    sup0_np = np.asarray(support).astype(np.int64)
+    spec = PeelSpec(
+        kind="wing", n=m, sup0=sup0_np,
+        workload=lambda s: np.maximum(s, 1), est=lambda s: s,
+        cd_step=step,
+    )
+    part, sup_init, ranges, n_parts = cd_loop(
+        spec, P_parts, stats,
+        target=FixedTarget(float(sup0_np.sum()), P_parts))
 
     packed = pack_fd_partitions_csr(wed, part, sup_init, n_parts)
     theta_loc, rounds = fd_peel_sharded_csr(packed, mesh, axis)
     theta = np.zeros(m, dtype=np.int64)
-    for i in range(n_parts):
-        mine = packed["mine"][i]
-        theta[packed["gids"][i][mine]] = theta_loc[i][mine]
-    stats = dict(
-        engine="csr",
-        cd_sharding="pair_aligned" if pair_aligned else "wedge",
-        rho_cd=rho_cd,
-        rho_fd_total=int(rounds.sum()),
-        rho_fd_max=int(rounds.max()) if rounds.size else 0,
-        n_parts=n_parts,
-        n_wedges=wed.n_wedges,
-        n_pairs=wed.n_pairs,
-        n_dev=n_dev,
-    )
-    return theta, stats
+    _scatter_theta(theta, packed, theta_loc, n_parts)
+    stats.rho_fd_total = int(rounds.sum())
+    stats.rho_fd_max = int(rounds.max()) if rounds.size else 0
+    return _finish(
+        theta, part, ranges, sup_init, stats,
+        dict(cd_sharding="pair_aligned" if pair_aligned else "wedge",
+             n_parts=n_parts, n_wedges=wed.n_wedges,
+             n_pairs=wed.n_pairs, n_dev=n_dev),
+        return_result)
 
 
 # =====================================================================
 # Distributed TIP decomposition (vertex peeling, §3.2)
 # =====================================================================
-# CD: batch re-counting is a masked matmul — shard the *row blocks* of W
-# across devices; each device re-counts butterflies for its vertex shard
-# with zero collectives (A is replicated at container scale; row-sharded
-# A + one all-gather per round at cluster scale).
-# FD: partitions stack on a leading axis and peel under shard_map with
-# no communication, pairwise butterfly counts computed once per
-# partition inside the kernel (static because V is never peeled).
-def _tip_cd_recount_body(A_blk, alive_blk, A_full, alive_full, row0):
-    Am = A_full * alive_full[:, None]
-    W = jax.lax.dot(A_blk * alive_blk[:, None], Am.T,
-                    precision=jax.lax.Precision.HIGHEST)
-    rows = row0 + jnp.arange(A_blk.shape[0])
-    cols = jnp.arange(A_full.shape[0])
-    W = jnp.where(rows[:, None] == cols[None, :], 0.0, W)
-    return jnp.sum(W * (W - 1.0) * 0.5, axis=1)
-
-
 def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
-    """Jitted row-sharded tip batch re-count; returns (fn, rows/shard)."""
+    """Jitted row-sharded tip batch re-count; returns (fn, rows/shard).
+
+    The dense-engine fallback: shard the *row blocks* of the wedge
+    matrix across devices; each device re-counts butterflies for its
+    vertex shard (A gathered per round — O(n²) work and memory, which
+    is exactly why ``engine="csr"`` is the default)."""
     blk = -(-n // n_dev)
 
     def body(A_pad, alive_pad, shard_idx):
         # per-shard: A_pad [blk, nv], alive [blk], idx [1]
         row0 = shard_idx[0] * blk
-        return _tip_cd_recount_body(
-            A_pad, alive_pad,
-            jax.lax.all_gather(A_pad, axis, axis=0, tiled=True),
-            jax.lax.all_gather(alive_pad, axis, axis=0, tiled=True),
-            row0)
+        A_full = jax.lax.all_gather(A_pad, axis, axis=0, tiled=True)
+        alive_full = jax.lax.all_gather(alive_pad, axis, axis=0, tiled=True)
+        Am = A_full * alive_full[:, None]
+        W = jax.lax.dot(A_pad * alive_pad[:, None], Am.T,
+                        precision=jax.lax.Precision.HIGHEST)
+        rows = row0 + jnp.arange(A_pad.shape[0])
+        cols = jnp.arange(A_full.shape[0])
+        W = jnp.where(rows[:, None] == cols[None, :], 0.0, W)
+        return jnp.sum(W * (W - 1.0) * 0.5, axis=1)
 
     fn = shard_map(
         body, mesh=mesh,
@@ -1170,7 +1305,9 @@ def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
 
 
 def _tip_fd_kernel(A_i, mine, sup0):
-    """Peel one tip partition bottom-up — no collectives.
+    """Peel one dense tip partition bottom-up — the shared device FD
+    driver with the static pairwise-butterfly matvec update: one
+    while_loop, no collectives.
 
     A_i: [Umax, nv] rows of this partition (zero-padded), mine [Umax],
     sup0 [Umax].  Pairwise butterflies are static (V never peeled)."""
@@ -1178,27 +1315,13 @@ def _tip_fd_kernel(A_i, mine, sup0):
     Umax = W.shape[0]
     W = W * (1.0 - jnp.eye(Umax, dtype=W.dtype))
     pair_bf = W * (W - 1.0) * 0.5
-    BIG = jnp.float32(2 ** 30)
 
-    def cond(state):
-        alive, *_ = state
-        return jnp.any(alive)
+    def update(S, aux):
+        loss = jnp.rint(pair_bf @ S.astype(jnp.float32)).astype(jnp.int32)
+        return loss, aux, jnp.int32(0)
 
-    def body(state):
-        alive, support, theta, k, rounds = state
-        cur = jnp.where(alive, support, BIG)
-        k = jnp.maximum(k, jnp.min(cur))
-        S = alive & (support <= k)
-        theta = jnp.where(S, k, theta)
-        alive = alive & ~S
-        support = support - pair_bf @ S.astype(jnp.float32)
-        return (alive, support, theta, k, rounds + 1)
-
-    zero = jnp.sum(mine.astype(jnp.float32)) * 0.0
-    init = (mine, sup0.astype(jnp.float32),
-            jnp.zeros((Umax,), jnp.float32) + zero, zero,
-            jnp.int32(0) + zero.astype(jnp.int32))
-    _, _, theta, _, rounds = jax.lax.while_loop(cond, body, init)
+    theta, rounds, _ = _fd_while_device(
+        mine, jnp.rint(sup0).astype(jnp.int32), update, jnp.int32(0))
     return theta, rounds
 
 
@@ -1208,24 +1331,134 @@ def distributed_tip_decomposition(
     axis: str = "peel",
     side: str = "u",
     P_parts: int = 8,
-) -> Tuple[np.ndarray, dict]:
+    engine: str = "csr",
+    aligned: bool = False,
+    fd_driver: str = "device",
+    return_result: bool = False,
+):
     """Full PBNG tip decomposition on a device mesh.
 
-    CD re-counts supports with row-sharded masked matmuls (zero
-    collectives per round at container scale — A is replicated); FD
-    stacks padded partitions and peels them under ``shard_map`` with no
-    communication, pairwise butterfly counts computed once per partition
-    inside the kernel (static: V is never peeled).  Returns
-    (theta, stats) with θ bit-identical to the single-device engines.
+    ``engine="csr"`` (default): wedge-list CD — the directed
+    pair-incidence list is sharded (``aligned=True`` keeps ALL of a
+    vertex's entries on one device via the generalized greedy balance)
+    and every round pays exactly ONE psum (pair butterflies are static,
+    so there is no dying-count collective at all); FD stacks the
+    disjoint per-partition pair lists and peels under ``shard_map`` with
+    zero collectives (``fd_driver="device"``), or in ONE batched
+    single-dispatch while_loop (``fd_driver="vmapped"``).  O(Σ deg²)
+    memory end to end — the path that opens the largest-graph tip
+    workloads.
+
+    ``engine="dense"``: the explicit O(n²) fallback — row-sharded
+    masked-matmul re-counts for CD, stacked matmul-cascade partitions
+    for FD.  Kept for machines where the wedge list is the bigger
+    allocation (near-complete bipartite cores); refuses nothing but
+    memory.
+
+    θ is bit-identical across both engines and to the single-device
+    oracle.  Returns ``(theta, stats)``; ``return_result=True`` appends
+    the full :class:`~repro.core.peelspec.PeelResult` (partition
+    provenance for the hierarchy serializer).
 
     Example (8 forced host devices)::
 
         mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
-        theta, stats = distributed_tip_decomposition(g, mesh, side="u")
+        theta, stats = distributed_tip_decomposition(
+            g, mesh, side="u", engine="csr", aligned=True)
     """
+    if engine not in ("csr", "dense"):
+        raise ValueError(engine)
+    if fd_driver not in ("device", "vmapped"):
+        raise ValueError(fd_driver)
+    if engine == "dense" and (aligned or fd_driver != "device"):
+        raise ValueError(
+            "aligned / fd_driver='vmapped' need the wedge list: "
+            "engine='csr' only")
+    gg = g if side == "u" else g.transpose()
+    if engine == "csr":
+        return _distributed_tip_csr(
+            gg, mesh, axis, side, P_parts, aligned=aligned,
+            fd_driver=fd_driver, return_result=return_result)
+    return _distributed_tip_dense(
+        gg, mesh, axis, side, P_parts, return_result=return_result)
+
+
+def _distributed_tip_csr(
+    gg: BipartiteGraph, mesh: Mesh, axis: str, side: str, P_parts: int,
+    aligned: bool = False, fd_driver: str = "device",
+    return_result: bool = False,
+):
+    """csr tip on a mesh: one-psum pair-incidence CD + stacked pair FD."""
+    wed = csr.build_wedges(gg)
+    n = gg.n_u
+    n_dev = int(mesh.devices.size)
+    pair_bf0 = wed.pair_butterflies0()
+    sup0 = csr.vertex_butterflies_csr(wed)
+    if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
+        raise OverflowError("tip supports exceed int32; shard the graph")
+    wu, _ = csr.wedge_workload(gg)
+    wedge_w = wu.astype(np.float64)
+
+    blocks = shard_tip_pairs(wed, pair_bf0, n_dev, aligned=aligned)
+    round_fn = make_cd_round_tip_csr(mesh, axis, n)
+    dst = jnp.asarray(blocks["dst"])
+    src = jnp.asarray(blocks["src"])
+    bf = jnp.asarray(blocks["bf"])
+    state = dict(support=jnp.asarray(sup0.astype(np.int32)))
+
+    def step(active: np.ndarray) -> np.ndarray:
+        peeled_pad = jnp.concatenate(
+            [jnp.asarray(active), jnp.zeros((1,), bool)])
+        support_pad = jnp.concatenate(
+            [state["support"], jnp.zeros((1,), jnp.int32)])
+        support_pad = round_fn(peeled_pad, support_pad, dst, src, bf)
+        state["support"] = support_pad[:-1]
+        return np.asarray(state["support"]).astype(np.int64)
+
+    stats = PeelStats(engine="csr", fd_driver=fd_driver, side=side)
+    # same ≥1 workload clamp as the dense distributed path so the two
+    # engines pick identical range boundaries (stats comparability)
+    spec = PeelSpec(
+        kind="tip", n=n, sup0=sup0,
+        workload=lambda s: np.maximum(wedge_w, 1),
+        est=lambda s: wedge_w,
+        cd_step=step,
+    )
+    part, sup_init, ranges, n_parts = cd_loop(
+        spec, P_parts, stats,
+        target=FixedTarget(float(wedge_w.sum()), P_parts))
+
+    theta = np.zeros(n, dtype=np.int64)
+    if n_parts:
+        if fd_driver == "vmapped":
+            from .peel import _tip_fd_vmapped_csr
+
+            rounds = _tip_fd_vmapped_csr(
+                wed, pair_bf0, part, sup_init, theta, n_parts)
+        else:
+            packed = pack_fd_partitions_tip_csr(
+                wed, pair_bf0, part, sup_init, n_parts, stacked=True)
+            theta_loc, rounds = fd_peel_sharded_tip_csr(packed, mesh, axis)
+            _scatter_theta(theta, packed, theta_loc, n_parts)
+        stats.rho_fd_total = int(np.asarray(rounds).sum())
+        stats.rho_fd_max = int(np.asarray(rounds).max())
+    return _finish(
+        theta, part, ranges, sup_init, stats,
+        dict(cd_sharding="vertex_aligned" if aligned else "pair",
+             n_parts=n_parts, n_wedges=wed.n_wedges,
+             n_pairs=wed.n_pairs, n_dev=n_dev),
+        return_result)
+
+
+def _distributed_tip_dense(
+    gg: BipartiteGraph, mesh: Mesh, axis: str, side: str, P_parts: int,
+    return_result: bool = False,
+):
+    """Dense tip on a mesh: row-sharded masked-matmul re-counts for CD,
+    stacked matmul-cascade partitions for FD — the explicit O(n²)
+    fallback behind ``engine="dense"``."""
     from . import counting
 
-    gg = g if side == "u" else g.transpose()
     n, nv = gg.n_u, gg.n_v
     n_dev = int(mesh.devices.size)
     A_np = gg.adjacency()
@@ -1234,54 +1467,45 @@ def distributed_tip_decomposition(
     A = jnp.asarray(np.pad(A_np, ((0, n_pad - n), (0, 0))))
     shard_idx = jnp.arange(n_dev, dtype=jnp.int32)
 
-    alive = np.ones(n_pad, bool)
-    alive[n:] = False
-    support = np.asarray(recount_fn(A, jnp.asarray(alive), shard_idx))
-    support = np.rint(support).astype(np.int64)
+    alive_pad = np.ones(n_pad, bool)
+    alive_pad[n:] = False
+    sup0 = np.rint(np.asarray(
+        recount_fn(A, jnp.asarray(alive_pad), shard_idx))).astype(
+            np.int64)[:n]
     wedge_w = np.rint(np.asarray(
         counting.vertex_wedge_workload(jnp.asarray(A_np)))).astype(np.int64)
 
-    part = np.full(n, -1, np.int32)
-    sup_init = np.zeros(n, np.int64)
-    total_w = float(wedge_w.sum())
-    rho_cd = 0
-    for i in range(P_parts):
-        av = alive[:n]
-        if not av.any():
-            break
-        sup_init[av] = support[:n][av]
-        if i == P_parts - 1:
-            hi = int(support[:n][av].max()) + 1
-        else:
-            s = np.sort(support[:n][av])
-            w = wedge_w[av][np.argsort(support[:n][av], kind="stable")]
-            cum = np.cumsum(np.maximum(w, 1))
-            pos = min(int(np.searchsorted(cum, total_w / P_parts)),
-                      s.size - 1)
-            hi = max(int(s[pos]) + 1, int(s[0]) + 1)
-        while True:
-            active = alive[:n] & (support[:n] < hi)
-            if not active.any():
-                break
-            part[active] = i
-            alive[:n] &= ~active
-            support = np.rint(np.asarray(recount_fn(
-                A, jnp.asarray(alive), shard_idx))).astype(np.int64)
-            rho_cd += 1
-    n_parts = int(part.max()) + 1
+    def step(active: np.ndarray) -> np.ndarray:
+        alive_pad[:n] &= ~active
+        sup = np.rint(np.asarray(recount_fn(
+            A, jnp.asarray(alive_pad), shard_idx))).astype(np.int64)
+        return sup[:n]
+
+    stats = PeelStats(engine="dense", fd_driver="device", side=side)
+    # range-selection weights clamp to ≥1 (as pre-refactor) so
+    # zero-wedge vertices still advance the cumulative-workload scan
+    spec = PeelSpec(
+        kind="tip", n=n, sup0=sup0,
+        workload=lambda s: np.maximum(wedge_w, 1),
+        est=lambda s: wedge_w,
+        cd_step=step,
+    )
+    part, sup_init, ranges, n_parts = cd_loop(
+        spec, P_parts, stats,
+        target=FixedTarget(float(wedge_w.sum()), P_parts))
 
     # ---- FD: stack padded partitions, shard over devices
     rows_per = [np.where(part == i)[0] for i in range(n_parts)]
     Umax = max(max((r.size for r in rows_per), default=1), 1)
-    pad_parts = -(-n_parts // n_dev) * n_dev
+    pad_parts = -(-max(n_parts, 1) // n_dev) * n_dev
     A_st = np.zeros((pad_parts, Umax, nv), np.float32)
     mine = np.zeros((pad_parts, Umax), bool)
-    sup0 = np.zeros((pad_parts, Umax), np.float32)
+    sup_st = np.zeros((pad_parts, Umax), np.float32)
     gids = np.zeros((pad_parts, Umax), np.int64)
     for i, r in enumerate(rows_per):
         A_st[i, : r.size] = A_np[r]
         mine[i, : r.size] = True
-        sup0[i, : r.size] = sup_init[r]
+        sup_st[i, : r.size] = sup_init[r]
         gids[i, : r.size] = r
     vk = jax.vmap(_tip_fd_kernel)
     fd = shard_map(
@@ -1290,15 +1514,14 @@ def distributed_tip_decomposition(
         out_specs=(P(axis), P(axis)),
     )
     theta_st, rounds = jax.jit(fd)(
-        jnp.asarray(A_st), jnp.asarray(mine), jnp.asarray(sup0))
-    theta_st = np.rint(np.asarray(theta_st)).astype(np.int64)
+        jnp.asarray(A_st), jnp.asarray(mine), jnp.asarray(sup_st))
+    theta_st = np.asarray(theta_st).astype(np.int64)
     theta = np.zeros(n, np.int64)
-    for i in range(n_parts):
-        theta[gids[i][mine[i]]] = theta_st[i][mine[i]]
-    stats = dict(
-        rho_cd=rho_cd,
-        rho_fd_total=int(np.asarray(rounds).sum()),
-        rho_fd_max=int(np.asarray(rounds).max()) if n_parts else 0,
-        n_parts=n_parts, n_dev=n_dev,
-    )
-    return theta, stats
+    _scatter_theta(theta, dict(mine=mine, gids=gids), theta_st, n_parts)
+    rounds = np.asarray(rounds)[:n_parts]
+    stats.rho_fd_total = int(rounds.sum())
+    stats.rho_fd_max = int(rounds.max()) if n_parts else 0
+    return _finish(
+        theta, part, ranges, sup_init, stats,
+        dict(n_parts=n_parts, n_dev=n_dev),
+        return_result)

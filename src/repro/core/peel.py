@@ -10,6 +10,14 @@ independent given the support-initialization vector ⋈init, so each is
 peeled to exact entity numbers with *zero* communication.  Partitions are
 processed in LPT (longest-processing-time) order.
 
+Both phases are driven by the entity-agnostic core in ``core.peelspec``
+— :func:`tip_decomposition` and :func:`wing_decomposition` only build
+the :class:`~repro.core.peelspec.PeelSpec` (supports, workload proxy,
+incremental update rule, FD packers) for their entity universe and hand
+it to ``peelspec.decompose``.  The CD round loop, range selection and
+all three FD cascade drivers exist exactly once, shared by every engine
+below and by ``core.distributed``.
+
 Three engines:
   * ``engine="dense"``   — TPU-native: supports re-counted per round with
     masked MXU matmuls (the paper's §5.1 batch re-count optimization taken
@@ -25,7 +33,6 @@ All return identical θ (validated against the pure-python BUP oracle).
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 from functools import partial
 from typing import Optional, Tuple
@@ -37,10 +44,26 @@ import numpy as np
 from . import counting, csr
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
+from .peelspec import (  # noqa: F401 — canonical home is peelspec; kept
+    PeelResult,           # importable from here for compatibility
+    PeelSpec,
+    PeelStats,
+    AdaptiveTarget as _AdaptiveTarget,
+    _FD_BIG,
+    _bucket_pad,
+    _fd_cascade,
+    _fd_while_device,
+    _fd_while_vmapped,
+    _find_range,
+    _lpt_order,
+    _pad_zeros,
+)
+from . import peelspec
 
 __all__ = [
     "PeelStats",
     "PeelResult",
+    "PeelSpec",
     "tip_decomposition",
     "wing_decomposition",
     "wing_decomposition_bepc",
@@ -49,286 +72,8 @@ __all__ = [
 
 
 # =====================================================================
-# Results / stats
+# Entity-specific single-dispatch (vmapped) FD bodies
 # =====================================================================
-@dataclasses.dataclass
-class PeelStats:
-    """Reproduces the paper's evaluation metrics (tables 3/4)."""
-
-    rho_cd: int = 0          # CD global-sync rounds
-    rho_fd_total: int = 0    # Σ sequential FD rounds  (≈ ParButterfly's ρ)
-    rho_fd_max: int = 0      # FD critical path (what PBNG actually pays)
-    updates: int = 0         # support updates applied (beindex engine)
-    recounts: int = 0        # batch re-counts (dense engine)
-    p_effective: int = 0     # partitions actually created
-    engine: str = ""         # engine that produced THESE round counts
-    fd_driver: str = ""      # "device" (one while_loop/partition) | "host"
-
-    @property
-    def rho(self) -> int:
-        """PBNG synchronization rounds = CD rounds only: FD partitions
-        peel with NO global synchronization (the paper's ρ)."""
-        return self.rho_cd
-
-    @property
-    def sync_reduction(self) -> float:
-        """ρ(level-by-level parallel BUP) / ρ(PBNG) — the headline claim.
-
-        ρ(ParB) ≈ total per-level rounds = rho_fd_total (footnote 6).
-        Both counts come from *this* run — the ratio is only meaningful
-        per engine (an engine's own FD cascade stands in for the
-        level-synchronous baseline it would have been).  Benchmarks must
-        therefore never mix one engine's rho_cd with another's
-        rho_fd_total; :meth:`as_dict` gives them the honest per-engine
-        row."""
-        return self.rho_fd_total / max(self.rho_cd, 1)
-
-    def as_dict(self) -> dict:
-        """Flat JSON-ready view (per-engine rho + derived ratios)."""
-        d = dataclasses.asdict(self)
-        d["rho"] = self.rho
-        d["sync_reduction"] = round(self.sync_reduction, 3)
-        return d
-
-    @classmethod
-    def from_dict(cls, d: dict) -> "PeelStats":
-        """Inverse of :meth:`as_dict` — tolerates the derived keys
-        (``rho``, ``sync_reduction``) that :meth:`as_dict` appends, so a
-        stats row can round-trip through JSON / the hierarchy serializer
-        without losing the engine / fd_driver provenance tags."""
-        fields = {f.name for f in dataclasses.fields(cls)}
-        return cls(**{k: v for k, v in d.items() if k in fields})
-
-
-@dataclasses.dataclass
-class PeelResult:
-    """Everything a decomposition produced.
-
-    ``theta`` are the tip/wing numbers (the deliverable); ``part`` /
-    ``ranges`` / ``support_init`` are the CD partition assignment, range
-    boundaries θ(1..P+1), and the ⋈init support snapshot — together the
-    provenance the hierarchy builder/serializer persists; ``stats`` is
-    the engine-tagged :class:`PeelStats` row."""
-
-    theta: np.ndarray        # entity numbers
-    part: np.ndarray         # CD partition id per entity
-    ranges: np.ndarray       # (P+1,) range boundaries θ(1..P+1)
-    support_init: np.ndarray  # ⋈init vector
-    stats: PeelStats
-
-    def provenance(self) -> dict:
-        """Everything besides θ a downstream consumer (the hierarchy
-        builder/serializer) needs to reconstruct how this decomposition
-        was produced: engine-tagged stats plus the CD partition
-        assignment, range boundaries, and ⋈init — together they rebuild
-        the peeling order (entities peel by partition, then by θ within
-        the partition from the recorded support snapshot)."""
-        return dict(
-            stats=self.stats.as_dict(),
-            part=np.asarray(self.part),
-            ranges=np.asarray(self.ranges),
-            support_init=np.asarray(self.support_init),
-        )
-
-
-# =====================================================================
-# Range selection (§3.1.3) — host-side histogram + prefix scan
-# =====================================================================
-def _find_range(
-    support: np.ndarray,
-    workload: np.ndarray,
-    alive: np.ndarray,
-    tgt: float,
-) -> int:
-    """Smallest hi such that Σ workload[alive & support < hi] ≥ tgt."""
-    s = support[alive]
-    w = workload[alive]
-    if s.size == 0:
-        return 0
-    order = np.argsort(s, kind="stable")
-    s, w = s[order], w[order]
-    cum = np.cumsum(w)
-    pos = int(np.searchsorted(cum, max(tgt, 1e-9)))
-    pos = min(pos, s.size - 1)
-    return int(s[pos]) + 1
-
-
-class _AdaptiveTarget:
-    """Two-way adaptive range targets (§3.1.3)."""
-
-    def __init__(self, total_workload: float, P: int):
-        self.P = P
-        self.remaining = float(total_workload)
-        self.scale = 1.0
-
-    def target(self, i: int) -> float:
-        """Workload target for partition i: remaining / remaining parts,
-        damped by the last overshoot ratio."""
-        rem_parts = max(self.P - i, 1)
-        return self.scale * self.remaining / rem_parts
-
-    def consumed(self, initial_estimate: float, final_estimate: float) -> None:
-        """Record partition i's actual workload and update the damping."""
-        self.remaining = max(self.remaining - final_estimate, 0.0)
-        if final_estimate > 0 and initial_estimate > 0:
-            # predictive local behaviour: next partition will overshoot
-            # roughly like this one did
-            self.scale = min(1.0, initial_estimate / final_estimate)
-
-
-def _lpt_order(work: np.ndarray) -> np.ndarray:
-    """Longest-processing-time order of partitions (fig.4)."""
-    return np.argsort(-work, kind="stable")
-
-
-def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
-                apply_peel) -> int:
-    """Level-synchronous bottom-up cascade shared by the incremental FD
-    engines: advance k to the minimum alive support, peel the ≤k set,
-    apply the engine's update, repeat until the partition is empty.
-
-    ``apply_peel(S, sup)`` consumes the peel mask and the current int64
-    support vector and returns the refreshed one (updating any engine
-    state it closes over).  Returns the number of peel rounds.
-
-    This is the *host-loop* driver (one device dispatch per peel round).
-    The csr engine defaults to :func:`_fd_while_device`, which runs the
-    identical cascade inside a single ``lax.while_loop``.
-    """
-    alive = mine.copy()
-    sup = support0
-    k = 0
-    rounds = 0
-    while alive.any():
-        k = max(k, int(sup[alive].min()))
-        while True:
-            S = alive & (sup <= k)
-            if not S.any():
-                break
-            theta[S] = k
-            alive &= ~S
-            sup = apply_peel(S, sup)
-            rounds += 1
-    return rounds
-
-
-# =====================================================================
-# Device-resident FD driver (single while_loop per partition)
-# =====================================================================
-# sentinel for masked-out supports in the k-advance; must be >= any real
-# support (engines guard supports <= int32 max), else the while_loop can
-# never peel the last entities and spins forever
-_FD_BIG = jnp.iinfo(jnp.int32).max
-
-
-def _bucket_pad(n: int, floor: int = 128) -> int:
-    """Round n up to a quarter-power-of-two bucket (≥ floor) — pads
-    per-partition pair / wedge arrays so the jitted FD drivers recompile
-    per size *bucket* instead of per partition, with ≤25% padding waste
-    (zero padding is algebra-neutral: a pair with 0 butterflies / a dead
-    wedge contributes no loss)."""
-    if n <= floor:
-        return floor
-    step = 1 << max(int(n - 1).bit_length() - 2, 0)
-    return -(-n // step) * step
-
-
-def _pad_zeros(x: np.ndarray, size: int) -> np.ndarray:
-    if x.size >= size:
-        return x
-    return np.concatenate([x, np.zeros(size - x.size, dtype=x.dtype)])
-
-
-def _fd_while_device(mine: jax.Array, sup0: jax.Array, update, aux):
-    """The batched FD cascade as one ``lax.while_loop`` — shared by the
-    csr tip and wing engines (and the sharded FD bodies in
-    ``core.distributed``).
-
-    Semantics are identical to :func:`_fd_cascade` — every iteration
-    advances k to the minimum alive support and peels the ≤k set, so the
-    round count matches the host driver exactly — but the whole cascade
-    stays device-resident: zero host↔device transfers per partition,
-    which is the paper's Phase-2 "no global synchronization" property
-    stated structurally (one jit'd while_loop, no dispatch per round).
-
-    ``update(S, aux) -> (loss, aux', n_upd)`` is the engine's incremental
-    support update; ``aux`` is its loop-carried state (wedge/pair alive
-    masks and counts).  Returns (theta, rounds, updates), all on device.
-    """
-
-    def cond(state):
-        alive, *_ = state
-        return jnp.any(alive)
-
-    def body(state):
-        alive, sup, aux, theta, k, rounds, nupd = state
-        cur = jnp.where(alive, sup, _FD_BIG)
-        k = jnp.maximum(k, jnp.min(cur))
-        S = alive & (sup <= k)
-        # S is non-empty whenever alive is (k ≥ min alive support), so
-        # every iteration is one real peel round — same count as the
-        # host cascade.
-        theta = jnp.where(S, k, theta)
-        alive = alive & ~S
-        loss, aux, nu = update(S, aux)
-        return (alive, sup - loss, aux, theta, k, rounds + 1, nupd + nu)
-
-    # derive loop-constant inits from varying inputs so the carry's
-    # manual-axes annotation is stable under shard_map (same trick as
-    # distributed._fd_body_one_partition)
-    zero_e = sup0 * 0
-    zero_s = jnp.min(zero_e)
-    init = (mine, sup0, aux, zero_e, zero_s, zero_s, zero_s)
-    _, _, _, theta, _, rounds, nupd = jax.lax.while_loop(cond, body, init)
-    return theta, rounds, nupd
-
-
-def _fd_while_vmapped(mine: jax.Array, sup0: jax.Array, update, aux):
-    """The FULL Phase 2 — every partition's cascade — as ONE batched
-    ``lax.while_loop``: the single-dispatch companion of
-    :func:`_fd_while_device`.
-
-    ``mine``/``sup0`` carry a leading partition axis [B, E]; each
-    iteration advances every still-alive partition by exactly one peel
-    round (its own k-advance + ≤k peel), so per-partition round counts
-    are bit-identical to the per-partition drivers and the loop's trip
-    count is the FD *critical path* rho_fd_max.  Finished partitions
-    idle (empty peel sets are algebra-neutral) until the last one
-    drains — the whole Phase 2 is one dispatch, zero host round-trips,
-    zero collectives: PBNG's "no global synchronization" claim stated
-    structurally for the entire fine-grained phase, not per partition.
-
-    ``update(S, aux) -> (loss, aux', n_upd)`` consumes the batched peel
-    mask S [B, E] and returns batched losses plus the scalar update
-    count of the round.  Returns (theta [B, E], rounds [B], updates).
-    """
-
-    def cond(state):
-        alive, *_ = state
-        return jnp.any(alive)
-
-    def body(state):
-        alive, sup, aux, theta, k, rounds, nupd = state
-        live = jnp.any(alive, axis=1)
-        cur = jnp.where(alive, sup, _FD_BIG)
-        k = jnp.maximum(k, jnp.min(cur, axis=1))
-        S = alive & (sup <= k[:, None])
-        # per live partition S is non-empty (k ≥ its min alive support):
-        # every iteration is one real peel round of every live partition
-        theta = jnp.where(S, k[:, None], theta)
-        alive = alive & ~S
-        loss, aux, nu = update(S, aux)
-        return (alive, sup - loss, aux, theta, k,
-                rounds + live.astype(jnp.int32), nupd + nu)
-
-    # derive loop-constant inits from varying inputs (cf. _fd_while_device)
-    zero_e = sup0 * 0
-    zero_p = jnp.min(zero_e, axis=1)
-    init = (mine, sup0, aux, zero_e, zero_p, zero_p, jnp.int32(0))
-    _, _, _, theta, _, rounds, nupd = jax.lax.while_loop(cond, body, init)
-    return theta, rounds, nupd
-
-
 @jax.jit
 def _fd_tip_vmapped(
     pag: jax.Array,      # (W,) int32 — globalized pair endpoints b·Emax+u
@@ -472,6 +217,9 @@ def _fd_wing_vmapped_pallas(
     )
 
 
+# =====================================================================
+# Entity-specific per-partition (device) FD bodies
+# =====================================================================
 @partial(jax.jit, static_argnames=("n",))
 def _fd_tip_device(
     mine: jax.Array,      # (n,) bool — partition members
@@ -553,6 +301,7 @@ def tip_decomposition(
     batch_recount="adaptive",
     engine: str = "dense",
     fd_driver: str = "device",
+    use_pallas: bool = False,
 ) -> PeelResult:
     """PBNG tip decomposition (§3.2) — θ per U (or V) vertex.
 
@@ -585,6 +334,12 @@ def tip_decomposition(
     rounds from a python loop (the PR-1 baseline kept for A/B
     benchmarks).
 
+    ``use_pallas`` (csr engine only): run CD support updates through the
+    blocked ``kernels.wedge_count`` row-sum kernel on the vertex-major
+    pair-slot layout (``csr.tip_delta_slots``; interpret mode off-TPU)
+    instead of flat segment_sums — θ and round/update counts
+    parity-locked either way.
+
     ``batch_recount`` (dense engine only): the §5.1 batch optimization
     knob —
       * ``"adaptive"`` (default, paper-faithful): per round, re-count all
@@ -598,23 +353,35 @@ def tip_decomposition(
         raise ValueError(engine)
     if fd_driver not in ("device", "host", "vmapped"):
         raise ValueError(fd_driver)
+    if use_pallas and engine != "csr":
+        raise ValueError("use_pallas applies to engine='csr' only")
     gg = g if side == "u" else g.transpose()
+    stats = PeelStats(
+        engine=engine,
+        fd_driver=fd_driver if engine == "csr" else "host",
+        side=side,
+    )
     if engine == "csr":
-        return _tip_decomposition_csr(gg, P, fd_driver=fd_driver)
+        spec = _tip_spec_csr(gg, stats, use_pallas=use_pallas)
+    else:
+        spec = _tip_spec_dense(gg, batch_recount, stats)
+    return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
+
+
+def _tip_spec_dense(
+    gg: BipartiteGraph, batch_recount, stats: PeelStats
+) -> PeelSpec:
+    """Dense-engine tip spec: masked-MXU batch re-counts (or §5.1
+    adaptive incremental pairwise updates) as the CD step, static
+    pairwise-butterfly cascade as the FD rule."""
     n = gg.n_u
     _dense_guard(gg.n_u, gg.n_v)
     A = jnp.asarray(gg.adjacency())
     wedge_w = np.asarray(counting.vertex_wedge_workload(A))  # paper's proxy
 
-    alive = jnp.ones((n,), dtype=bool)
     support = counting.vertex_butterflies(A)
     counting.assert_exact(support)
-
-    part = np.full(n, -1, dtype=np.int32)
-    sup_init = np.zeros(n, dtype=np.int64)
-    ranges = [0]
-    stats = PeelStats(engine="dense", fd_driver="host")
-    adapt = _AdaptiveTarget(float(wedge_w.sum()), P)
+    sup0 = np.rint(np.asarray(support)).astype(np.int64)
 
     # counting-work bound ∧cnt (alg.1 complexity) for the adaptive rule
     du, dv = gg.degrees()
@@ -628,73 +395,42 @@ def tip_decomposition(
         np.fill_diagonal(W, 0)
         pair_bf_full = jnp.asarray(W * (W - 1) / 2)
 
-    for i in range(P):
-        alive_np = np.asarray(alive)
-        if not alive_np.any():
-            break
-        sup_np = np.rint(np.asarray(support)).astype(np.int64)
-        sup_init[alive_np] = sup_np[alive_np]
+    state = dict(alive=jnp.ones((n,), dtype=bool), support=support)
 
-        if i == P - 1:
-            hi = int(sup_np[alive_np].max()) + 1
+    def cd_step(active: np.ndarray) -> np.ndarray:
+        state["alive"] = state["alive"] & jnp.asarray(~active)
+        if batch_recount is True:
+            use_recount = True
+        elif batch_recount is False:
+            use_recount = False
+        else:  # adaptive §5.1: peel-work vs recount-work
+            use_recount = float(wedge_w[active].sum()) > cnt_bound
+        if use_recount:
+            state["support"] = _tip_recount(A, state["alive"])
+            stats.recounts += 1
         else:
-            tgt = adapt.target(i)
-            hi = _find_range(sup_np, wedge_w, alive_np, tgt)
-            hi = max(hi, int(sup_np[alive_np].min()) + 1)  # guarantee progress
-        initial_est = float(
-            wedge_w[alive_np & (sup_np < hi)].sum()
-        )
-        ranges.append(hi)
-
-        # ---- inner peeling rounds for range [θ(i), hi)
-        while True:
-            active = np.asarray(alive) & (
-                np.rint(np.asarray(support)).astype(np.int64) < hi
+            state["support"] = state["support"] - _tip_fd_delta(
+                pair_bf_full, jnp.asarray(active)
             )
-            if not active.any():
-                break
-            part[active] = i
-            alive = alive & jnp.asarray(~active)
-            if batch_recount is True:
-                use_recount = True
-            elif batch_recount is False:
-                use_recount = False
-            else:  # adaptive §5.1: peel-work vs recount-work
-                use_recount = float(wedge_w[active].sum()) > cnt_bound
-            if use_recount:
-                support = _tip_recount(A, alive)
-                stats.recounts += 1
-            else:
-                support = support - _tip_fd_delta(
-                    pair_bf_full, jnp.asarray(active)
-                )
-                stats.updates += int(active.sum()) * int(np.asarray(alive).sum())
-            stats.rho_cd += 1
+            stats.updates += int(active.sum()) * int(
+                np.asarray(state["alive"]).sum())
+        return np.rint(np.asarray(state["support"])).astype(np.int64)
 
-        final_est = float(wedge_w[part == i].sum())
-        adapt.consumed(initial_est, final_est)
-        stats.p_effective = i + 1
-
-    # ------------------------------------------------------------- FD
-    theta = np.zeros(n, dtype=np.int64)
     A_np = np.asarray(A)
-    part_work = np.array(
-        [wedge_w[part == i].sum() for i in range(stats.p_effective)]
-    )
-    for i in _lpt_order(part_work):
+
+    def fd_partition(i, part, sup_init, theta, fd_driver):
         rows = np.where(part == i)[0]
         if rows.size == 0:
-            continue
+            return 0, 0, 0
         rounds = _tip_fd_peel(A_np, rows, sup_init[rows], theta)
-        stats.rho_fd_total += rounds
-        stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+        return rounds, 0, 0
 
-    return PeelResult(
-        theta=theta,
-        part=part,
-        ranges=np.asarray(ranges, dtype=np.int64),
-        support_init=sup_init,
-        stats=stats,
+    return PeelSpec(
+        kind="tip", n=n, sup0=sup0,
+        workload=lambda s: wedge_w,
+        est=lambda s: wedge_w,
+        cd_step=cd_step,
+        fd_partition=fd_partition,
     )
 
 
@@ -733,16 +469,18 @@ def _tip_fd_peel(
 # =====================================================================
 # Tip decomposition, csr engine (sparse wedge list, core/csr.py)
 # =====================================================================
-def _tip_decomposition_csr(
-    gg: BipartiteGraph, P: int, fd_driver: str = "device"
-) -> PeelResult:
-    """CD + FD on the flat wedge list — no dense matrices anywhere.
+def _tip_spec_csr(
+    gg: BipartiteGraph, stats: PeelStats, use_pallas: bool = False
+) -> PeelSpec:
+    """csr-engine tip spec: CD + FD on the flat wedge list — no dense
+    matrices anywhere.
 
     Support init and every update are exact int32 ``segment_sum``s over
     U-endpoint pairs; pair butterfly counts are static because the V side
     is never peeled, so the engine is purely incremental (zero
-    re-counts).
-    """
+    re-counts).  ``use_pallas`` routes the CD delta through the blocked
+    row-sum kernel over the vertex-major slot layout
+    (:func:`csr.tip_delta_slots`)."""
     n = gg.n_u
     wed = csr.build_wedges(gg)
     pa = jnp.asarray(wed.pair_a)
@@ -755,74 +493,43 @@ def _tip_decomposition_csr(
     sup_np = csr.vertex_butterflies_csr(wed)
     if sup_np.size and int(sup_np.max()) > 2 ** 31 - 1:
         raise OverflowError("tip supports exceed int32; shard the graph")
-    support = jnp.asarray(sup_np.astype(np.int32))
+    state = dict(support=jnp.asarray(sup_np.astype(np.int32)))
 
-    alive = np.ones(n, dtype=bool)
-    part = np.full(n, -1, dtype=np.int32)
-    sup_init = np.zeros(n, dtype=np.int64)
-    ranges = [0]
-    stats = PeelStats(engine="csr", fd_driver=fd_driver)
-    adapt = _AdaptiveTarget(float(wedge_w.sum()), P)
+    if use_pallas:
+        slots = csr.pack_tip_slots(wed, pair_bf0, sup=sup_np)
+        slot_partner = jnp.asarray(slots["partner"])
+        slot_bf = jnp.asarray(slots["bf"])
 
-    for i in range(P):
-        if not alive.any():
-            break
-        sup_init[alive] = sup_np[alive]
-        if i == P - 1:
-            hi = int(sup_np[alive].max()) + 1
+    def cd_step(active: np.ndarray) -> np.ndarray:
+        if use_pallas:
+            delta = csr.tip_delta_slots(
+                jnp.asarray(active), slot_partner, slot_bf, n)
         else:
-            tgt = adapt.target(i)
-            hi = _find_range(sup_np, wedge_w, alive, tgt)
-            hi = max(hi, int(sup_np[alive].min()) + 1)  # guarantee progress
-        initial_est = float(wedge_w[alive & (sup_np < hi)].sum())
-        ranges.append(hi)
-
-        while True:
-            active = alive & (sup_np < hi)
-            if not active.any():
-                break
-            part[active] = i
-            alive &= ~active
-            support = support - csr.tip_delta_csr(
-                jnp.asarray(active), pa, pb, pbf, n
+            delta = csr.tip_delta_csr(jnp.asarray(active), pa, pb, pbf, n)
+        state["support"] = state["support"] - delta
+        if wed.n_pairs:
+            stats.updates += int(
+                np.count_nonzero(active[wed.pair_a] | active[wed.pair_b])
             )
-            if wed.n_pairs:
-                stats.updates += int(
-                    np.count_nonzero(active[wed.pair_a] | active[wed.pair_b])
-                )
-            sup_np = np.asarray(support).astype(np.int64)
-            stats.rho_cd += 1
+        return np.asarray(state["support"]).astype(np.int64)
 
-        final_est = float(wedge_w[part == i].sum())
-        adapt.consumed(initial_est, final_est)
-        stats.p_effective = i + 1
+    def fd_partition(i, part, sup_init, theta, fd_driver):
+        rounds = _tip_fd_csr(
+            wed, pair_bf0, part, i, sup_init, theta, fd_driver=fd_driver)
+        return rounds, 0, 0
 
-    # ------------------------------------------------------------- FD
-    theta = np.zeros(n, dtype=np.int64)
-    if fd_driver == "vmapped":
-        rounds_v = _tip_fd_vmapped_csr(
-            wed, pair_bf0, part, sup_init, theta, stats.p_effective
-        )
-        stats.rho_fd_total = int(rounds_v.sum())
-        stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
-    else:
-        part_work = np.array(
-            [wedge_w[part == i].sum() for i in range(stats.p_effective)]
-        )
-        for i in _lpt_order(part_work):
-            rounds = _tip_fd_csr(
-                wed, pair_bf0, part, int(i), sup_init, theta,
-                fd_driver=fd_driver
-            )
-            stats.rho_fd_total += rounds
-            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
+    def fd_vmapped(part, sup_init, theta, n_parts):
+        rounds = _tip_fd_vmapped_csr(
+            wed, pair_bf0, part, sup_init, theta, n_parts)
+        return rounds, 0
 
-    return PeelResult(
-        theta=theta,
-        part=part,
-        ranges=np.asarray(ranges, dtype=np.int64),
-        support_init=sup_init,
-        stats=stats,
+    return PeelSpec(
+        kind="tip", n=n, sup0=sup_np,
+        workload=lambda s: wedge_w,
+        est=lambda s: wedge_w,
+        cd_step=cd_step,
+        fd_partition=fd_partition,
+        fd_vmapped=fd_vmapped,
     )
 
 
@@ -1071,143 +778,149 @@ def wing_decomposition(
         raise ValueError(engine)
     if fd_driver not in ("device", "host", "vmapped"):
         raise ValueError(fd_driver)
-    m = g.m
-    edges = jnp.asarray(g.edges.astype(np.int32))
-    shape = (g.n_u, g.n_v)
-
-    if engine == "beindex":
-        if be is None:
-            be = build_beindex(g)
-        le, lt, lb = _wing_links(be)
-        nb = max(be.nb, 1)
-        alive_link = jnp.ones((be.n_links,), dtype=bool)
-        k_alive = jnp.asarray(be.bloom_k.astype(np.int32))
-        support = jnp.asarray(be.edge_support(m).astype(np.int32))
-    elif engine == "csr":
-        wed = csr.build_wedges(g)
-        we1 = jnp.asarray(wed.wedge_e1)
-        we2 = jnp.asarray(wed.wedge_e2)
-        wpj = jnp.asarray(wed.wedge_pair)
-        n_pairs = wed.n_pairs
-        alive_w = jnp.ones((wed.n_wedges,), dtype=bool)
-        Wp = csr.pair_wedge_counts(wed)
-        sup0 = csr.edge_butterflies0(wed)
-        if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
-            raise OverflowError("wing supports exceed int32; shard the graph")
-        support = jnp.asarray(sup0.astype(np.int32))
-        if use_pallas:
-            slots = csr.pack_update_slots(wed)
-            slot_e1 = jnp.asarray(slots["e1"])
-            slot_e2 = jnp.asarray(slots["e2"])
-            alive_slots = jnp.asarray(slots["valid"])
-    else:
-        _dense_guard(g.n_u, g.n_v)
-        support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
-        counting.assert_exact(support)
-
-    alive = np.ones(m, dtype=bool)
-    sup_np = np.rint(np.asarray(support)).astype(np.int64)
-    part = np.full(m, -1, dtype=np.int32)
-    sup_init = np.zeros(m, dtype=np.int64)
-    ranges = [0]
     stats = PeelStats(
         engine=engine,
         fd_driver=fd_driver if engine == "csr" else "host",
     )
-    # workload proxy for edges = current support (§3.3.2)
-    adapt = _AdaptiveTarget(float(sup_np.sum()), P)
-
-    # ------------------------------------------------------------- CD
-    for i in range(P):
-        if not alive.any():
-            break
-        sup_init[alive] = sup_np[alive]
-        if i == P - 1:
-            hi = int(sup_np[alive].max()) + 1
-        else:
-            tgt = adapt.target(i)
-            hi = _find_range(sup_np, np.maximum(sup_np, 1), alive, tgt)
-            hi = max(hi, int(sup_np[alive].min()) + 1)
-        initial_est = float(sup_np[alive & (sup_np < hi)].sum())
-        ranges.append(hi)
-
-        while True:
-            active = alive & (sup_np < hi)
-            if not active.any():
-                break
-            part[active] = i
-            alive &= ~active
-            if engine == "beindex":
-                alive_link, k_alive, support, nupd = _wing_update(
-                    jnp.asarray(active), alive_link, k_alive, support,
-                    le, lt, lb, nb, m,
-                )
-                stats.updates += int(nupd)
-            elif engine == "csr":
-                if use_pallas:
-                    alive_slots, Wp, support, nupd = csr.wing_update_slots(
-                        jnp.asarray(active), alive_slots, Wp, support,
-                        slot_e1, slot_e2, n_pairs, m,
-                    )
-                else:
-                    alive_w, Wp, support, nupd = csr.wing_update_csr(
-                        jnp.asarray(active), alive_w, Wp, support,
-                        we1, we2, wpj, n_pairs, m,
-                    )
-                stats.updates += int(nupd)
-            else:
-                support = _wing_recount(shape, edges, jnp.asarray(alive))
-                stats.recounts += 1
-            sup_np = np.rint(np.asarray(support)).astype(np.int64)
-            stats.rho_cd += 1
-
-        final_est = float(sup_init[part == i].sum())
-        adapt.consumed(initial_est, final_est)
-        stats.p_effective = i + 1
-
-    # ------------------------------------------------------------- FD
-    theta = np.zeros(m, dtype=np.int64)
-    part_work = np.array(
-        [sup_init[part == i].sum() for i in range(stats.p_effective)],
-        dtype=np.float64,
-    )
-    order = _lpt_order(part_work)
     if engine == "beindex":
-        for i in order:
-            rounds, nupd = _wing_fd_beindex(g, be, part, int(i), sup_init, theta)
-            stats.rho_fd_total += rounds
-            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
-            stats.updates += nupd
+        spec = _wing_spec_beindex(g, be, stats)
     elif engine == "csr":
-        if fd_driver == "vmapped":
-            rounds_v, nupd = _wing_fd_vmapped_csr(
-                wed, part, sup_init, theta, stats.p_effective,
-                use_pallas=use_pallas,
-            )
-            stats.rho_fd_total = int(rounds_v.sum())
-            stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
-            stats.updates += nupd
-        else:
-            for i in order:
-                rounds, nupd = _wing_fd_csr(
-                    wed, part, int(i), sup_init, theta, fd_driver=fd_driver
-                )
-                stats.rho_fd_total += rounds
-                stats.rho_fd_max = max(stats.rho_fd_max, rounds)
-                stats.updates += nupd
+        spec = _wing_spec_csr(g, stats, use_pallas=use_pallas)
     else:
-        for i in order:
-            rounds, nrec = _wing_fd_dense(g, part, int(i), sup_init, theta)
-            stats.rho_fd_total += rounds
-            stats.rho_fd_max = max(stats.rho_fd_max, rounds)
-            stats.recounts += nrec
+        spec = _wing_spec_dense(g, stats)
+    return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
 
-    return PeelResult(
-        theta=theta,
-        part=part,
-        ranges=np.asarray(ranges, dtype=np.int64),
-        support_init=sup_init,
-        stats=stats,
+
+def _wing_workload_est():
+    """Wing's range/estimate weights: workload proxy for edges = current
+    support (§3.3.2); partition estimates read the same supports."""
+    return (lambda s: np.maximum(s, 1), lambda s: s)
+
+
+def _wing_spec_beindex(
+    g: BipartiteGraph, be: Optional[BEIndex], stats: PeelStats
+) -> PeelSpec:
+    """BE-Index wing spec: alg.4/6 widow/survivor updates as the CD
+    step, link-packed sub-indices (alg.5) as the FD rule."""
+    m = g.m
+    if be is None:
+        be = build_beindex(g)
+    le, lt, lb = _wing_links(be)
+    nb = max(be.nb, 1)
+    state = dict(
+        alive_link=jnp.ones((be.n_links,), dtype=bool),
+        k_alive=jnp.asarray(be.bloom_k.astype(np.int32)),
+        support=jnp.asarray(be.edge_support(m).astype(np.int32)),
+    )
+    sup0 = np.rint(np.asarray(state["support"])).astype(np.int64)
+
+    def cd_step(active: np.ndarray) -> np.ndarray:
+        state["alive_link"], state["k_alive"], state["support"], nupd = (
+            _wing_update(
+                jnp.asarray(active), state["alive_link"], state["k_alive"],
+                state["support"], le, lt, lb, nb, m,
+            )
+        )
+        stats.updates += int(nupd)
+        return np.rint(np.asarray(state["support"])).astype(np.int64)
+
+    def fd_partition(i, part, sup_init, theta, fd_driver):
+        rounds, nupd = _wing_fd_beindex(g, be, part, i, sup_init, theta)
+        return rounds, nupd, 0
+
+    workload, est = _wing_workload_est()
+    return PeelSpec(
+        kind="wing", n=m, sup0=sup0, workload=workload, est=est,
+        cd_step=cd_step, fd_partition=fd_partition,
+    )
+
+
+def _wing_spec_dense(g: BipartiteGraph, stats: PeelStats) -> PeelSpec:
+    """Dense wing spec: masked-MXU batch re-counts for both phases."""
+    m = g.m
+    _dense_guard(g.n_u, g.n_v)
+    edges = jnp.asarray(g.edges.astype(np.int32))
+    shape = (g.n_u, g.n_v)
+    support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
+    counting.assert_exact(support)
+    sup0 = np.rint(np.asarray(support)).astype(np.int64)
+    state = dict(alive=np.ones(m, dtype=bool))
+
+    def cd_step(active: np.ndarray) -> np.ndarray:
+        state["alive"] &= ~active
+        sup = _wing_recount(shape, edges, jnp.asarray(state["alive"]))
+        stats.recounts += 1
+        return np.rint(np.asarray(sup)).astype(np.int64)
+
+    def fd_partition(i, part, sup_init, theta, fd_driver):
+        rounds, nrec = _wing_fd_dense(g, part, i, sup_init, theta)
+        return rounds, 0, nrec
+
+    workload, est = _wing_workload_est()
+    return PeelSpec(
+        kind="wing", n=m, sup0=sup0, workload=workload, est=est,
+        cd_step=cd_step, fd_partition=fd_partition,
+    )
+
+
+def _wing_spec_csr(
+    g: BipartiteGraph, stats: PeelStats, use_pallas: bool = False
+) -> PeelSpec:
+    """csr wing spec: incremental wedge-list widow/survivor updates as
+    the CD step (optionally through the blocked Pallas kernel on the
+    pairs-major slot layout), touching-wedge packed lists as the FD
+    rule."""
+    m = g.m
+    wed = csr.build_wedges(g)
+    we1 = jnp.asarray(wed.wedge_e1)
+    we2 = jnp.asarray(wed.wedge_e2)
+    wpj = jnp.asarray(wed.wedge_pair)
+    n_pairs = wed.n_pairs
+    sup0 = csr.edge_butterflies0(wed)
+    if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
+        raise OverflowError("wing supports exceed int32; shard the graph")
+    state = dict(
+        alive_w=jnp.ones((wed.n_wedges,), dtype=bool),
+        Wp=csr.pair_wedge_counts(wed),
+        support=jnp.asarray(sup0.astype(np.int32)),
+    )
+    if use_pallas:
+        slots = csr.pack_update_slots(wed)
+        state["alive_slots"] = jnp.asarray(slots["valid"])
+        slot_e1 = jnp.asarray(slots["e1"])
+        slot_e2 = jnp.asarray(slots["e2"])
+
+    def cd_step(active: np.ndarray) -> np.ndarray:
+        if use_pallas:
+            state["alive_slots"], state["Wp"], state["support"], nupd = (
+                csr.wing_update_slots(
+                    jnp.asarray(active), state["alive_slots"], state["Wp"],
+                    state["support"], slot_e1, slot_e2, n_pairs, m,
+                )
+            )
+        else:
+            state["alive_w"], state["Wp"], state["support"], nupd = (
+                csr.wing_update_csr(
+                    jnp.asarray(active), state["alive_w"], state["Wp"],
+                    state["support"], we1, we2, wpj, n_pairs, m,
+                )
+            )
+        stats.updates += int(nupd)
+        return np.rint(np.asarray(state["support"])).astype(np.int64)
+
+    def fd_partition(i, part, sup_init, theta, fd_driver):
+        rounds, nupd = _wing_fd_csr(
+            wed, part, i, sup_init, theta, fd_driver=fd_driver)
+        return rounds, nupd, 0
+
+    def fd_vmapped(part, sup_init, theta, n_parts):
+        return _wing_fd_vmapped_csr(
+            wed, part, sup_init, theta, n_parts, use_pallas=use_pallas)
+
+    workload, est = _wing_workload_est()
+    return PeelSpec(
+        kind="wing", n=m, sup0=sup0, workload=workload, est=est,
+        cd_step=cd_step, fd_partition=fd_partition, fd_vmapped=fd_vmapped,
     )
 
 

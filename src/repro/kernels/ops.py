@@ -27,6 +27,7 @@ __all__ = [
     "pack_blooms",
     "pair_wedge_counts",
     "support_update",
+    "tip_slot_loss",
     "default_interpret",
 ]
 
@@ -95,6 +96,26 @@ def pair_wedge_counts(
     s = _pad_to(_pad_to(slots.astype(jnp.float32), bp, 0), bk, 1)
     W, bf = wedge_count_pallas(s, bp=bp, bk=bk, interpret=interpret)
     return W[:n], bf[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bk", "interpret"))
+def tip_slot_loss(
+    vals: jax.Array, bp: int = 128, bk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-row f32 sums of masked pair-butterfly values — the tip CD
+    support delta through the blocked wedge-count kernel.
+
+    ``vals`` is the vertex-major slot matrix (``core.csr.pack_tip_slots``)
+    with each slot holding the pair's static butterfly count where the
+    partner vertex was peeled this round, 0 otherwise; the kernel's
+    row-sum phase IS the delta (its C(W, 2) output is ignored).  Rows
+    are vertices, so the result needs no scatter.  Exact while per-row
+    sums stay under 2²⁴ (guarded at pack time)."""
+    n = vals.shape[0]
+    v = _pad_to(_pad_to(vals.astype(jnp.float32), bp, 0), bk, 1)
+    W, _ = wedge_count_pallas(v, bp=bp, bk=bk, interpret=interpret)
+    return W[:n]
 
 
 @functools.partial(jax.jit, static_argnames=("bp", "bk", "interpret"))

@@ -2,16 +2,79 @@
 
 This is the paper's analytic as a deployable job: load/generate a
 bipartite graph, run distributed two-phase peeling over a device mesh,
-emit wing/tip numbers + stats.  ``--dryrun`` lowers the CD round and the
-FD partition-peel on the 512-device production mesh and verifies the FD
-HLO is collective-free (the paper's "no global synchronization", checked
-structurally at scale).
+emit wing/tip numbers + stats.  Flags are uniform across
+``--kind wing`` and ``--kind tip`` (``--engine csr``, ``--aligned``,
+``--fd-driver vmapped``, ``--use-pallas``); unsupported combinations are
+rejected with an explicit error — never a silent fallback to another
+engine.  ``--dryrun`` lowers the CD rounds and the FD partition-peels of
+BOTH entity kinds on the 512-device production mesh and verifies the
+structural claims (one-psum aligned CD, collective-free FD,
+single-``while`` vmapped Phase 2) at scale.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+class LaunchError(SystemExit):
+    """Unsupported flag combination — raised instead of silently
+    falling back to a different engine/driver."""
+
+    def __init__(self, msg: str):
+        super().__init__(f"[peel] error: {msg}")
+
+
+def _validate(args, n_dev: int) -> None:
+    """Resolve the per-kind engine default, then reject unsupported
+    flag combinations with explicit errors."""
+    if args.engine is None:
+        # per-kind default: the user never chose an engine, so resolve
+        # to each kind's canonical one instead of erroring on a default
+        args.engine = "beindex" if args.kind == "wing" else "csr"
+    if args.kind == "tip" and args.engine == "beindex":
+        raise LaunchError(
+            "tip peels vertices — there is no BE-Index tip engine; "
+            "pass --engine csr (scalable) or --engine dense")
+    if args.use_pallas and args.engine != "csr":
+        raise LaunchError(
+            "--use-pallas routes csr slot layouts through the blocked "
+            "kernels; pass --engine csr")
+    if args.fd_driver == "vmapped" and args.engine != "csr":
+        raise LaunchError(
+            "--fd-driver vmapped is the csr single-dispatch Phase 2; "
+            "pass --engine csr")
+    if args.aligned and args.engine not in ("csr", "beindex"):
+        raise LaunchError(
+            "--aligned is the one-psum CD sharding (csr: pair/vertex "
+            "aligned; beindex: bloom aligned); --engine dense has no "
+            "sharded index to align")
+    if n_dev > 1:
+        if args.kind == "wing" and args.engine == "dense":
+            raise LaunchError(
+                "no distributed dense wing path; pass --engine "
+                "beindex|csr (or run single-device)")
+        if args.kind == "wing" and args.fd_driver == "vmapped":
+            raise LaunchError(
+                "distributed wing FD runs one while_loop per partition "
+                "under shard_map (driver 'device'); the single-dispatch "
+                "vmapped Phase 2 is single-device wing or distributed "
+                "tip only")
+        if args.fd_driver == "host":
+            raise LaunchError(
+                "--fd-driver host is the single-device A/B baseline; "
+                "the distributed FD drivers are device|vmapped")
+        if args.use_pallas:
+            raise LaunchError(
+                "--use-pallas is wired for the single-device csr "
+                "engines; the distributed CD rounds use segment_sum "
+                "shards")
+    else:
+        if args.aligned:
+            raise LaunchError(
+                "--aligned shards the CD index across devices; it needs "
+                "a multi-device mesh (or use --dryrun)")
 
 
 def _dryrun() -> int:
@@ -134,7 +197,7 @@ def _dryrun() -> int:
 
     # --- single-dispatch vmapped FD (single device): the whole Phase 2
     # must lower to exactly ONE while_loop with zero collectives
-    from repro.core.peel import _fd_wing_vmapped
+    from repro.core.peel import _fd_tip_vmapped, _fd_wing_vmapped
 
     packed_v = D.pack_fd_partitions_csr(
         wed, res_c.part, res_c.support_init, res_c.stats.p_effective,
@@ -151,14 +214,75 @@ def _dryrun() -> int:
         "vmapped FD must be collective-free"
     print("[peel-dryrun] vmapped csr FD: whole Phase 2 is ONE while_loop, "
           "zero collectives ✓")
+
+    # --- TIP csr at 512 devices: the entity-agnostic core's second
+    # instantiation gets the same structural guarantees as wing
+    from repro.core.peel import tip_decomposition
+
+    bf0 = wed.pair_butterflies0()
+    n = g.n_u
+    tal = D.shard_tip_pairs(wed, bf0, 512, aligned=True)
+    tfn = D.make_cd_round_tip_csr(mesh, "peel", n)
+    tpe = jnp.zeros((n + 1,), bool)
+    tsup = jnp.zeros((n + 1,), jnp.int32)
+    ttxt = tfn.lower(tpe, tsup, jnp.asarray(tal["dst"]),
+                     jnp.asarray(tal["src"]),
+                     jnp.asarray(tal["bf"])).compile().as_text()
+    n_tip = ttxt.count("all-reduce(") + ttxt.count("all-reduce-start(")
+    assert n_tip == 1, f"aligned tip CD must pay ONE psum, found {n_tip}"
+    print("[peel-dryrun] vertex-aligned tip csr CD compiled at 512 "
+          "devices; exactly ONE all-reduce per round ✓")
+
+    res_t = tip_decomposition(g, side="u", P=64, engine="csr")
+    packed_t = D.pack_fd_partitions_tip_csr(
+        wed, bf0, res_t.part, res_t.support_init,
+        res_t.stats.p_effective, stacked=True)
+    n_parts_t = packed_t["st_pa"].shape[0]
+    pad_t = (-n_parts_t) % 512
+
+    def padt(x):
+        if pad_t == 0:
+            return jnp.asarray(x)
+        fill = np.zeros((pad_t,) + x.shape[1:], dtype=x.dtype)
+        return jnp.asarray(np.concatenate([x, fill], 0))
+
+    args_t = tuple(padt(packed_t[k]) for k in
+                   ("st_pa", "st_pb", "st_bf", "mine", "sup0"))
+    fd_t = shard_map(jax.vmap(D._fd_body_one_partition_tip_csr), mesh=mesh,
+                     in_specs=tuple(P("peel") for _ in args_t),
+                     out_specs=(P("peel"), P("peel")))
+    fd_t_txt = jax.jit(fd_t).lower(*args_t).compile().as_text()
+    bad_t = [w for w in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute")
+             if w in fd_t_txt]
+    assert not bad_t, f"tip csr FD must be collective-free, found {bad_t}"
+    print("[peel-dryrun] tip csr FD peel compiled at 512 devices; "
+          "NO collectives in HLO ✓")
+
+    packed_tv = D.pack_fd_partitions_tip_csr(
+        wed, bf0, res_t.part, res_t.support_init,
+        res_t.stats.p_effective, bucket=True)
+    tjaxpr = str(jax.make_jaxpr(_fd_tip_vmapped)(
+        jnp.asarray(packed_tv["pa"]), jnp.asarray(packed_tv["pb"]),
+        jnp.asarray(packed_tv["bf"]), jnp.asarray(packed_tv["mine"]),
+        jnp.asarray(packed_tv["sup0"])))
+    n_tw = tjaxpr.count("while[")
+    assert n_tw == 1, f"vmapped tip FD must be ONE while_loop, got {n_tw}"
+    assert not any(c in tjaxpr for c in ("psum", "all_gather", "ppermute")), \
+        "vmapped tip FD must be collective-free"
+    print("[peel-dryrun] vmapped tip FD: whole Phase 2 is ONE while_loop, "
+          "zero collectives ✓")
     return 0
 
 
 def _emit_hierarchy(args, g, result, kind: str, stats=None) -> None:
     """Build the dense-subgraph hierarchy from peel output and write the
     versioned artifact (see ``repro.hierarchy``): decompose once, serve
-    forever.  ``stats`` carries the provenance row for raw-θ input (the
-    distributed path has no PeelResult to attach it from)."""
+    forever.  ``result`` is a PeelResult whenever one exists — the
+    single-device engines AND the distributed paths
+    (``return_result=True``) — so the artifact always carries the
+    PeelStats + CD partition provenance; ``stats`` is only the fallback
+    row for raw-θ input."""
     import time
 
     import numpy as np
@@ -195,6 +319,9 @@ def _run(args) -> int:
     from repro.core.peel import tip_decomposition, wing_decomposition
     from repro.launch.mesh import make_peel_mesh
 
+    n_dev = len(jax.devices())
+    _validate(args, n_dev)
+
     if args.dataset:
         g = paper_proxy_dataset(args.dataset)
     else:
@@ -202,28 +329,19 @@ def _run(args) -> int:
     print(f"[peel] graph |U|={g.n_u} |V|={g.n_v} |E|={g.m}")
 
     stats_out = {}
-    result = None  # PeelResult when a single-device engine ran
-    if args.mode == "wing":
-        if len(jax.devices()) > 1:
+    result = None  # PeelResult when available (single-device OR dist.)
+    if args.kind == "wing":
+        if n_dev > 1:
             mesh = make_peel_mesh()
-            if args.engine in ("beindex", "csr"):
-                mesh_engine = args.engine
-            else:
-                mesh_engine = "beindex"
-                print(f"[peel] no distributed '{args.engine}' engine; "
-                      "using beindex (pass --engine beindex|csr)")
-            if args.pair_aligned and mesh_engine != "csr":
-                print("[peel] --pair-aligned applies to --engine csr only; "
-                      "ignoring (beindex analogue: bloom_aligned)")
-            theta, stats_out = D.distributed_wing_decomposition(
-                g, mesh, P_parts=args.parts, engine=mesh_engine,
-                pair_aligned=args.pair_aligned and mesh_engine == "csr")
+            theta, stats_out, result = D.distributed_wing_decomposition(
+                g, mesh, P_parts=args.parts, engine=args.engine,
+                aligned=args.aligned, return_result=True)
             print(f"[peel] distributed over {stats_out['n_dev']} devices: "
                   f"{stats_out}")
         else:
             res = wing_decomposition(
                 g, P=args.parts, engine=args.engine,
-                fd_driver=args.fd_driver)
+                fd_driver=args.fd_driver, use_pallas=args.use_pallas)
             result = res
             theta = res.theta
             s = res.stats
@@ -232,30 +350,31 @@ def _run(args) -> int:
                   f"rho_fd_max={s.rho_fd_max} updates={s.updates} "
                   f"sync_reduction={s.sync_reduction:.1f}x")
     else:
-        if args.engine in ("dense", "csr"):
-            tip_engine = args.engine
+        if n_dev > 1:
+            mesh = make_peel_mesh()
+            theta, stats_out, result = D.distributed_tip_decomposition(
+                g, mesh, side=args.side, P_parts=args.parts,
+                engine=args.engine, aligned=args.aligned,
+                fd_driver=args.fd_driver, return_result=True)
+            print(f"[peel] distributed over {stats_out['n_dev']} devices: "
+                  f"{stats_out}")
         else:
-            tip_engine = "dense"
-            print(f"[peel] tip has no '{args.engine}' engine; using dense "
-                  "(pass --engine dense|csr to silence)")
-        res = tip_decomposition(
-            g, side=args.side, P=args.parts, engine=tip_engine,
-            fd_driver=args.fd_driver)
-        result = res
-        theta = res.theta
-        s = res.stats
-        stats_out = s.as_dict()
-        print(f"[peel] engine={s.engine} rho_cd={s.rho_cd} "
-              f"rho_fd_max={s.rho_fd_max} recounts={s.recounts}")
+            res = tip_decomposition(
+                g, side=args.side, P=args.parts, engine=args.engine,
+                fd_driver=args.fd_driver, use_pallas=args.use_pallas)
+            result = res
+            theta = res.theta
+            s = res.stats
+            stats_out = s.as_dict()
+            print(f"[peel] engine={s.engine} side={s.side} "
+                  f"rho_cd={s.rho_cd} rho_fd_max={s.rho_fd_max} "
+                  f"recounts={s.recounts}")
 
     print(f"[peel] theta: max={int(theta.max()) if theta.size else 0} "
           f"levels={len(set(theta.tolist()))}")
     if args.emit_hierarchy:
-        # distributed path has no PeelResult — build from raw θ (the
-        # forest depends on θ only) and attach the distributed stats row
-        # so the artifact keeps its provenance
         _emit_hierarchy(args, g, result if result is not None else theta,
-                        kind=args.mode, stats=stats_out)
+                        kind=args.kind, stats=stats_out)
     if args.out:
         with open(args.out, "w") as f:
             json.dump(dict(theta=theta.tolist(), stats=stats_out), f)
@@ -264,24 +383,39 @@ def _run(args) -> int:
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["wing", "tip"], default="wing")
+    ap.add_argument("--kind", "--mode", dest="kind",
+                    choices=["wing", "tip"], default="wing",
+                    help="entity universe to peel: edges (wing) or "
+                         "vertices (tip); flags below apply uniformly")
     ap.add_argument("--dataset", default=None)
     ap.add_argument("--n-u", type=int, default=400)
     ap.add_argument("--n-v", type=int, default=200)
     ap.add_argument("--m", type=int, default=2000)
     ap.add_argument("--parts", type=int, default=16)
-    ap.add_argument("--engine", default="beindex",
-                    choices=["beindex", "dense", "csr"])
+    ap.add_argument("--engine", default=None,
+                    choices=["beindex", "dense", "csr"],
+                    help="beindex (wing only), dense, or csr (the "
+                         "scalable path for both kinds); default: "
+                         "beindex for wing, csr for tip")
     ap.add_argument("--fd-driver", default="device",
                     choices=["device", "vmapped", "host"],
                     help="csr FD cascade driver: one while_loop per "
                          "partition (device), ONE while_loop for the "
                          "whole Phase 2 (vmapped — single dispatch), or "
-                         "per-round dispatch (host)")
-    ap.add_argument("--pair-aligned", action="store_true",
-                    help="distributed csr CD only: shard wedges "
-                         "pair-aligned so each CD round pays ONE psum "
-                         "instead of two")
+                         "per-round dispatch (host; single-device A/B "
+                         "baseline only)")
+    ap.add_argument("--aligned", "--pair-aligned", dest="aligned",
+                    action="store_true",
+                    help="distributed one-psum CD sharding: keep every "
+                         "segment's items on one device (wing csr: "
+                         "pair-aligned wedges; tip csr: vertex-aligned "
+                         "pair entries; wing beindex: bloom-aligned "
+                         "links)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="csr engines only: run CD support updates "
+                         "through the blocked Pallas kernels (and, for "
+                         "wing --fd-driver vmapped, inside the FD "
+                         "while_loop)")
     ap.add_argument("--side", default="u")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None)

@@ -1,0 +1,80 @@
+"""Record fixed-seed peeling goldens — the pre-refactor oracle.
+
+Run from the repo root at the commit whose behaviour is the contract::
+
+    PYTHONPATH=src python tests/goldens/record_peel_goldens.py
+
+The unified entity-agnostic core (``core.peelspec``) must reproduce
+these θ vectors AND the CD/FD provenance (partition assignment, range
+boundaries, per-round and per-update counts) bit-for-bit; the
+comparison lives in ``tests/test_peelspec_goldens.py``.  Regenerating
+this file is only legitimate when peeling SEMANTICS intentionally
+change — a refactor never needs to.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.graph import powerlaw_bipartite, random_bipartite
+from repro.core.peel import tip_decomposition, wing_decomposition
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                   "peel_goldens.json")
+
+GRAPHS = [
+    ("rb30", lambda: random_bipartite(30, 24, 140, seed=0)),
+    ("rb25", lambda: random_bipartite(25, 20, 100, seed=1)),
+    ("pl80", lambda: powerlaw_bipartite(80, 40, 350, seed=2)),
+    ("pl60", lambda: powerlaw_bipartite(60, 50, 300, seed=3)),
+]
+
+
+def _record(res) -> dict:
+    s = res.stats
+    return dict(
+        theta=np.asarray(res.theta).tolist(),
+        part=np.asarray(res.part).tolist(),
+        ranges=np.asarray(res.ranges).tolist(),
+        support_init=np.asarray(res.support_init).tolist(),
+        rho_cd=s.rho_cd,
+        rho_fd_total=s.rho_fd_total,
+        rho_fd_max=s.rho_fd_max,
+        updates=s.updates,
+        recounts=s.recounts,
+        p_effective=s.p_effective,
+    )
+
+
+def main() -> None:
+    goldens = {}
+    for gname, make in GRAPHS:
+        g = make()
+        for P in (3, 6):
+            for engine in ("beindex", "dense", "csr"):
+                drivers = (("device", "host", "vmapped")
+                           if engine == "csr" else ("device",))
+                for fd in drivers:
+                    key = f"wing.{gname}.P{P}.{engine}.{fd}"
+                    res = wing_decomposition(
+                        g, P=P, engine=engine, fd_driver=fd)
+                    goldens[key] = _record(res)
+            for side in ("u", "v"):
+                for engine in ("dense", "csr"):
+                    drivers = (("device", "host", "vmapped")
+                               if engine == "csr" else ("device",))
+                    for fd in drivers:
+                        key = f"tip.{gname}.P{P}.{side}.{engine}.{fd}"
+                        res = tip_decomposition(
+                            g, side=side, P=P, engine=engine, fd_driver=fd)
+                        goldens[key] = _record(res)
+        print(f"[goldens] {gname}: done")
+    with open(OUT, "w") as f:
+        json.dump(goldens, f, sort_keys=True)
+    print(f"[goldens] wrote {len(goldens)} cases -> {OUT}")
+
+
+if __name__ == "__main__":
+    main()

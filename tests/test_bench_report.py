@@ -67,6 +67,43 @@ def test_ab_ratio_rows_synthesized(bench_file):
     assert "cd.pair_aligned/wedge" in out
 
 
+def test_ab_half_missing_pair_emits_na_row(bench_file):
+    """One side of an A/B pair missing ⇒ a marked n/a row, never a
+    silent skip (a dropped sibling must be a visible gap)."""
+    report = _load_report()
+    rows = {r["name"]: float(r["us_per_call"])
+            for r in json.load(open(bench_file))["rows"]}
+    ab = dict(report.ab_rows(rows))
+    # pl120 has the vmapped row but its expected device sibling
+    # (pbng_csr) is absent — must surface as None
+    assert "wing.pl120.fd.vmapped/device" in ab
+    assert ab["wing.pl120.fd.vmapped/device"] is None
+    # ...but variants a family never benchmarks BY DESIGN must not
+    # produce structural n/a noise: fr has no pallas pair, scaling has
+    # no hostfd pair
+    assert "wing.fr.fd.pallas/segsum" not in ab
+    assert "scaling.wing.dev4.fd.device/host" not in ab
+    # each synthesized label appears exactly once even though both
+    # siblings of a complete pair match the suffix scan
+    names = [n for n, _ in report.ab_rows(rows)]
+    assert len(names) == len(set(names))
+    out = report.bench_table([bench_file])
+    assert "n/a (pair side missing)" in out
+
+
+def test_ab_tip_scaling_pair():
+    report = _load_report()
+    rows = {
+        "scaling.tip.dev4.tip_csr": 500_000.0,
+        "scaling.tip.dev4.tip_aligned": 400_000.0,
+        "scaling.tip.dev8.tip_aligned": 350_000.0,  # half-missing pair
+    }
+    ab = dict(report.ab_rows(rows))
+    assert ab["scaling.tip.dev4.cd.aligned/roundrobin"] == pytest.approx(
+        0.4 / 0.5)
+    assert ab["scaling.tip.dev8.cd.aligned/roundrobin"] is None
+
+
 def test_bench_table_missing_file():
     report = _load_report()
     assert "not found" in report.bench_table(["/nonexistent/BENCH.json"])

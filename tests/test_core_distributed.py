@@ -309,6 +309,9 @@ def test_pair_aligned_cd_512dev_single_psum():
 
 
 def test_distributed_tip_matches_oracle():
+    """Every distributed tip path — csr (default), csr aligned, csr
+    vmapped-FD, and the explicit dense fallback — must be θ-bit-identical
+    to the BUP oracle and to each other."""
     out = _run("""
         import numpy as np, jax
         from jax.sharding import Mesh
@@ -323,9 +326,247 @@ def test_distributed_tip_matches_oracle():
                 theta, stats = distributed_tip_decomposition(
                     g, mesh, side=side, P_parts=4)
                 assert np.array_equal(theta, want), (seed, side)
+                assert stats["engine"] == "csr"
+                assert stats["side"] == side
+                for kw in (dict(engine="dense"),
+                           dict(engine="csr", aligned=True),
+                           dict(engine="csr", aligned=True,
+                                fd_driver="vmapped")):
+                    t2, s2 = distributed_tip_decomposition(
+                        g, mesh, side=side, P_parts=4, **kw)
+                    assert np.array_equal(t2, want), (seed, side, kw)
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_distributed_tip_csr_matches_single_device_and_dense():
+    """csr tip on a mesh == single-device csr engine == the dense
+    distributed fallback, θ bit-for-bit; provenance rides along when
+    asked for."""
+    out = _run("""
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.distributed import distributed_tip_decomposition
+        from repro.core.peel import tip_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(100, 50, 420, seed=5)
+        theta, stats, res = distributed_tip_decomposition(
+            g, mesh, side="u", P_parts=6, engine="csr", aligned=True,
+            return_result=True)
+        ref_theta = tip_decomposition(g, side="u", P=6, engine="csr").theta
+        assert np.array_equal(theta, ref_theta)
+        td, _ = distributed_tip_decomposition(
+            g, mesh, side="u", P_parts=6, engine="dense")
+        assert np.array_equal(td, theta)
+        assert stats["cd_sharding"] == "vertex_aligned"
+        assert stats["rho_cd"] > 0 and stats["rho_fd_max"] > 0
+        prov = res.provenance()
+        assert prov["stats"]["engine"] == "csr"
+        assert prov["stats"]["side"] == "u"
+        assert prov["part"].shape == theta.shape
+        assert prov["ranges"].size == stats["p_effective"] + 1
+        print("OK", stats)
+    """)
+    assert "OK" in out
+
+
+def test_tip_csr_cd_single_psum():
+    """Tip csr CD rounds pay exactly ONE psum — pair butterflies are
+    static, so there is no dying-count collective at all; aligned and
+    round-robin layouts share the guarantee, and aligned θ is
+    oracle-exact."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite, powerlaw_bipartite
+        from repro.core import csr, ref
+        from repro.core import distributed as D
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(80, 40, 350, seed=2)
+        wed = csr.build_wedges(g)
+        bf0 = wed.pair_butterflies0()
+        fn = D.make_cd_round_tip_csr(mesh, "peel", g.n_u)
+        peeled = jnp.zeros((g.n_u + 1,), bool)
+        sup = jnp.zeros((g.n_u + 1,), jnp.int32)
+        for aligned in (False, True):
+            bl = D.shard_tip_pairs(wed, bf0, 8, aligned=aligned)
+            txt = fn.lower(peeled, sup, jnp.asarray(bl["dst"]),
+                           jnp.asarray(bl["src"]),
+                           jnp.asarray(bl["bf"])).compile().as_text()
+            n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+            assert n == 1, (aligned, n)
+        for seed in (0, 1, 2):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            want = ref.bup_tip_ref(g, "u")
+            theta, stats = D.distributed_tip_decomposition(
+                g, mesh, side="u", P_parts=4, engine="csr", aligned=True)
+            assert np.array_equal(theta, want), seed
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_tip_csr_single_device_matches_engine():
+    """Degenerate 1-device mesh: distributed tip csr must still agree
+    with the single-device csr engine, and the aligned CD round still
+    lowers to its single psum."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core import csr
+        from repro.core import distributed as D
+        from repro.core.peel import tip_decomposition
+        mesh = Mesh(np.array(jax.devices()).reshape(1), ("peel",))
+        g = powerlaw_bipartite(100, 50, 420, seed=5)
+        theta, stats = D.distributed_tip_decomposition(
+            g, mesh, side="u", P_parts=6, engine="csr", aligned=True)
+        ref_theta = tip_decomposition(g, side="u", P=6, engine="csr").theta
+        assert np.array_equal(theta, ref_theta)
+        assert stats["n_dev"] == 1
+        wed = csr.build_wedges(g)
+        bl = D.shard_tip_pairs(wed, wed.pair_butterflies0(), 1,
+                               aligned=True)
+        fn = D.make_cd_round_tip_csr(mesh, "peel", g.n_u)
+        txt = fn.lower(jnp.zeros((g.n_u + 1,), bool),
+                       jnp.zeros((g.n_u + 1,), jnp.int32),
+                       jnp.asarray(bl["dst"]), jnp.asarray(bl["src"]),
+                       jnp.asarray(bl["bf"])).compile().as_text()
+        print("OK", stats["rho_cd"])
+    """, n_dev=1)
+    assert "OK" in out
+
+
+def test_tip_csr_cd_512dev_single_psum_and_vmapped_fd():
+    """Production-mesh shape for tip: ONE all-reduce per aligned CD
+    round at 512 dry-run devices, plus the single-`while` collective-free
+    vmapped FD jaxpr (the same lowerings `launch.peel --dryrun`
+    asserts)."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core import csr
+        from repro.core import distributed as D
+        from repro.core.peel import tip_decomposition, _fd_tip_vmapped
+        mesh = Mesh(np.array(jax.devices()).reshape(512), ("peel",))
+        g = powerlaw_bipartite(100, 50, 500, seed=1)
+        wed = csr.build_wedges(g)
+        bf0 = wed.pair_butterflies0()
+        bl = D.shard_tip_pairs(wed, bf0, 512, aligned=True)
+        fn = D.make_cd_round_tip_csr(mesh, "peel", g.n_u)
+        txt = fn.lower(jnp.zeros((g.n_u + 1,), bool),
+                       jnp.zeros((g.n_u + 1,), jnp.int32),
+                       jnp.asarray(bl["dst"]), jnp.asarray(bl["src"]),
+                       jnp.asarray(bl["bf"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 1, n
+        res = tip_decomposition(g, side="u", P=8, engine="csr")
+        packed = D.pack_fd_partitions_tip_csr(
+            wed, bf0, res.part, res.support_init,
+            res.stats.p_effective, bucket=True)
+        jaxpr = str(jax.make_jaxpr(_fd_tip_vmapped)(
+            jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
+            jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
+            jnp.asarray(packed["sup0"])))
+        nw = jaxpr.count("while[")
+        assert nw == 1, nw
+        assert not any(c in jaxpr for c in
+                       ("psum", "all_gather", "ppermute"))
+        print("OK", n, nw)
+    """, n_dev=512)
+    assert "OK" in out
+
+
+def test_tip_csr_fd_hlo_has_no_collectives():
+    """Tip csr FD partitions peel under shard_map with zero collectives
+    — the Phase-2 claim for the entity-agnostic core's second
+    instantiation."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.core.graph import random_bipartite
+        from repro.core import csr
+        from repro.core.peel import tip_decomposition
+        from repro.core import distributed as D
+        from repro.sharding.compat import shard_map
+        g = random_bipartite(20, 16, 64, seed=3)
+        wed = csr.build_wedges(g)
+        bf0 = wed.pair_butterflies0()
+        res = tip_decomposition(g, side="u", P=4, engine="csr")
+        packed = D.pack_fd_partitions_tip_csr(
+            wed, bf0, res.part, res.support_init,
+            res.stats.p_effective, stacked=True)
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        n_parts = packed["st_pa"].shape[0]
+        pad = (-n_parts) % 8
+        def padp(x):
+            if pad == 0: return jnp.asarray(x)
+            fill = np.zeros((pad,)+x.shape[1:], dtype=x.dtype)
+            return jnp.asarray(np.concatenate([x, fill], 0))
+        args = tuple(padp(packed[k]) for k in
+                     ("st_pa","st_pb","st_bf","mine","sup0"))
+        fn = shard_map(jax.vmap(D._fd_body_one_partition_tip_csr),
+                       mesh=mesh,
+                       in_specs=tuple(P("peel") for _ in args),
+                       out_specs=(P("peel"), P("peel")))
+        txt = jax.jit(fn).lower(*args).compile().as_text()
+        bad = [w for w in ("all-reduce", "all-gather", "reduce-scatter",
+                           "all-to-all", "collective-permute")
+               if w in txt]
+        assert not bad, bad
+        print("OK no collectives in tip csr FD")
+    """)
+    assert "OK" in out
+
+
+def test_emit_hierarchy_distributed_tip_wing_parity(tmp_path):
+    """--emit-hierarchy on the distributed tip csr path must attach the
+    SAME provenance the wing path attaches: engine/side-tagged PeelStats
+    plus the CD partition/ranges/⋈init arrays (satellite of the
+    entity-agnostic core refactor)."""
+    wing_art = tmp_path / "wing.npz"
+    tip_art = tmp_path / "tip.npz"
+    out = _run(f"""
+        import numpy as np, jax
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.distributed import (
+            distributed_tip_decomposition, distributed_wing_decomposition)
+        from repro.hierarchy import build_hierarchy, save_hierarchy
+        from jax.sharding import Mesh
+        mesh = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        g = powerlaw_bipartite(60, 40, 260, seed=7)
+        _, _, res_w = distributed_wing_decomposition(
+            g, mesh, P_parts=4, engine="csr", pair_aligned=True,
+            return_result=True)
+        _, _, res_t = distributed_tip_decomposition(
+            g, mesh, side="u", P_parts=4, engine="csr", aligned=True,
+            return_result=True)
+        save_hierarchy({str(wing_art)!r},
+                       build_hierarchy(g, res_w, kind="wing"))
+        save_hierarchy({str(tip_art)!r},
+                       build_hierarchy(g, res_t, kind="tip", side="u"))
+        print("OK")
+    """)
+    assert "OK" in out
+    from repro.hierarchy import load_hierarchy
+
+    hw = load_hierarchy(str(wing_art))
+    ht = load_hierarchy(str(tip_art))
+    for h, side in ((hw, ""), (ht, "u")):
+        assert h.meta["stats"]["engine"] == "csr"
+        assert h.meta["stats"]["side"] == side
+        for key in ("part", "ranges", "support_init"):
+            assert key in h.meta, (side, key)
+            assert np.asarray(h.meta[key]).size > 0
+    # parity: identical provenance key sets on both paths
+    assert set(hw.meta) == set(ht.meta)
 
 
 def test_bloom_aligned_single_psum():

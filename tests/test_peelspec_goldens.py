@@ -1,0 +1,148 @@
+"""The entity-agnostic peeling core (``core.peelspec``) must reproduce
+the pre-refactor engines bit-for-bit: θ AND the CD/FD provenance
+(partition assignment, range boundaries, ⋈init snapshot, round/update/
+recount counts) against fixed-seed goldens recorded at the commit
+BEFORE the tip/wing fork was collapsed (``tests/goldens/
+peel_goldens.json``; regeneration recipe in ``record_peel_goldens.py``).
+
+A golden mismatch means the refactor changed peeling SEMANTICS, not
+just structure — never regenerate to make it pass.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ref
+from repro.core.graph import powerlaw_bipartite, random_bipartite
+from repro.core.peel import tip_decomposition, wing_decomposition
+
+GOLDENS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "goldens", "peel_goldens.json")
+
+_GRAPHS = {
+    "rb30": lambda: random_bipartite(30, 24, 140, seed=0),
+    "rb25": lambda: random_bipartite(25, 20, 100, seed=1),
+    "pl80": lambda: powerlaw_bipartite(80, 40, 350, seed=2),
+    "pl60": lambda: powerlaw_bipartite(60, 50, 300, seed=3),
+}
+
+_FIELDS = ("theta", "part", "ranges", "support_init", "rho_cd",
+           "rho_fd_total", "rho_fd_max", "updates", "recounts",
+           "p_effective")
+
+
+def _snapshot(res) -> dict:
+    s = res.stats
+    return dict(
+        theta=np.asarray(res.theta).tolist(),
+        part=np.asarray(res.part).tolist(),
+        ranges=np.asarray(res.ranges).tolist(),
+        support_init=np.asarray(res.support_init).tolist(),
+        rho_cd=s.rho_cd, rho_fd_total=s.rho_fd_total,
+        rho_fd_max=s.rho_fd_max, updates=s.updates,
+        recounts=s.recounts, p_effective=s.p_effective,
+    )
+
+
+def _load():
+    with open(GOLDENS) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def goldens():
+    return _load()
+
+
+@pytest.mark.parametrize("gname", sorted(_GRAPHS))
+def test_wing_matches_pre_refactor_goldens(goldens, gname):
+    g = _GRAPHS[gname]()
+    cases = [k for k in goldens if k.startswith(f"wing.{gname}.")]
+    assert cases, "golden file lost its wing cases"
+    for key in cases:
+        _, _, Ps, engine, fd = key.split(".")
+        res = wing_decomposition(
+            g, P=int(Ps[1:]), engine=engine, fd_driver=fd)
+        got = _snapshot(res)
+        for f in _FIELDS:
+            assert got[f] == goldens[key][f], (key, f)
+
+
+@pytest.mark.parametrize("gname", sorted(_GRAPHS))
+def test_tip_matches_pre_refactor_goldens(goldens, gname):
+    g = _GRAPHS[gname]()
+    cases = [k for k in goldens if k.startswith(f"tip.{gname}.")]
+    assert cases, "golden file lost its tip cases"
+    for key in cases:
+        _, _, Ps, side, engine, fd = key.split(".")
+        res = tip_decomposition(
+            g, side=side, P=int(Ps[1:]), engine=engine, fd_driver=fd)
+        got = _snapshot(res)
+        for f in _FIELDS:
+            assert got[f] == goldens[key][f], (key, f)
+
+
+def test_golden_coverage():
+    """The golden file spans every engine × fd_driver cell of both
+    entity kinds (so a silently skipped cell cannot hide a fork)."""
+    goldens = _load()
+    wing_cells = {tuple(k.split(".")[3:]) for k in goldens
+                  if k.startswith("wing.")}
+    tip_cells = {tuple(k.split(".")[4:]) for k in goldens
+                 if k.startswith("tip.")}
+    assert {("beindex", "device"), ("dense", "device"),
+            ("csr", "device"), ("csr", "host"),
+            ("csr", "vmapped")} <= wing_cells
+    assert {("dense", "device"), ("csr", "device"), ("csr", "host"),
+            ("csr", "vmapped")} <= tip_cells
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.integers(2, 5))
+def test_unified_core_driver_parity_property(seed, P):
+    """Property: on random graphs, every csr fd_driver (and the tip
+    Pallas CD path) produces identical θ, partitioning AND round/update
+    counts — and θ matches the BUP oracle."""
+    g = random_bipartite(18, 14, 60, seed=seed)
+
+    base = wing_decomposition(g, P=P, engine="csr")
+    assert np.array_equal(base.theta, ref.bup_wing_ref(g))
+    for fd in ("host", "vmapped"):
+        other = wing_decomposition(g, P=P, engine="csr", fd_driver=fd)
+        assert np.array_equal(other.theta, base.theta), fd
+        assert np.array_equal(other.part, base.part), fd
+        assert other.stats.rho_fd_total == base.stats.rho_fd_total, fd
+        assert other.stats.rho_fd_max == base.stats.rho_fd_max, fd
+        assert other.stats.updates == base.stats.updates, fd
+
+    tbase = tip_decomposition(g, side="u", P=P, engine="csr")
+    assert np.array_equal(tbase.theta, ref.bup_tip_ref(g, "u"))
+    for fd in ("host", "vmapped"):
+        other = tip_decomposition(g, side="u", P=P, engine="csr",
+                                  fd_driver=fd)
+        assert np.array_equal(other.theta, tbase.theta), fd
+        assert np.array_equal(other.part, tbase.part), fd
+        assert other.stats.rho_fd_total == tbase.stats.rho_fd_total, fd
+        assert other.stats.rho_fd_max == tbase.stats.rho_fd_max, fd
+    tpal = tip_decomposition(g, side="u", P=P, engine="csr",
+                             use_pallas=True)
+    assert np.array_equal(tpal.theta, tbase.theta)
+    assert tpal.stats.updates == tbase.stats.updates
+
+
+def test_stats_side_tag_round_trips():
+    """PeelStats.side distinguishes tip sides in bench/report rows and
+    survives the as_dict/from_dict round-trip."""
+    from repro.core.peel import PeelStats
+
+    g = random_bipartite(20, 15, 70, seed=3)
+    for side in ("u", "v"):
+        res = tip_decomposition(g, side=side, P=3, engine="csr")
+        assert res.stats.side == side
+        rt = PeelStats.from_dict(res.stats.as_dict())
+        assert rt.side == side and rt.engine == "csr"
+    resw = wing_decomposition(g, P=3, engine="csr")
+    assert resw.stats.side == ""
