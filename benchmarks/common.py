@@ -2,11 +2,34 @@
 from __future__ import annotations
 
 import json
+import os
 import platform
+import subprocess
 import time
 from typing import Callable, Dict, List
 
 ROWS: List[Dict] = []
+
+
+def source_sha() -> str:
+    """Best-effort git HEAD of the tree that produced the rows — rides
+    in the BENCH_*.json header so a committed baseline is traceable to
+    the code it measured (compare.py warns when it is absent)."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        if not sha:
+            return "unknown"
+        dirty = subprocess.run(
+            ["git", "status", "--porcelain"], cwd=root,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip()
+        return sha + ("-dirty" if dirty else "")
+    except Exception:
+        return "unknown"
 
 
 def timed(fn: Callable, *args, repeat: int = 1, **kw):
@@ -37,6 +60,7 @@ def write_bench(path: str) -> None:
         backend=jax.default_backend(),
         python=platform.python_version(),
         jax=jax.__version__,
+        source_sha=source_sha(),
         rows=ROWS,
     )
     with open(path, "w") as f:

@@ -47,6 +47,19 @@ def load_rows(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
 
 
+def check_provenance(path: str) -> None:
+    """Warn (never fail) when a baseline lacks the ``source_sha``
+    header ``common.write_bench`` stamps — an untraceable baseline
+    can't be re-derived when its rows come under dispute."""
+    with open(path) as f:
+        payload = json.load(f)
+    sha = payload.get("source_sha")
+    if not sha or sha == "unknown":
+        print(f"WARNING: baseline {path} has no source_sha header — "
+              "refresh it from a BENCH_*.json produced by the current "
+              "benchmarks/common.py to record which commit it measured")
+
+
 def min_merge(paths, normalize: str = "", with_src: bool = False):
     """Per-row minimum across several runs of the same bench — best-of-N
     across *processes*, the only statistic stable enough to gate on when
@@ -188,6 +201,7 @@ def main() -> int:
             json.dump(payload, f, indent=1)
         print(f"[bench] wrote min-merged baseline -> {args.write_merged}")
         return 0
+    check_provenance(args.baseline)
     return compare(
         load_rows(args.baseline), min_merge(args.new, args.normalize),
         args.threshold, args.min_us, args.normalize,

@@ -81,6 +81,26 @@ print(json.dumps(out))
 """
 
 
+_SCRIPT_HIER = """
+import json, time
+import numpy as np, jax
+from repro.core.graph import powerlaw_bipartite
+from repro.core.distributed import distributed_wing_decomposition
+from repro.launch.mesh import make_peel_mesh_2d
+n = {n_dev}
+mesh2 = make_peel_mesh_2d(n)
+g = powerlaw_bipartite(300, 150, 1400, seed=4)
+t0 = time.time()
+theta, stats = distributed_wing_decomposition(
+    g, mesh2, axis=("grp", "loc"), P_parts=32, engine="csr",
+    pair_aligned=True)
+stats.update(wall_s=time.time() - t0, theta_sum=int(theta.sum()),
+             groups=int(mesh2.devices.shape[0]),
+             loc=int(mesh2.devices.shape[1]))
+print(json.dumps(stats))
+"""
+
+
 def run(small: bool = True):
     devs = (1, 4) if small else (1, 2, 4, 8, 16)
     base = None
@@ -115,6 +135,24 @@ def run(small: bool = True):
         emit(f"scaling.wing.dev{n}.csr_pal", both["pal"]["wall_s"],
              rho_cd=both["pal"]["rho_cd"], psums_per_round=1,
              cd_sharding="pair_aligned")
+        # hierarchical-collective A/B: the SAME one logical psum staged
+        # over a 2-D ("grp", "loc") mesh — two all-reduces with nested
+        # replica groups vs the flat ring (groups degenerate to 1 below
+        # 4 devices).  On forced host devices the staging is pure
+        # overhead; the row certifies theta-invariance and tracks the
+        # structural cost.  report.py renders cd.hier/flat from these.
+        out = subprocess.run(
+            [sys.executable, "-c",
+             textwrap.dedent(_SCRIPT_HIER.format(n_dev=n))],
+            env=env, capture_output=True, text=True, timeout=900)
+        assert out.returncode == 0, out.stderr[-2000:]
+        hier = json.loads(out.stdout.strip().splitlines()[-1])
+        assert hier["theta_sum"] == both["pal"]["theta_sum"], \
+            "hierarchical mesh changed results!"
+        emit(f"scaling.wing.dev{n}.csr_pal_hier", hier["wall_s"],
+             rho_cd=hier["rho_cd"], psums_per_round=1,
+             staged_allreduces=2, cd_sharding="pair_aligned",
+             mesh=f"{hier['groups']}x{hier['loc']}")
         # tip csr CD sharding A/B: round-robin vs vertex-aligned pair
         # entries — both pay ONE psum per round (pair butterflies are
         # static), so the A/B isolates the greedy balance; report.py

@@ -69,6 +69,25 @@ __all__ = [
 ]
 
 
+def _psum_staged(x, axis):
+    """One logical psum, optionally staged over a hierarchical mesh.
+
+    ``axis`` is a mesh-axis name (flat all-reduce, the default) or a
+    tuple of names — e.g. ``("grp", "loc")`` on a 2-D mesh
+    (:func:`repro.launch.mesh.make_peel_mesh_2d`).  A tuple lowers to
+    staged all-reduces, innermost axis first: reduce WITHIN each group
+    of co-located devices, then ACROSS groups — two small collectives
+    with nested replica groups instead of one flat n-device ring, the
+    classic hierarchical-reduction layout for rack-scale meshes.  All
+    CD psums here ride int32, so every grouping is exact and the staged
+    result is bit-identical to the flat one."""
+    if isinstance(axis, str):
+        return jax.lax.psum(x, axis)
+    for a in reversed(axis):
+        x = jax.lax.psum(x, a)
+    return x
+
+
 # =====================================================================
 # CD — link-sharded rounds, one psum per round
 # =====================================================================
@@ -109,7 +128,7 @@ def shard_links(be: BEIndex, m: int, n_dev: int) -> ShardedWingState:
 
 
 def _cd_round_body(peeled_pad, alive_link, k_alive, support_pad,
-                   le, lt, lb, *, nb: int, m: int, axis: str):
+                   le, lt, lb, *, nb: int, m: int, axis: str | Tuple[str, ...]):
     """Runs per-shard under shard_map; one psum for c, one for loss."""
     pe = peeled_pad[le]
     pt = peeled_pad[lt]
@@ -118,19 +137,19 @@ def _cd_round_body(peeled_pad, alive_link, k_alive, support_pad,
     c_local = jax.ops.segment_sum(
         (pair_dies & canon).astype(jnp.int32), lb, num_segments=nb + 1
     )
-    c = jax.lax.psum(c_local, axis)
+    c = _psum_staged(c_local, axis)
     widow = alive_link & ~pe & pt
     surv = alive_link & ~pair_dies
     contrib = jnp.where(widow, k_alive[lb] - 1, 0) + jnp.where(surv, c[lb], 0)
     loss_local = jax.ops.segment_sum(contrib, le, num_segments=m + 1)
-    loss = jax.lax.psum(loss_local, axis)
+    loss = _psum_staged(loss_local, axis)
     support_pad = support_pad - loss
     k_alive = k_alive - c[:nb]
     alive_link = alive_link & ~pair_dies
     return alive_link, k_alive, support_pad
 
 
-def make_cd_round(mesh: Mesh, axis: str, nb: int, m: int):
+def make_cd_round(mesh: Mesh, axis: str | Tuple[str, ...], nb: int, m: int):
     """Build the jitted, shard_map-ped CD round for a given mesh."""
     body = partial(_cd_round_body, nb=nb, m=m, axis=axis)
     spec_l = P(axis)
@@ -263,7 +282,7 @@ def shard_links_bloom_aligned(be: BEIndex, m: int, n_dev: int) -> dict:
                 Bmax=Bmax, m=m)
 
 
-def make_cd_round_bloom(mesh: Mesh, axis: str, Bmax: int, m: int):
+def make_cd_round_bloom(mesh: Mesh, axis: str | Tuple[str, ...], Bmax: int, m: int):
     """One-psum CD round over bloom-aligned shards."""
 
     def body(peeled_pad, alive_link, k_alive, support_pad, le, lt, lb):
@@ -281,7 +300,7 @@ def make_cd_round_bloom(mesh: Mesh, axis: str, Bmax: int, m: int):
             + jnp.where(surv, c[lb], 0)
         loss = jax.ops.segment_sum(
             contrib.reshape(-1), le.reshape(-1), num_segments=m + 1)
-        loss = jax.lax.psum(loss, axis)          # the ONLY collective
+        loss = _psum_staged(loss, axis)          # the ONLY collective
         support_pad = support_pad - loss
         k_alive = k_alive - c[:Bmax].reshape(k_alive.shape)
         alive_link = alive_link & ~pair_dies
@@ -351,7 +370,7 @@ def shard_wedges(wed: csr.Wedges, n_dev: int) -> ShardedCSRState:
 
 
 def _cd_round_body_csr(peeled_pad, alive_w, W_pad, support_pad,
-                       we1, we2, wp, *, n_pairs: int, m: int, axis: str):
+                       we1, we2, wp, *, n_pairs: int, m: int, axis: str | Tuple[str, ...]):
     """Per-shard csr CD round (wing_loss_csr algebra + two psums)."""
     pe1 = peeled_pad[we1]
     pe2 = peeled_pad[we2]
@@ -359,7 +378,7 @@ def _cd_round_body_csr(peeled_pad, alive_w, W_pad, support_pad,
     c_local = jax.ops.segment_sum(
         w_dies.astype(jnp.int32), wp, num_segments=n_pairs + 1
     )
-    c = jax.lax.psum(c_local, axis)
+    c = _psum_staged(c_local, axis)
     surv = alive_w & ~w_dies
     surv_loss = jnp.where(surv, c[wp], 0)
     loss_local = (
@@ -370,11 +389,11 @@ def _cd_round_body_csr(peeled_pad, alive_w, W_pad, support_pad,
             jnp.where(w_dies & ~pe2, W_pad[wp] - 1, 0) + surv_loss,
             we2, num_segments=m + 1)
     )
-    loss = jax.lax.psum(loss_local, axis)
+    loss = _psum_staged(loss_local, axis)
     return alive_w & ~w_dies, W_pad - c, support_pad - loss
 
 
-def make_cd_round_csr(mesh: Mesh, axis: str, n_pairs: int, m: int):
+def make_cd_round_csr(mesh: Mesh, axis: str | Tuple[str, ...], n_pairs: int, m: int):
     """Build the jitted, shard_map-ped csr CD round for a given mesh."""
     body = partial(_cd_round_body_csr, n_pairs=n_pairs, m=m, axis=axis)
     spec_l = P(axis)
@@ -425,7 +444,7 @@ def shard_wedges_pair_aligned(wed: csr.Wedges, n_dev: int) -> dict:
                 Pmax=Pmax, m=m)
 
 
-def make_cd_round_csr_pair_aligned(mesh: Mesh, axis: str, Pmax: int, m: int):
+def make_cd_round_csr_pair_aligned(mesh: Mesh, axis: str | Tuple[str, ...], Pmax: int, m: int):
     """One-psum csr CD round over pair-aligned wedge shards.
 
     Same widow/survivor algebra as :func:`_cd_round_body_csr`, but c_p
@@ -454,7 +473,7 @@ def make_cd_round_csr_pair_aligned(mesh: Mesh, axis: str, Pmax: int, m: int):
                           Wm1[wp.reshape(-1)], 0) + surv_loss,
                 we2.reshape(-1), num_segments=m + 1)
         )
-        loss = jax.lax.psum(loss_local, axis)        # the ONLY collective
+        loss = _psum_staged(loss_local, axis)        # the ONLY collective
         support_pad = support_pad - loss
         W_loc = W_loc - c[:Pmax].reshape(W_loc.shape)
         alive_w = alive_w & ~w_dies
@@ -535,7 +554,7 @@ def shard_tip_pairs(
     return dict(dst=dst_s, src=src_s, bf=bf_s, n=n)
 
 
-def make_cd_round_tip_csr(mesh: Mesh, axis: str, n: int):
+def make_cd_round_tip_csr(mesh: Mesh, axis: str | Tuple[str, ...], n: int):
     """One-psum tip csr CD round over sharded pair-incidence blocks.
 
     The same jitted round serves both layouts of :func:`shard_tip_pairs`
@@ -547,7 +566,7 @@ def make_cd_round_tip_csr(mesh: Mesh, axis: str, n: int):
         contrib = jnp.where(peeled_pad[src.reshape(-1)], bf.reshape(-1), 0)
         loss = jax.ops.segment_sum(
             contrib, dst.reshape(-1), num_segments=n + 1)
-        loss = jax.lax.psum(loss, axis)          # the ONLY collective
+        loss = _psum_staged(loss, axis)          # the ONLY collective
         return support_pad - loss
 
     spec_l = P(axis)
@@ -670,7 +689,7 @@ def _fd_body_one_partition(le, lt, lb, alive0, canon, k0, sup0, mine):
 
 
 def _fd_run_sharded(body, packed: dict, keys: Tuple[str, ...],
-                    mesh: Mesh, axis: str) -> Tuple[np.ndarray, np.ndarray]:
+                    mesh: Mesh, axis: str | Tuple[str, ...]) -> Tuple[np.ndarray, np.ndarray]:
     """Shared FD launcher: pad the partition axis to the device count,
     shard_map the vmapped per-partition body, trim the results."""
     n_parts = packed[keys[0]].shape[0]
@@ -693,7 +712,7 @@ def _fd_run_sharded(body, packed: dict, keys: Tuple[str, ...],
     return np.asarray(theta)[:n_parts], np.asarray(rounds)[:n_parts]
 
 
-def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str
+def fd_peel_sharded(packed: dict, mesh: Mesh, axis: str | Tuple[str, ...]
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Peel all partitions concurrently: shard_map over the partition axis
     (device-parallel), vmap within a shard.  Returns (theta[m'], rounds[P])
@@ -1037,7 +1056,7 @@ def _fd_body_one_partition_tip_csr(pa, pb, bf, mine, sup0):
     return theta, rounds
 
 
-def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str
+def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str | Tuple[str, ...]
                         ) -> Tuple[np.ndarray, np.ndarray]:
     """csr wing counterpart of :func:`fd_peel_sharded` — shard_map over
     the padded wedge-slot stacks, zero collectives inside partitions."""
@@ -1048,7 +1067,7 @@ def fd_peel_sharded_csr(packed: dict, mesh: Mesh, axis: str
     )
 
 
-def fd_peel_sharded_tip_csr(packed: dict, mesh: Mesh, axis: str
+def fd_peel_sharded_tip_csr(packed: dict, mesh: Mesh, axis: str | Tuple[str, ...]
                             ) -> Tuple[np.ndarray, np.ndarray]:
     """csr tip counterpart of :func:`fd_peel_sharded` — shard_map over
     the stacked local pair lists (``pack_fd_partitions_tip_csr`` with
@@ -1088,7 +1107,7 @@ def _finish(theta, part, ranges, sup_init, stats, extras, return_result):
 def distributed_wing_decomposition(
     g: BipartiteGraph,
     mesh: Mesh,
-    axis: str = "peel",
+    axis: str | Tuple[str, ...] = "peel",
     P_parts: int = 8,
     be: Optional[BEIndex] = None,
     bloom_aligned: bool = False,
@@ -1201,7 +1220,7 @@ def distributed_wing_decomposition(
 
 
 def _distributed_wing_csr(
-    g: BipartiteGraph, mesh: Mesh, axis: str, P_parts: int,
+    g: BipartiteGraph, mesh: Mesh, axis: str | Tuple[str, ...], P_parts: int,
     pair_aligned: bool = False, return_result: bool = False,
 ):
     """csr engine on a mesh: wedge-sharded CD + wedge-packed FD.
@@ -1274,7 +1293,7 @@ def _distributed_wing_csr(
 # =====================================================================
 # Distributed TIP decomposition (vertex peeling, §3.2)
 # =====================================================================
-def make_tip_cd_recount(mesh: Mesh, axis: str, n: int, n_dev: int):
+def make_tip_cd_recount(mesh: Mesh, axis: str | Tuple[str, ...], n: int, n_dev: int):
     """Jitted row-sharded tip batch re-count; returns (fn, rows/shard).
 
     The dense-engine fallback: shard the *row blocks* of the wedge
@@ -1328,7 +1347,7 @@ def _tip_fd_kernel(A_i, mine, sup0):
 def distributed_tip_decomposition(
     g: BipartiteGraph,
     mesh: Mesh,
-    axis: str = "peel",
+    axis: str | Tuple[str, ...] = "peel",
     side: str = "u",
     P_parts: int = 8,
     engine: str = "csr",
@@ -1384,7 +1403,7 @@ def distributed_tip_decomposition(
 
 
 def _distributed_tip_csr(
-    gg: BipartiteGraph, mesh: Mesh, axis: str, side: str, P_parts: int,
+    gg: BipartiteGraph, mesh: Mesh, axis: str | Tuple[str, ...], side: str, P_parts: int,
     aligned: bool = False, fd_driver: str = "device",
     return_result: bool = False,
 ):
@@ -1451,7 +1470,7 @@ def _distributed_tip_csr(
 
 
 def _distributed_tip_dense(
-    gg: BipartiteGraph, mesh: Mesh, axis: str, side: str, P_parts: int,
+    gg: BipartiteGraph, mesh: Mesh, axis: str | Tuple[str, ...], side: str, P_parts: int,
     return_result: bool = False,
 ):
     """Dense tip on a mesh: row-sharded masked-matmul re-counts for CD,

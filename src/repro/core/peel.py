@@ -53,6 +53,7 @@ from .peelspec import (  # noqa: F401 — canonical home is peelspec; kept
     _bucket_pad,
     _fd_cascade,
     _fd_while_device,
+    _fd_while_fused,
     _fd_while_vmapped,
     _find_range,
     _lpt_order,
@@ -218,6 +219,77 @@ def _fd_wing_vmapped_pallas(
 
 
 # =====================================================================
+# Fused FD bodies — the whole round is ONE Pallas launch
+# =====================================================================
+def _fd_wing_fused_impl(
+    slot_e1: jax.Array,     # (B, R, K) int32 — local edge ids, sentinel E
+    slot_e2: jax.Array,
+    valid0: jax.Array,      # (B, R, K) bool — initial alive slots
+    W0: jax.Array,          # (B, R) int32 — alive wedges per slot row
+    mine: jax.Array,        # (B, E) bool
+    sup0: jax.Array,        # (B, E) int32
+    interpret: bool = True,
+):
+    """Zero-per-round-dispatch wing FD: the while_loop body is ONE fused
+    ``kernels.fd_round`` launch — k-advance, frontier compaction AND the
+    widow/survivor support update all in-kernel, no segment-sum/argmin
+    tail (cf. :func:`_fd_wing_vmapped_pallas`, which still scatters the
+    losses outside the kernel).  Returns (theta (B, E), rounds (B),
+    update count) bit-identical to the unfused drivers."""
+    from repro.kernels import ops as kops  # local import: keep core light
+
+    # loop-constant inits derived from inputs (cf. _fd_while_vmapped)
+    z = sup0 * 0
+    z1 = z[:, :1]
+    state0 = (
+        sup0.astype(jnp.int32), mine.astype(jnp.int32), z, z1, z1, z1,
+        valid0.astype(jnp.int32), W0.astype(jnp.float32),
+    )
+
+    def round_fn(sup, alive, theta, k, rounds, nupd, aslot, W):
+        return kops.fd_round_wing(
+            sup, alive, theta, k, rounds, nupd, aslot, W,
+            slot_e1, slot_e2, interpret=interpret)
+
+    out = peelspec._fd_while_fused(state0, round_fn)
+    return out[2], out[4][:, 0], jnp.sum(out[5])
+
+
+_fd_wing_fused = partial(
+    jax.jit, static_argnames=("interpret",))(_fd_wing_fused_impl)
+
+
+def _fd_tip_fused_impl(
+    st_pa: jax.Array,       # (B, L) int32 — partition-local pair lists
+    st_pb: jax.Array,
+    st_bf: jax.Array,       # (B, L) int32 — static pair ⋈ (0 on pad)
+    mine: jax.Array,        # (B, E) bool
+    sup0: jax.Array,        # (B, E) int32
+    interpret: bool = True,
+):
+    """Tip counterpart of :func:`_fd_wing_fused_impl`: one fused Pallas
+    launch per round over the stacked partition-local pair lists.
+    Returns (theta (B, E), rounds (B))."""
+    from repro.kernels import ops as kops
+
+    z = sup0 * 0
+    z1 = z[:, :1]
+    state0 = (sup0.astype(jnp.int32), mine.astype(jnp.int32), z, z1, z1)
+
+    def round_fn(sup, alive, theta, k, rounds):
+        return kops.fd_round_tip(
+            sup, alive, theta, k, rounds, st_pa, st_pb, st_bf,
+            interpret=interpret)
+
+    out = peelspec._fd_while_fused(state0, round_fn)
+    return out[2], out[4][:, 0]
+
+
+_fd_tip_fused = partial(
+    jax.jit, static_argnames=("interpret",))(_fd_tip_fused_impl)
+
+
+# =====================================================================
 # Entity-specific per-partition (device) FD bodies
 # =====================================================================
 @partial(jax.jit, static_argnames=("n",))
@@ -302,6 +374,7 @@ def tip_decomposition(
     engine: str = "dense",
     fd_driver: str = "device",
     use_pallas: bool = False,
+    fused: bool = False,
 ) -> PeelResult:
     """PBNG tip decomposition (§3.2) — θ per U (or V) vertex.
 
@@ -340,6 +413,12 @@ def tip_decomposition(
     instead of flat segment_sums — θ and round/update counts
     parity-locked either way.
 
+    ``fused`` (csr engine, device/vmapped drivers): run every FD round
+    as ONE fused Pallas launch (``kernels.fd_round``) — k-advance,
+    frontier compaction and the support delta all in-kernel, zero
+    per-round dispatch tail.  θ and round counts bit-identical to the
+    unfused drivers.
+
     ``batch_recount`` (dense engine only): the §5.1 batch optimization
     knob —
       * ``"adaptive"`` (default, paper-faithful): per round, re-count all
@@ -355,6 +434,10 @@ def tip_decomposition(
         raise ValueError(fd_driver)
     if use_pallas and engine != "csr":
         raise ValueError("use_pallas applies to engine='csr' only")
+    if fused and engine != "csr":
+        raise ValueError("fused applies to engine='csr' only")
+    if fused and fd_driver == "host":
+        raise ValueError("fused requires fd_driver='device' or 'vmapped'")
     gg = g if side == "u" else g.transpose()
     stats = PeelStats(
         engine=engine,
@@ -362,7 +445,7 @@ def tip_decomposition(
         side=side,
     )
     if engine == "csr":
-        spec = _tip_spec_csr(gg, stats, use_pallas=use_pallas)
+        spec = _tip_spec_csr(gg, stats, use_pallas=use_pallas, fused=fused)
     else:
         spec = _tip_spec_dense(gg, batch_recount, stats)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
@@ -470,7 +553,8 @@ def _tip_fd_peel(
 # Tip decomposition, csr engine (sparse wedge list, core/csr.py)
 # =====================================================================
 def _tip_spec_csr(
-    gg: BipartiteGraph, stats: PeelStats, use_pallas: bool = False
+    gg: BipartiteGraph, stats: PeelStats, use_pallas: bool = False,
+    fused: bool = False,
 ) -> PeelSpec:
     """csr-engine tip spec: CD + FD on the flat wedge list — no dense
     matrices anywhere.
@@ -480,7 +564,10 @@ def _tip_spec_csr(
     is never peeled, so the engine is purely incremental (zero
     re-counts).  ``use_pallas`` routes the CD delta through the blocked
     row-sum kernel over the vertex-major slot layout
-    (:func:`csr.tip_delta_slots`)."""
+    (:func:`csr.tip_delta_slots`).  ``fused`` runs the FD phase through
+    the fused ``kernels.fd_round`` launch (device driver: pack once,
+    slice each partition from the shared stack; vmapped: the whole
+    stack at once)."""
     n = gg.n_u
     wed = csr.build_wedges(gg)
     pa = jnp.asarray(wed.pair_a)
@@ -513,14 +600,45 @@ def _tip_spec_csr(
             )
         return np.asarray(state["support"]).astype(np.int64)
 
+    # fused device driver: pack the partition stack ONCE (lazily, on the
+    # first fd_partition call — part/sup_init are fixed for the whole FD
+    # phase), then slice each partition as a B=1 batch into the same
+    # jitted fused entry.  One compile for every partition (shared
+    # Emax/Lmax buckets), bit-identical to the unfused cascade.
+    fused_pack: dict = {}
+
     def fd_partition(i, part, sup_init, theta, fd_driver):
+        if fused and fd_driver == "device":
+            from repro.kernels import ops as kops
+
+            if "p" not in fused_pack:
+                from .distributed import pack_fd_partitions_tip_csr
+
+                fused_pack["p"] = pack_fd_partitions_tip_csr(
+                    wed, pair_bf0, part, sup_init,
+                    int(part.max()) + 1 if part.size else 0,
+                    bucket=True, stacked=True,
+                )
+            p = fused_pack["p"]
+            theta_st, rounds = _fd_tip_fused(
+                jnp.asarray(p["st_pa"][i:i + 1]),
+                jnp.asarray(p["st_pb"][i:i + 1]),
+                jnp.asarray(p["st_bf"][i:i + 1]),
+                jnp.asarray(p["mine"][i:i + 1]),
+                jnp.asarray(p["sup0"][i:i + 1]),
+                interpret=kops.default_interpret(),
+            )
+            mm = p["mine"][i]
+            theta[p["gids"][i][mm]] = (
+                np.asarray(theta_st[0]).astype(np.int64)[mm])
+            return int(rounds[0]), 0, 0
         rounds = _tip_fd_csr(
             wed, pair_bf0, part, i, sup_init, theta, fd_driver=fd_driver)
         return rounds, 0, 0
 
     def fd_vmapped(part, sup_init, theta, n_parts):
         rounds = _tip_fd_vmapped_csr(
-            wed, pair_bf0, part, sup_init, theta, n_parts)
+            wed, pair_bf0, part, sup_init, theta, n_parts, fused=fused)
         return rounds, 0
 
     return PeelSpec(
@@ -597,24 +715,40 @@ def _tip_fd_vmapped_csr(
     sup_init: np.ndarray,
     theta: np.ndarray,
     n_parts: int,
+    fused: bool = False,
 ) -> np.ndarray:
     """Single-dispatch tip Phase 2: pack all partitions into one stacked
     shape-bucketed layout and peel them in ONE batched while_loop
     (:func:`_fd_tip_vmapped`).  Writes θ in place; returns the (B,)
     per-partition round counts (bit-identical to the per-partition
-    drivers — same cascade, one dispatch)."""
+    drivers — same cascade, one dispatch).
+
+    ``fused=True`` swaps the segment-sum round body for the fused
+    ``kernels.fd_round`` launch over the stacked partition-local pair
+    lists (:func:`_fd_tip_fused_impl`) — one Pallas call per round and
+    nothing else."""
     if n_parts == 0:
         return np.zeros(0, dtype=np.int64)
     from .distributed import pack_fd_partitions_tip_csr
 
     packed = pack_fd_partitions_tip_csr(
-        wed, pair_bf0, part, sup_init, n_parts, bucket=True
+        wed, pair_bf0, part, sup_init, n_parts, bucket=True, stacked=fused
     )
-    theta_st, rounds, _ = _fd_tip_vmapped(
-        jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
-        jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
-        jnp.asarray(packed["sup0"]),
-    )
+    if fused:
+        from repro.kernels import ops as kops
+
+        theta_st, rounds = _fd_tip_fused(
+            jnp.asarray(packed["st_pa"]), jnp.asarray(packed["st_pb"]),
+            jnp.asarray(packed["st_bf"]), jnp.asarray(packed["mine"]),
+            jnp.asarray(packed["sup0"]),
+            interpret=kops.default_interpret(),
+        )
+    else:
+        theta_st, rounds, _ = _fd_tip_vmapped(
+            jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
+            jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
+            jnp.asarray(packed["sup0"]),
+        )
     mm = packed["mine"]
     theta[packed["gids"][mm]] = np.asarray(theta_st).astype(np.int64)[mm]
     return np.asarray(rounds).astype(np.int64)
@@ -627,23 +761,28 @@ def _wing_fd_vmapped_csr(
     theta: np.ndarray,
     n_parts: int,
     use_pallas: bool = False,
+    fused: bool = False,
 ) -> Tuple[np.ndarray, int]:
     """Single-dispatch wing Phase 2 (see :func:`_tip_fd_vmapped_csr`).
 
     ``use_pallas`` swaps the vmapped segment-sum body for the blocked
     Pallas ``support_update`` kernel over the stacked slot layout
     (:func:`_fd_wing_vmapped_pallas`) — interpret mode off-TPU, θ and
-    round/update counts parity-locked either way.  Returns (rounds (B,),
-    update count)."""
+    round/update counts parity-locked either way.  ``fused`` goes one
+    further: the ENTIRE round body (k-advance + compaction + support
+    update + loss scatter) is one ``kernels.fd_round`` launch
+    (:func:`_fd_wing_fused_impl`).  Returns (rounds (B,), update
+    count)."""
     if n_parts == 0:
         return np.zeros(0, dtype=np.int64), 0
     from .distributed import pack_fd_partitions_csr
 
+    slotted = use_pallas or fused
     packed = pack_fd_partitions_csr(
         wed, part, sup_init, n_parts, bucket=True,
-        flat=not use_pallas, slots=use_pallas,
+        flat=not slotted, slots=slotted,
     )
-    if use_pallas:
+    if slotted:
         from repro.kernels import ops as kops  # local: keep core light
 
         R, _ = packed["slot_sizes"]
@@ -651,7 +790,8 @@ def _wing_fd_vmapped_csr(
         W_rows = np.zeros((n_parts, R), dtype=np.int32)
         w = min(R, W0.shape[1])
         W_rows[:, :w] = W0[:, :w]
-        theta_st, rounds, nupd = _fd_wing_vmapped_pallas(
+        body = _fd_wing_fused if fused else _fd_wing_vmapped_pallas
+        theta_st, rounds, nupd = body(
             jnp.asarray(packed["slot_e1"]), jnp.asarray(packed["slot_e2"]),
             jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
             jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]),
@@ -735,6 +875,7 @@ def wing_decomposition(
     be: Optional[BEIndex] = None,
     fd_driver: str = "device",
     use_pallas: bool = False,
+    fused: bool = False,
 ) -> PeelResult:
     """PBNG wing decomposition (§3.3) — θ per edge.
 
@@ -773,11 +914,21 @@ def wing_decomposition(
     slot layout (interpret mode off-TPU) instead of flat segment_sums.
     With ``fd_driver="vmapped"`` the same kernel also runs INSIDE the FD
     while_loop body over the stacked partition slot layout (one kernel
-    launch per round covering every partition)."""
+    launch per round covering every partition).
+
+    ``fused`` (csr engine, device/vmapped drivers): fuse the ENTIRE FD
+    round body — k-advance, frontier compaction, widow/survivor support
+    update and loss scatter — into one ``kernels.fd_round`` Pallas
+    launch, so a round is a single kernel dispatch and nothing else.  θ
+    and round/update counts bit-identical to the unfused drivers."""
     if engine not in ("beindex", "dense", "csr"):
         raise ValueError(engine)
     if fd_driver not in ("device", "host", "vmapped"):
         raise ValueError(fd_driver)
+    if fused and engine != "csr":
+        raise ValueError("fused applies to engine='csr' only")
+    if fused and fd_driver == "host":
+        raise ValueError("fused requires fd_driver='device' or 'vmapped'")
     stats = PeelStats(
         engine=engine,
         fd_driver=fd_driver if engine == "csr" else "host",
@@ -785,7 +936,7 @@ def wing_decomposition(
     if engine == "beindex":
         spec = _wing_spec_beindex(g, be, stats)
     elif engine == "csr":
-        spec = _wing_spec_csr(g, stats, use_pallas=use_pallas)
+        spec = _wing_spec_csr(g, stats, use_pallas=use_pallas, fused=fused)
     else:
         spec = _wing_spec_dense(g, stats)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
@@ -864,12 +1015,14 @@ def _wing_spec_dense(g: BipartiteGraph, stats: PeelStats) -> PeelSpec:
 
 
 def _wing_spec_csr(
-    g: BipartiteGraph, stats: PeelStats, use_pallas: bool = False
+    g: BipartiteGraph, stats: PeelStats, use_pallas: bool = False,
+    fused: bool = False,
 ) -> PeelSpec:
     """csr wing spec: incremental wedge-list widow/survivor updates as
     the CD step (optionally through the blocked Pallas kernel on the
     pairs-major slot layout), touching-wedge packed lists as the FD
-    rule."""
+    rule.  ``fused`` routes the FD phase through the fused
+    ``kernels.fd_round`` launch (see :func:`_fd_wing_fused_impl`)."""
     m = g.m
     wed = csr.build_wedges(g)
     we1 = jnp.asarray(wed.wedge_e1)
@@ -908,14 +1061,49 @@ def _wing_spec_csr(
         stats.updates += int(nupd)
         return np.rint(np.asarray(state["support"])).astype(np.int64)
 
+    # fused device driver: one lazy pack of the full partition stack,
+    # each partition sliced as a B=1 batch into the shared jitted fused
+    # entry (same bucketed shapes → one compile for all partitions)
+    fused_pack: dict = {}
+
     def fd_partition(i, part, sup_init, theta, fd_driver):
+        if fused and fd_driver == "device":
+            from repro.kernels import ops as kops
+
+            if "p" not in fused_pack:
+                from .distributed import pack_fd_partitions_csr
+
+                n_parts = int(part.max()) + 1 if part.size else 0
+                p = pack_fd_partitions_csr(
+                    wed, part, sup_init, n_parts, bucket=True, slots=True)
+                R, _ = p["slot_sizes"]
+                W_rows = np.zeros((n_parts, R), dtype=np.int32)
+                w = min(R, p["W0"].shape[1])
+                W_rows[:, :w] = p["W0"][:, :w]
+                p["W_rows"] = W_rows
+                fused_pack["p"] = p
+            p = fused_pack["p"]
+            theta_st, rounds, nupd = _fd_wing_fused(
+                jnp.asarray(p["slot_e1"][i:i + 1]),
+                jnp.asarray(p["slot_e2"][i:i + 1]),
+                jnp.asarray(p["slot_valid"][i:i + 1]),
+                jnp.asarray(p["W_rows"][i:i + 1]),
+                jnp.asarray(p["mine"][i:i + 1]),
+                jnp.asarray(p["sup0"][i:i + 1]),
+                interpret=kops.default_interpret(),
+            )
+            mm = p["mine"][i]
+            theta[p["gids"][i][mm]] = (
+                np.asarray(theta_st[0]).astype(np.int64)[mm])
+            return int(rounds[0]), int(nupd), 0
         rounds, nupd = _wing_fd_csr(
             wed, part, i, sup_init, theta, fd_driver=fd_driver)
         return rounds, nupd, 0
 
     def fd_vmapped(part, sup_init, theta, n_parts):
         return _wing_fd_vmapped_csr(
-            wed, part, sup_init, theta, n_parts, use_pallas=use_pallas)
+            wed, part, sup_init, theta, n_parts, use_pallas=use_pallas,
+            fused=fused)
 
     workload, est = _wing_workload_est()
     return PeelSpec(

@@ -504,3 +504,27 @@ def _fd_while_vmapped(mine: jax.Array, sup0: jax.Array, update, aux):
     init = (mine, sup0, aux, zero_e, zero_p, zero_p, jnp.int32(0))
     _, _, _, theta, _, rounds, nupd = jax.lax.while_loop(cond, body, init)
     return theta, rounds, nupd
+
+
+def _fd_while_fused(state0, round_fn):
+    """The zero-per-round-dispatch FD driver: the whole cascade is one
+    ``lax.while_loop`` whose body is ONE fused Pallas round
+    (``kernels.fd_round`` — k-advance, frontier compaction and support
+    update all in-kernel), so a round's jaxpr is a single ``pallas_call``
+    with no segment-sum / argmin / compaction tail.
+
+    ``state0`` is the loop-carried tuple with the alive mask (any dtype,
+    nonzero = alive) at index 1; ``round_fn(*state) -> state`` must be
+    the fused round.  Loop-invariant operands (slot layouts, pair lists)
+    stay closed over inside ``round_fn`` — they never enter the carry.
+    Semantics (k-advance, per-partition round counts, θ) are
+    bit-identical to :func:`_fd_while_vmapped` / :func:`_fd_while_device`
+    (golden- and property-locked in ``tests/test_fused_fd.py``)."""
+
+    def cond(state):
+        return jnp.any(state[1] != 0)
+
+    def body(state):
+        return round_fn(*state)
+
+    return jax.lax.while_loop(cond, body, state0)

@@ -24,7 +24,7 @@ _NEG_INF = -1e30
 
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
-                  *, scale: float, causal: bool, sq: int, sk: int):
+                  *, scale: float, causal: bool, offset: int):
     kv_i = pl.program_id(2)
 
     @pl.when(kv_i == 0)
@@ -42,7 +42,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
 
     if causal:
         bq, bk = s.shape
-        q_ids = (pl.program_id(1) * bq + (sk - sq)
+        q_ids = (pl.program_id(1) * bq + offset
                  + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
         k_ids = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
         s = jnp.where(k_ids <= q_ids, s, _NEG_INF)
@@ -70,6 +70,7 @@ def flash_attention_pallas(
     scale: float | None = None,
     bq: int = 128,
     bk: int = 128,
+    offset: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
     bh, sq, d = q.shape
@@ -77,9 +78,11 @@ def flash_attention_pallas(
     assert sq % bq == 0 and sk % bk == 0, "pad sequence dims before calling"
     if scale is None:
         scale = d ** -0.5
+    if offset is None:
+        offset = sk - sq
     grid = (bh, sq // bq, sk // bk)
     kern = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, sq=sq, sk=sk
+        _flash_kernel, scale=scale, causal=causal, offset=offset
     )
     return pl.pallas_call(
         kern,

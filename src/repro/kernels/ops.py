@@ -15,6 +15,7 @@ import numpy as np
 
 from .bloom_update import bloom_update_pallas
 from .butterfly_count import matmul_pallas, vertex_count_pallas
+from .fd_round import fd_round_tip_pallas, fd_round_wing_pallas
 from .flash_attention import flash_attention_pallas
 from .support_update import support_update_pallas
 from .wedge_count import wedge_count_pallas
@@ -23,6 +24,8 @@ __all__ = [
     "vertex_butterflies",
     "edge_wedge_matrix",
     "bloom_update",
+    "fd_round_tip",
+    "fd_round_wing",
     "flash_attention",
     "pack_blooms",
     "pair_wedge_counts",
@@ -151,6 +154,41 @@ def support_update(
     return c1[:n, :kdim], c2[:n, :kdim], c[:n]
 
 
+# The fd_round wrappers are deliberately NOT jitted: they only ever run
+# inside an already-jitted while_loop body (``peelspec._fd_while_fused``
+# consumers), where a nested pjit would wrap the pallas_call and obscure
+# the round body's jaxpr — tests assert that body is exactly ONE
+# pallas_call and nothing else (tests/test_fused_fd.py).
+def fd_round_wing(sup, alive, theta, k, rounds, nupd, aslot, W, e1, e2,
+                  interpret: bool | None = None):
+    """One fused wing-FD round (k-advance + frontier compaction + widow/
+    survivor support update) as a single Pallas launch.
+
+    State in/out (same order): sup/alive/theta (B, E) i32, k/rounds/
+    nupd (B, 1) i32, wedge-slot alive (B, R, K) i32, W (B, R) f32.
+    ``e1``/``e2`` are the static (B, R, K) local edge ids with sentinel
+    E (``distributed._pack_fd_slots_csr``)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return fd_round_wing_pallas(
+        sup, alive, theta, k, rounds, nupd, aslot, W, e1, e2,
+        interpret=interpret)
+
+
+def fd_round_tip(sup, alive, theta, k, rounds, pa, pb, bf,
+                 interpret: bool | None = None):
+    """One fused tip-FD round as a single Pallas launch.
+
+    State in/out (same order): sup/alive/theta (B, E) i32, k/rounds
+    (B, 1) i32.  ``pa``/``pb``/``bf`` are the static (B, L) partition-
+    local pair lists (``pack_fd_partitions_tip_csr(stacked=True)``;
+    bf=0 padding is algebra-neutral)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return fd_round_tip_pallas(
+        sup, alive, theta, k, rounds, pa, pb, bf, interpret=interpret)
+
+
 def pack_blooms(
     link_edge: np.ndarray,
     link_twin: np.ndarray,
@@ -241,7 +279,11 @@ def flash_attention(
     # exact multiples.
     if not causal:
         assert sq % bq == 0 and sk % bk == 0
+    # the causal diagonal offset must come from the LOGICAL sq/sk, not the
+    # padded shapes — padded key ids then sit above every real query id
+    # and mask themselves out
     out = flash_attention_pallas(
-        qr, kr, vr, causal=causal, bq=bq, bk=bk, interpret=interpret
+        qr, kr, vr, causal=causal, bq=bq, bk=bk, offset=sk - sq,
+        interpret=interpret
     )
     return out[:, :sq].reshape(b, h, sq, d)

@@ -10,7 +10,12 @@ import jax
 
 from repro.sharding.compat import HAS_AXIS_TYPE, AxisType
 
-__all__ = ["make_production_mesh", "make_peel_mesh", "make_local_mesh"]
+__all__ = [
+    "make_production_mesh",
+    "make_peel_mesh",
+    "make_peel_mesh_2d",
+    "make_local_mesh",
+]
 
 
 def _mesh(shape, axes):
@@ -33,6 +38,28 @@ def make_peel_mesh(n_devices: int | None = None):
     partitions)."""
     n = n_devices or len(jax.devices())
     return _mesh((n,), ("peel",))
+
+
+def make_peel_mesh_2d(n_devices: int | None = None,
+                      groups: int | None = None):
+    """2-D ("grp", "loc") mesh for hierarchical CD collectives.
+
+    The CD round's single logical psum runs staged over this mesh
+    (``core.distributed._psum_staged`` with ``axis=("grp", "loc")``):
+    reduce within each group of ``loc`` co-located devices, then across
+    the ``groups`` groups — nested replica groups instead of one flat
+    n-device ring.  ``groups`` defaults to the largest power of two with
+    groups² ≤ n that divides n (8 → 2×4, 512 → 16×32); for n = 1 the
+    mesh degenerates to (1, 1) and the staged psum is a no-op pair.
+    """
+    n = n_devices or len(jax.devices())
+    if groups is None:
+        groups = 1
+        while groups * 2 * groups * 2 <= n and n % (groups * 2) == 0:
+            groups *= 2
+    if n % groups:
+        raise ValueError(f"groups={groups} does not divide n={n}")
+    return _mesh((groups, n // groups), ("grp", "loc"))
 
 
 def make_local_mesh():

@@ -50,7 +50,20 @@ def _validate(args, n_dev: int) -> None:
             "--aligned is the one-psum CD sharding (csr: pair/vertex "
             "aligned; beindex: bloom aligned); --engine dense has no "
             "sharded index to align")
+    if args.fused_fd and args.engine != "csr":
+        raise LaunchError(
+            "--fused-fd is the fused csr FD round kernel; pass "
+            "--engine csr")
+    if args.fused_fd and args.fd_driver == "host":
+        raise LaunchError(
+            "--fused-fd fuses the device-side FD round; the host driver "
+            "has no device round body (pass --fd-driver device|vmapped)")
     if n_dev > 1:
+        if args.fused_fd:
+            raise LaunchError(
+                "--fused-fd is wired for the single-device csr FD "
+                "drivers; distributed FD runs per-partition while_loops "
+                "under shard_map")
         if args.kind == "wing" and args.engine == "dense":
             raise LaunchError(
                 "no distributed dense wing path; pass --engine "
@@ -75,6 +88,14 @@ def _validate(args, n_dev: int) -> None:
             raise LaunchError(
                 "--aligned shards the CD index across devices; it needs "
                 "a multi-device mesh (or use --dryrun)")
+    if args.fused_fd is None:
+        # default ON where supported: single device, csr engine, a
+        # device-side FD driver — the zero-per-round-dispatch round is
+        # θ-bit-identical to the unfused path, so there is no reason
+        # not to take it (pass --no-fused-fd for the A/B baseline)
+        args.fused_fd = (
+            n_dev == 1 and args.engine == "csr"
+            and args.fd_driver in ("device", "vmapped"))
 
 
 def _dryrun() -> int:
@@ -272,6 +293,54 @@ def _dryrun() -> int:
         "vmapped tip FD must be collective-free"
     print("[peel-dryrun] vmapped tip FD: whole Phase 2 is ONE while_loop, "
           "zero collectives ✓")
+
+    # --- fused FD (single device): the while_loop ROUND BODY must be
+    # exactly ONE pallas_call — no segment-sum/argmin/compaction tail
+    from repro.core.peel import _fd_wing_fused_impl
+
+    packed_f = D.pack_fd_partitions_csr(
+        wed, res_c.part, res_c.support_init, res_c.stats.p_effective,
+        bucket=True, slots=True)
+    R_f, _ = packed_f["slot_sizes"]
+    B_f = packed_f["sup0"].shape[0]
+    W_rows = np.zeros((B_f, R_f), np.int32)
+    w_f = min(R_f, packed_f["W0"].shape[1])
+    W_rows[:, :w_f] = packed_f["W0"][:, :w_f]
+    fj = jax.make_jaxpr(lambda *a: _fd_wing_fused_impl(*a, interpret=True))(
+        jnp.asarray(packed_f["slot_e1"]), jnp.asarray(packed_f["slot_e2"]),
+        jnp.asarray(packed_f["slot_valid"]), jnp.asarray(W_rows),
+        jnp.asarray(packed_f["mine"]), jnp.asarray(packed_f["sup0"]))
+    whiles = [e for e in fj.jaxpr.eqns if e.primitive.name == "while"]
+    assert len(whiles) == 1, f"fused FD must be ONE while_loop, {len(whiles)}"
+    body_prims = [e.primitive.name
+                  for e in whiles[0].params["body_jaxpr"].jaxpr.eqns]
+    assert body_prims.count("pallas_call") == 1, body_prims
+    banned_f = {"scatter", "scatter-add", "scatter_add", "gather",
+                "argmin", "reduce_min", "cumsum", "sort", "segment_sum"}
+    assert not banned_f & set(body_prims), body_prims
+    print("[peel-dryrun] fused FD round body is ONE pallas_call "
+          f"(body prims: {body_prims}) ✓")
+
+    # --- hierarchical CD at 512 devices: the ONE logical psum staged
+    # over a (16, 32) 2-D mesh — exactly two all-reduces with nested
+    # replica groups, bit-identical int32 reduction
+    from repro.launch.mesh import make_peel_mesh_2d
+
+    mesh2 = make_peel_mesh_2d(512)
+    hfn = D.make_cd_round_csr_pair_aligned(
+        mesh2, ("grp", "loc"), pal["Pmax"], g.m)
+    htxt = hfn.lower(peeled, jnp.asarray(pal["alive"]),
+                     jnp.asarray(pal["W0"]), sup,
+                     jnp.asarray(pal["we1"]), jnp.asarray(pal["we2"]),
+                     jnp.asarray(pal["wp"])).compile().as_text()
+    n_h = htxt.count("all-reduce(") + htxt.count("all-reduce-start(")
+    assert n_h == 2, f"staged CD psum must be TWO all-reduces, found {n_h}"
+    hflat = htxt.replace(" ", "")
+    assert "{0,1,2,3" in hflat and "{0,32,64," in hflat, \
+        "staged CD psum must carry nested replica groups"
+    print("[peel-dryrun] hierarchical pair-aligned CD compiled at 512 "
+          "devices (16 groups x 32); one logical psum = two staged "
+          "all-reduces with nested replica groups ✓")
     return 0
 
 
@@ -341,7 +410,8 @@ def _run(args) -> int:
         else:
             res = wing_decomposition(
                 g, P=args.parts, engine=args.engine,
-                fd_driver=args.fd_driver, use_pallas=args.use_pallas)
+                fd_driver=args.fd_driver, use_pallas=args.use_pallas,
+                fused=args.fused_fd)
             result = res
             theta = res.theta
             s = res.stats
@@ -361,7 +431,8 @@ def _run(args) -> int:
         else:
             res = tip_decomposition(
                 g, side=args.side, P=args.parts, engine=args.engine,
-                fd_driver=args.fd_driver, use_pallas=args.use_pallas)
+                fd_driver=args.fd_driver, use_pallas=args.use_pallas,
+                fused=args.fused_fd)
             result = res
             theta = res.theta
             s = res.stats
@@ -411,6 +482,14 @@ def main():
                          "pair-aligned wedges; tip csr: vertex-aligned "
                          "pair entries; wing beindex: bloom-aligned "
                          "links)")
+    ap.add_argument("--fused-fd", action=argparse.BooleanOptionalAction,
+                    default=None,
+                    help="csr engines, single device: run every FD round "
+                         "as ONE fused Pallas launch (kernels.fd_round) "
+                         "— k-advance + compaction + support update "
+                         "in-kernel, zero per-round dispatch tail.  "
+                         "Default: on where supported; --no-fused-fd "
+                         "forces the unfused A/B baseline")
     ap.add_argument("--use-pallas", action="store_true",
                     help="csr engines only: run CD support updates "
                          "through the blocked Pallas kernels (and, for "

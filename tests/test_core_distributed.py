@@ -594,3 +594,150 @@ def test_bloom_aligned_single_psum():
         print("OK", n)
     """)
     assert "OK" in out
+
+def test_hierarchical_cd_8dev_staged_psum_replica_groups():
+    """Hierarchical CD on a 2-D ("grp", "loc") mesh: the round's single
+    logical psum lowers to exactly TWO staged all-reduces with nested
+    replica groups — reduce within each group of co-located devices
+    first ({{0,1,2,3},{4,5,6,7}} for the 2x4 mesh), then across groups
+    ({{0,4},{1,5},{2,6},{3,7}}) — and θ stays bit-identical to both the
+    flat 1-D mesh and the BUP oracle (int32 sums are exact under any
+    grouping)."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh
+        from repro.core.graph import random_bipartite, powerlaw_bipartite
+        from repro.core import csr, ref
+        from repro.core import distributed as D
+        from repro.launch.mesh import make_peel_mesh_2d
+        mesh2 = make_peel_mesh_2d(8)
+        assert mesh2.devices.shape == (2, 4), mesh2.devices.shape
+        g = powerlaw_bipartite(80, 40, 350, seed=2)
+        wed = csr.build_wedges(g)
+        packed = D.shard_wedges_pair_aligned(wed, 8)
+        fn = D.make_cd_round_csr_pair_aligned(
+            mesh2, ("grp", "loc"), packed["Pmax"], g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.zeros((g.m + 1,), jnp.int32)
+        txt = fn.lower(peeled, jnp.asarray(packed["alive"]),
+                       jnp.asarray(packed["W0"]), sup,
+                       jnp.asarray(packed["we1"]), jnp.asarray(packed["we2"]),
+                       jnp.asarray(packed["wp"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 2, n
+        flat = txt.replace(" ", "")
+        assert "{{0,1,2,3},{4,5,6,7}}" in flat, "missing intra-group stage"
+        assert "{{0,4},{1,5},{2,6},{3,7}}" in flat, "missing cross-group stage"
+        mesh1 = Mesh(np.array(jax.devices()).reshape(8), ("peel",))
+        for seed in (0, 1, 2):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            want = ref.bup_wing_ref(g)
+            th, _ = D.distributed_wing_decomposition(
+                g, mesh2, axis=("grp", "loc"), P_parts=4, engine="csr",
+                pair_aligned=True)
+            tf, _ = D.distributed_wing_decomposition(
+                g, mesh1, axis="peel", P_parts=4, engine="csr",
+                pair_aligned=True)
+            assert np.array_equal(th, want), seed
+            assert np.array_equal(th, tf), seed
+        print("OK", n)
+    """)
+    assert "OK" in out
+
+
+def test_hierarchical_tip_cd_8dev():
+    """The same two-stage lowering for the tip CD round, and θ parity
+    for the full hierarchical distributed tip decomposition."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from repro.core.graph import random_bipartite, powerlaw_bipartite
+        from repro.core import csr, ref
+        from repro.core import distributed as D
+        from repro.launch.mesh import make_peel_mesh_2d
+        mesh2 = make_peel_mesh_2d(8)
+        g = powerlaw_bipartite(80, 40, 350, seed=2)
+        wed = csr.build_wedges(g)
+        bl = D.shard_tip_pairs(wed, wed.pair_butterflies0(), 8,
+                               aligned=True)
+        fn = D.make_cd_round_tip_csr(mesh2, ("grp", "loc"), g.n_u)
+        txt = fn.lower(jnp.zeros((g.n_u + 1,), bool),
+                       jnp.zeros((g.n_u + 1,), jnp.int32),
+                       jnp.asarray(bl["dst"]), jnp.asarray(bl["src"]),
+                       jnp.asarray(bl["bf"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 2, n
+        flat = txt.replace(" ", "")
+        assert "{{0,1,2,3},{4,5,6,7}}" in flat
+        assert "{{0,4},{1,5},{2,6},{3,7}}" in flat
+        for seed in (0, 1, 2):
+            g = random_bipartite(16, 12, 48, seed=seed)
+            want = ref.bup_tip_ref(g, "u")
+            th, _ = D.distributed_tip_decomposition(
+                g, mesh2, axis=("grp", "loc"), side="u", P_parts=4,
+                engine="csr", aligned=True)
+            assert np.array_equal(th, want), seed
+        print("OK", n)
+    """)
+    assert "OK" in out
+
+
+def test_hierarchical_cd_single_device_degenerate():
+    """make_peel_mesh_2d(1) degenerates to a (1, 1) mesh; the staged
+    psum pair is a no-op and θ still matches the single-device csr
+    engine."""
+    out = _run("""
+        import numpy as np
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core.distributed import distributed_wing_decomposition
+        from repro.core.peel import wing_decomposition
+        from repro.launch.mesh import make_peel_mesh_2d
+        mesh2 = make_peel_mesh_2d(1)
+        assert mesh2.devices.shape == (1, 1), mesh2.devices.shape
+        g = powerlaw_bipartite(100, 50, 420, seed=5)
+        theta, stats = distributed_wing_decomposition(
+            g, mesh2, axis=("grp", "loc"), P_parts=6, engine="csr",
+            pair_aligned=True)
+        ref_theta = wing_decomposition(g, P=6, engine="csr").theta
+        assert np.array_equal(theta, ref_theta)
+        assert stats["n_dev"] == 1
+        print("OK")
+    """, n_dev=1)
+    assert "OK" in out
+
+
+def test_hierarchical_cd_512dev_two_staged_allreduces():
+    """Production-mesh shape: make_peel_mesh_2d(512) → 16 groups x 32
+    local devices; the pair-aligned CD round lowers to exactly two
+    staged all-reduces whose replica groups are the 32-wide local rings
+    ({0,...,31}, ...) and the 16-wide cross-group combs ({0,32,64,...})
+    — the same lowering `launch.peel --dryrun` asserts."""
+    out = _run("""
+        import numpy as np, jax
+        import jax.numpy as jnp
+        from repro.core.graph import powerlaw_bipartite
+        from repro.core import csr
+        from repro.core import distributed as D
+        from repro.launch.mesh import make_peel_mesh_2d
+        mesh2 = make_peel_mesh_2d(512)
+        assert mesh2.devices.shape == (16, 32), mesh2.devices.shape
+        g = powerlaw_bipartite(100, 50, 500, seed=1)
+        wed = csr.build_wedges(g)
+        packed = D.shard_wedges_pair_aligned(wed, 512)
+        fn = D.make_cd_round_csr_pair_aligned(
+            mesh2, ("grp", "loc"), packed["Pmax"], g.m)
+        peeled = jnp.zeros((g.m + 1,), bool)
+        sup = jnp.zeros((g.m + 1,), jnp.int32)
+        txt = fn.lower(peeled, jnp.asarray(packed["alive"]),
+                       jnp.asarray(packed["W0"]), sup,
+                       jnp.asarray(packed["we1"]), jnp.asarray(packed["we2"]),
+                       jnp.asarray(packed["wp"])).compile().as_text()
+        n = txt.count("all-reduce(") + txt.count("all-reduce-start(")
+        assert n == 2, n
+        flat = txt.replace(" ", "")
+        assert "{0,1,2,3" in flat, "missing 32-wide local stage"
+        assert "{0,32,64," in flat, "missing 16-wide cross-group stage"
+        print("OK", n)
+    """, n_dev=512)
+    assert "OK" in out

@@ -147,3 +147,67 @@ def test_flash_attention_bf16():
         q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32))
     np.testing.assert_allclose(
         np.asarray(got, dtype=np.float32), np.asarray(want), atol=3e-2)
+
+
+@pytest.mark.parametrize("n_u,n_v,m,seed", [
+    (40, 30, 180, 4), (64, 48, 320, 11), (100, 40, 450, 7),
+])
+@pytest.mark.parametrize("frac", [0.0, 0.2, 1.0])
+@pytest.mark.parametrize("bb", [128, 256])
+def test_bloom_update_interpret_parity_sweep(n_u, n_v, m, seed, frac, bb):
+    """docs/KERNELS.md recipe for bloom_update: interpret-mode kernel vs
+    the pure-jnp oracle across graph shapes, peel fractions (including
+    the peel-none and peel-all edge cases) and block sizes."""
+    g = random_bipartite(n_u, n_v, m, seed=seed)
+    be = build_beindex(g)
+    packed = ops.pack_blooms(be.link_edge, be.link_twin, be.link_bloom, be.nb)
+    nbp = packed["le"].shape[0]
+    rng = np.random.default_rng(seed)
+    peeled = np.zeros(g.m + 1, bool)
+    n_peel = int(g.m * frac)
+    if n_peel:
+        peeled[rng.choice(g.m, size=n_peel, replace=False)] = True
+
+    le = jnp.asarray(packed["le"])
+    lt = jnp.asarray(packed["lt"])
+    sent = g.m
+    pe = jnp.asarray(peeled)[jnp.where(le < 0, sent, le)]
+    pt = jnp.asarray(peeled)[jnp.where(lt < 0, sent, lt)]
+    alive = jnp.asarray(packed["valid"])
+    canon = jnp.asarray(packed["canon"])
+    k_alive = jnp.zeros(nbp, jnp.float32).at[: be.nb].set(
+        jnp.asarray(be.bloom_k.astype(np.float32)))
+    want_contrib, want_c = ref.bloom_update_ref(pe, pt, alive, canon, k_alive)
+    loss, c, new_alive = ops.bloom_update(
+        jnp.asarray(peeled), alive, k_alive, le, lt, canon, bb=bb,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(want_c))
+    want_loss = jax.ops.segment_sum(
+        want_contrib.reshape(-1),
+        jnp.where(le < 0, sent, le).reshape(-1),
+        num_segments=sent + 1,
+    )[:-1]
+    np.testing.assert_allclose(np.asarray(loss), np.asarray(want_loss))
+    # alive-pair update: pairs die exactly when either endpoint peeled
+    want_alive = np.asarray(alive) & ~(np.asarray(alive)
+                                       & (np.asarray(pe) | np.asarray(pt)))
+    np.testing.assert_array_equal(np.asarray(new_alive), want_alive)
+
+
+@pytest.mark.parametrize("sq,sk,d,bq,bk", [
+    (192, 192, 64, 128, 64),   # ragged causal: sq % bq != 0 (padded tail)
+    (128, 256, 64, 64, 128),   # narrow query blocks, wide key blocks
+    (256, 256, 32, 128, 64),   # small head dim
+])
+def test_flash_attention_interpret_parity_block_sweep(sq, sk, d, bq, bk):
+    """docs/KERNELS.md recipe for flash_attention: interpret-mode kernel
+    vs the dense-softmax oracle across block shapes, including the
+    padded-tail causal case where sq is not a block multiple."""
+    q = jax.random.normal(jax.random.PRNGKey(sq + d), (2, 2, sq, d),
+                          jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, sk, d), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, sk, d), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                              interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3)
