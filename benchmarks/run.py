@@ -8,32 +8,48 @@ from __future__ import annotations
 import argparse
 import sys
 
+# registry: declared up front (no heavy imports) so --only can be
+# validated before any module is loaded
+MODULES = ("counting", "wing", "tip", "hierarchy", "serve",
+           "p_sweep", "optimizations", "scaling")
+
+_IMPORTS = dict(
+    counting="counting",
+    wing="wing_decomposition",
+    tip="tip_decomposition",
+    hierarchy="hierarchy",
+    serve="serve",
+    p_sweep="p_sweep",
+    optimizations="optimizations",
+    scaling="scaling",
+)
+
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated module names")
+                    help="comma-separated module names "
+                         f"(choose from: {', '.join(MODULES)})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump rows as a BENCH_*.json artifact")
     args = ap.parse_args()
     small = not args.full
 
-    from . import (counting, hierarchy, optimizations, p_sweep, scaling,
-                   tip_decomposition, wing_decomposition)
-    mods = dict(
-        counting=counting,
-        wing=wing_decomposition,
-        tip=tip_decomposition,
-        hierarchy=hierarchy,
-        p_sweep=p_sweep,
-        optimizations=optimizations,
-        scaling=scaling,
-    )
-    picks = args.only.split(",") if args.only else list(mods)
+    picks = args.only.split(",") if args.only else list(MODULES)
+    unknown = [p for p in picks if p not in MODULES]
+    if unknown:
+        # argparse-style exit 2 with the full menu, instead of a raw
+        # KeyError from deep inside the loop after minutes of work
+        ap.error(f"unknown --only module(s) {', '.join(sorted(unknown))}; "
+                 f"valid names: {', '.join(MODULES)}")
+
+    import importlib
+
     print("name,us_per_call,derived")
     for name in picks:
-        mods[name].run(small=small)
+        mod = importlib.import_module(f".{_IMPORTS[name]}", __package__)
+        mod.run(small=small)
     if args.json:
         from .common import write_bench
 

@@ -1,0 +1,103 @@
+"""Multi-tenant hierarchy serving benchmark (the traffic-scale story).
+
+Rows:
+  * ``serve.mt.t{1,8,64}.q50k`` — 50k mixed-op queries round-robined
+    across 1 / 8 / 64 tenants through :class:`MultiTenantService`,
+    4096-slot dispatches, best-of-2 (first pass pays the one compile
+    per shape bucket; steady-state is what a server sees).  ``qps`` is
+    the headline: cross-tenant slot batching should hold throughput
+    near the single-tenant ``hier.*.query50k`` line instead of
+    dividing it by tenant count.
+  * ``serve.load.miss`` — cold tenant admission: versioned npz off
+    disk into a free pool slot (v2 artifacts carry the pack cache, so
+    this is pure array reads — no O(n) host walk, no retrace).
+  * ``serve.load.hit``  — resident-tenant ``ensure``: the LRU-touch
+    fast path.
+
+Tenants are small powerlaw graphs spread over two shape buckets (the
+mixed-bucket case is the expensive one: one dispatch per bucket per
+chunk).  64 tenant artifacts cycle 8 distinct decompositions — build
+cost is not what this module measures.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.graph import powerlaw_bipartite
+from repro.core.peel import wing_decomposition
+from repro.hierarchy import (ForestPool, MultiTenantService, build_hierarchy,
+                             save_hierarchy)
+from repro.hierarchy.serve import OPS
+
+from .common import emit, timed
+
+N_QUERIES = 50_000
+BATCH = 4096
+N_TENANTS = 64
+DISTINCT = 8
+
+
+def _artifacts(d):
+    hs = []
+    for i in range(DISTINCT):
+        nu, nv, m = (60, 40, 200) if i % 4 == 3 else (120, 80, 420)
+        g = powerlaw_bipartite(nu, nv, m, seed=i)
+        hs.append(build_hierarchy(g, wing_decomposition(g, P=4,
+                                                        engine="csr")))
+    names = [f"t{t:02d}" for t in range(N_TENANTS)]
+    for t, name in enumerate(names):
+        save_hierarchy(os.path.join(d, f"{name}.npz"), hs[t % DISTINCT])
+    return names
+
+
+def _workload(pool, tenants, n, seed=0):
+    rng = np.random.default_rng(seed)
+    t_col = [tenants[i % len(tenants)] for i in range(n)]
+    ops = rng.integers(0, 5, n).astype(np.int32)
+    a = np.zeros(n, np.int32)
+    b = np.zeros(n, np.int32)
+    sub = OPS["subtree_size"]
+    for i, t in enumerate(t_col):
+        m = pool.meta[t]
+        a[i] = rng.integers(0, m.n_nodes if ops[i] == sub else m.n_entities)
+        b[i] = rng.integers(0, m.n_entities)
+    return t_col, ops, a, b
+
+
+def run(small: bool = True):
+    with tempfile.TemporaryDirectory(prefix="bench_serve_") as d:
+        names = _artifacts(d)
+
+        for n_t in (1, 8, 64):
+            pool = ForestPool(slots=N_TENANTS, artifact_dir=d)
+            svc = MultiTenantService(pool, batch=BATCH)
+            active = names[:n_t]
+            for t in active:
+                pool.ensure(t)
+            tenants, ops, a, b = _workload(pool, active, N_QUERIES)
+            _, t_q = timed(svc.query_batch, tenants, ops, a, b,
+                           repeat=2)  # best-of-2 excludes per-bucket compile
+            qps = N_QUERIES / max(t_q, 1e-9)
+            emit(f"serve.mt.t{n_t}.q50k", t_q,
+                 qps=int(qps), batch=BATCH, n_queries=N_QUERIES,
+                 buckets=len(pool.buckets), dispatches=svc.dispatches // 2)
+
+        # load latency: admission path (cold, off disk) vs LRU-touch (hot)
+        pool = ForestPool(slots=N_TENANTS, artifact_dir=d)
+        probe = names[:16]
+        t0 = time.perf_counter()
+        for t in probe:
+            pool.ensure(t)
+        t_miss = (time.perf_counter() - t0) / len(probe)
+        emit("serve.load.miss", t_miss,
+             n_loads=len(probe), format_version=2, pack_cache="v2")
+        _, t_hit = timed(pool.ensure, probe[0], repeat=3)
+        emit("serve.load.hit", t_hit, **pool.stats())
+
+
+if __name__ == "__main__":
+    run(small=False)

@@ -12,11 +12,18 @@ k-wing nuclei) and serves it:
   serve forever.
 * :mod:`serve`     — :class:`HierarchyService`, a batched query engine
   answering vmapped mixed-op batches from device-resident arrays.
+* :mod:`pool`      — :class:`ForestPool`, many tenants' forests stacked
+  into shape-bucketed batched arrays behind an LRU artifact cache.
+* :mod:`multiserve` — :class:`MultiTenantService`, cross-tenant
+  slot-batched mixed-op serving: one jitted dispatch per shape bucket.
 """
 from .build import Hierarchy, build_hierarchy
+from .multiserve import MTQuery, MultiTenantService
+from .pool import ForestPool, PoolFull
 from .query import (
     PackedForest,
     density_profile,
+    depth_and_up,
     lca_entities,
     lca_nodes,
     max_k_containing,
@@ -46,4 +53,9 @@ __all__ = [
     "HierarchyService",
     "HQuery",
     "OPS",
+    "depth_and_up",
+    "ForestPool",
+    "PoolFull",
+    "MTQuery",
+    "MultiTenantService",
 ]

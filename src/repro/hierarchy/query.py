@@ -29,6 +29,8 @@ from .build import Hierarchy
 
 __all__ = [
     "PackedForest",
+    "depth_and_up",
+    "extend_up",
     "pack_forest",
     "max_k_containing",
     "node_of",
@@ -58,18 +60,49 @@ class PackedForest:
     up: jax.Array             # (n_nodes, J) int32 — 2^j-th ancestors
 
 
-def pack_forest(h: Hierarchy) -> PackedForest:
-    """Host → device packing; also materializes depth + lifting table."""
-    n = h.n_nodes
+def depth_and_up(parent: np.ndarray, J: int = 0):
+    """Host-side depth vector + binary-lifting table from ``parent``.
+
+    ``up[:, j]`` is the ``2^j``-th ancestor (the root lifts to itself).
+    ``J`` widens the table to at least that many levels — extra levels
+    are identity columns past the root, so any ``J`` ≥ the minimum is
+    answer-equivalent (the pool pads all tenants of a shape bucket to
+    the bucket's static ``J``).  Returns ``(depth, up)``.
+    """
+    n = int(parent.shape[0])
     depth = np.zeros(n, dtype=np.int32)
     for x in range(1, n):                      # parent[x] < x always
-        depth[x] = depth[h.parent[x]] + 1
+        depth[x] = depth[parent[x]] + 1
     max_depth = int(depth.max()) if n else 0
-    J = max(1, int(np.ceil(np.log2(max_depth + 1))) if max_depth else 1)
+    J = max(1, J, int(np.ceil(np.log2(max_depth + 1))) if max_depth else 1)
     up = np.zeros((n, J), dtype=np.int32)
-    up[:, 0] = np.maximum(h.parent, 0)         # root lifts to itself
+    up[:, 0] = np.maximum(parent, 0)           # root lifts to itself
     for j in range(1, J):
         up[:, j] = up[up[:, j - 1], j - 1]
+    return depth, up
+
+
+def extend_up(up: np.ndarray, J: int) -> np.ndarray:
+    """Widen a lifting table to ``J`` levels by repeated squaring —
+    lets a v2 artifact's stored table serve a pool bucket whose static
+    ``J`` exceeds the tenant's own depth."""
+    cols = [up[:, j] for j in range(up.shape[1])]
+    while len(cols) < J:
+        prev = cols[-1]
+        cols.append(prev[prev])
+    return np.stack(cols[:max(J, 1)], axis=1).astype(np.int32)
+
+
+def pack_forest(h: Hierarchy) -> PackedForest:
+    """Host → device packing; also materializes depth + lifting table
+    (reused from the artifact's pack cache when a v2 file carried
+    one — cold loads then skip the O(n) host walk)."""
+    n = h.n_nodes
+    depth = np.asarray(h.meta.get("pack_depth", ()), dtype=np.int32)
+    up = np.asarray(h.meta.get("pack_up", ()), dtype=np.int32)
+    if depth.shape != (n,) or up.ndim != 2 or up.shape[0] != n:
+        depth, up = depth_and_up(h.parent)
+    J = up.shape[1]
     # entity-less hierarchies still pack (node-arg queries remain
     # valid); a single root-pointing sentinel slot keeps the jitted
     # *gathers* (theta[a], entity_node[a]) well-formed — entity queries

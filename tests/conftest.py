@@ -5,7 +5,13 @@ containers) the suite must still *collect* — property tests are skipped
 instead of erroring at import.  We register a tiny stand-in module whose
 ``@given`` marks the test skipped; strategy calls return placeholders
 that are never executed.
+
+With hypothesis installed, two profiles are registered: the default
+stays at hypothesis's stock budget (push CI), and ``nightly`` runs a
+10x example budget with no deadline — CI's scheduled slow tier selects
+it via ``HYPOTHESIS_PROFILE=nightly``.
 """
+import os
 import sys
 import types
 
@@ -13,6 +19,12 @@ import pytest
 
 try:
     import hypothesis  # noqa: F401 — probe only
+
+    hypothesis.settings.register_profile(
+        "nightly", max_examples=1000, deadline=None)
+    hypothesis.settings.register_profile("default", hypothesis.settings())
+    hypothesis.settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "default"))
 except ImportError:  # pragma: no cover - exercised on minimal containers
 
     def _identity_decorator(*_a, **_k):

@@ -1,8 +1,11 @@
 #!/usr/bin/env python
 """Docs lint: every module path named in the layout tables of
-docs/ARCHITECTURE.md and docs/KERNELS.md must exist on disk, so the
-paper-to-code map can't silently rot.  Run directly (CI) — exits 1
-listing any stale references."""
+docs/ARCHITECTURE.md and docs/KERNELS.md must exist on disk, and every
+CLI flag quoted in README/docs must exist in an argparse definition
+under ``src/repro/launch/`` or ``benchmarks/`` — so the paper-to-code
+map and the documented invocations can't silently rot.  Run directly
+(CI) — exits 1 listing any stale references."""
+import glob
 import os
 import re
 import sys
@@ -25,7 +28,39 @@ for doc in ("docs/ARCHITECTURE.md", "docs/KERNELS.md"):
             continue
         missing.append(f"{doc}: `{ref}`")
 
+# ---------------------------------------------------------------- CLI flags
+# every --flag defined anywhere in the launchers / bench harness; a
+# documented --foo is also satisfied by a BooleanOptionalAction --no-foo
+defined = set()
+for src in glob.glob(os.path.join(ROOT, "src/repro/launch/*.py")) + \
+        glob.glob(os.path.join(ROOT, "benchmarks/*.py")):
+    for m in re.finditer(
+            r'add_argument\(\s*"(--[\w-]+)"(?:\s*,\s*"(--[\w-]+)")?',
+            open(src).read()):
+        for flag in m.groups():
+            if flag:
+                defined.add(flag)
+defined |= {f"--no-{f[2:]}" for f in tuple(defined)}
+
+def _code_spans(md):
+    """Inline backtick spans + fenced code blocks — the only places a
+    flag is a *claimed invocation* (link anchors like #phase-1--cd
+    merely look like flags and are skipped by construction)."""
+    fences = re.findall(r"```.*?```", md, flags=re.S)
+    inline = re.findall(r"`[^`\n]+`", md)
+    return "\n".join(fences + inline)
+
+docs = [os.path.join(ROOT, "README.md")] + sorted(
+    glob.glob(os.path.join(ROOT, "docs", "*.md")))
+for doc in docs:
+    code = _code_spans(open(doc).read())
+    for flag in sorted(set(re.findall(r"(?<![\w-])--[a-z][\w-]*", code))):
+        if flag not in defined:
+            missing.append(
+                f"{os.path.relpath(doc, ROOT)}: flag `{flag}` not defined "
+                "by any src/repro/launch/ or benchmarks/ argparse")
+
 if missing:
-    print("stale module references in docs:", *sorted(missing), sep="\n  ")
+    print("stale references in docs:", *sorted(missing), sep="\n  ")
     sys.exit(1)
 print("docs lint OK")

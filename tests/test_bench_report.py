@@ -107,3 +107,20 @@ def test_ab_tip_scaling_pair():
 def test_bench_table_missing_file():
     report = _load_report()
     assert "not found" in report.bench_table(["/nonexistent/BENCH.json"])
+
+
+def test_run_only_unknown_module_exits_with_menu(capsys, monkeypatch):
+    """--only with a typo must die up front (exit 2) listing every
+    valid module name — not minutes later with a raw KeyError."""
+    from benchmarks import run as bench_run
+
+    monkeypatch.setattr(
+        sys, "argv", ["run.py", "--only", "hierachy,serve,bogus"])
+    with pytest.raises(SystemExit) as e:
+        bench_run.main()
+    assert e.value.code == 2
+    err = capsys.readouterr().err
+    assert "bogus" in err and "hierachy" in err
+    for name in bench_run.MODULES:
+        assert name in err          # the menu names every module
+    assert "serve" in bench_run.MODULES

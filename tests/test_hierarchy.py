@@ -264,12 +264,15 @@ def test_serialize_version_guard():
     h = build_hierarchy(g, wing_decomposition(g, P=2, engine="csr"))
     buf = io.BytesIO()
     import repro.hierarchy.serialize as S
-    old = S.FORMAT_VERSION
+    old_ver, old_sup = S.FORMAT_VERSION, S._SUPPORTED_VERSIONS
     try:
+        # simulate a FUTURE build writing a layout this one never heard
+        # of; the loader (restored constants) must refuse it
         S.FORMAT_VERSION = 99
-        save_hierarchy(buf, h)
+        S._SUPPORTED_VERSIONS = old_sup + (99,)
+        save_hierarchy(buf, h, version=99)
     finally:
-        S.FORMAT_VERSION = old
+        S.FORMAT_VERSION, S._SUPPORTED_VERSIONS = old_ver, old_sup
     buf.seek(0)
     with pytest.raises(ValueError, match="format"):
         load_hierarchy(buf)
