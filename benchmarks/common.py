@@ -1,4 +1,19 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Timing rows ride in ``ROWS`` (``emit`` / ``write_bench``); latency
+*distributions* go through :func:`emit_latency`, which records exact
+p50/p99 over the raw samples (``repro.obs.percentiles``) and emits the
+p99 as the row's gated value — tail latency is what a serving SLO is
+stated on, so ``compare.py`` gates it like any other hot row (rows
+carry ``gate: true`` to stay gated below the ``--min-us`` floor).
+
+Per-row *telemetry* (cache counters, dispatch histograms, peel
+timelines) rides in a separate ``TELEMETRY`` channel —
+``note_telemetry`` + ``write_telemetry`` — so the BENCH_*.json schema
+the regression gate parses stays pure timings.  The observability
+layer itself stays OFF during timed sections: telemetry here is
+read from metric registries after the clock stops.
+"""
 from __future__ import annotations
 
 import json
@@ -6,9 +21,10 @@ import os
 import platform
 import subprocess
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, Iterable, List
 
 ROWS: List[Dict] = []
+TELEMETRY: Dict[str, Dict] = {}
 
 
 def source_sha() -> str:
@@ -46,6 +62,41 @@ def emit(name: str, seconds: float, **derived):
     ROWS.append(dict(name=name, us_per_call=seconds * 1e6, **derived))
     extra = " ".join(f"{k}={v}" for k, v in derived.items())
     print(f"{name},{seconds * 1e6:.1f},{extra}", flush=True)
+
+
+def emit_latency(name: str, samples: Iterable[float], gate: bool = True,
+                 **derived):
+    """Emit a latency-distribution row from raw per-call seconds.
+
+    ``us_per_call`` is the exact p99 (the SLO number — gate the tail,
+    not the mean); p50/p99/count ride as derived fields.  ``gate=True``
+    marks the row for ``compare.py`` to gate even below its
+    ``--min-us`` hot floor (percentiles over many samples are stable
+    where single sub-floor timings are noise)."""
+    from repro.obs import percentiles
+
+    arr = [float(s) for s in samples]
+    ps = percentiles(arr, ps=(50.0, 99.0))
+    emit(name, ps["p99"], gate=bool(gate),
+         p50_us=ps["p50"] * 1e6, p99_us=ps["p99"] * 1e6,
+         n_samples=len(arr), **derived)
+
+
+def note_telemetry(name: str, payload: Dict) -> None:
+    """Attach a JSON-able telemetry blob (metrics snapshot, timeline
+    summary) to bench row ``name``; written by :func:`write_telemetry`,
+    never parsed by the regression gate."""
+    TELEMETRY[name] = payload
+
+
+def write_telemetry(path: str) -> None:
+    """Dump the per-row telemetry channel next to the BENCH json (CI
+    uploads both under the same artifact)."""
+    with open(path, "w") as f:
+        json.dump(dict(schema=1, source_sha=source_sha(),
+                       telemetry=TELEMETRY), f, indent=1)
+    print(f"[bench] wrote telemetry for {len(TELEMETRY)} rows -> {path}",
+          flush=True)
 
 
 def write_bench(path: str) -> None:

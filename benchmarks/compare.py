@@ -11,7 +11,10 @@ allocator noise, so both sides of the gate are **best-of-N across
 processes**: pass several fresh JSONs (CI runs the smoke bench three
 times) and the per-row minimum is compared; the committed baseline is
 itself a min-merge.  New rows are reported but never fail the gate;
-missing hot rows do.
+missing hot rows do.  Baseline rows flagged ``gate: true`` (latency
+percentiles from ``common.emit_latency``, e.g. ``serve.p99.t8``) are
+gated even below the hot floor — a tail SLO stated over many samples
+is stable where a single sub-floor timing is noise.
 
 A hot baseline row missing from the fresh output also fails the gate —
 renaming or dropping a benchmark must go through a baseline refresh, or
@@ -45,6 +48,16 @@ def load_rows(path: str) -> dict:
     with open(path) as f:
         payload = json.load(f)
     return {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+
+
+def load_gates(path: str) -> set:
+    """Names of baseline rows carrying ``gate: true`` — latency-SLO rows
+    (``common.emit_latency``) that must stay gated even below the
+    ``--min-us`` hot floor: a p99 over many samples is stable where a
+    single sub-floor timing is noise."""
+    with open(path) as f:
+        payload = json.load(f)
+    return {r["name"] for r in payload["rows"] if r.get("gate")}
 
 
 def check_provenance(path: str) -> None:
@@ -96,12 +109,13 @@ def min_merge(paths, normalize: str = "", with_src: bool = False):
 
 def compare(
     baseline: dict, new: dict, threshold: float, min_us: float,
-    normalize: str = "",
+    normalize: str = "", gated: set = frozenset(),
 ) -> int:
     """``new`` rows must already be in normalizer units when
     ``normalize`` is set (see :func:`min_merge`); the baseline converts
     here with its OWN normalizer row.  Hotness (``min_us``) always
-    checks the baseline's raw microseconds."""
+    checks the baseline's raw microseconds; rows in ``gated`` (baseline
+    rows flagged ``gate: true``) are hot regardless of the floor."""
     base_norm = 1.0
     if normalize:
         if normalize not in baseline:
@@ -116,7 +130,7 @@ def compare(
     for name in sorted(baseline):
         base = baseline[name]
         if name not in new:
-            hot = base >= min_us
+            hot = base >= min_us or name in gated
             flag = "  << MISSING HOT ROW" if hot else ""
             print(f"{name:<{width}}  {base:>12.1f}  {'MISSING':>12}  "
                   f"{'—':>6}{flag}")
@@ -125,13 +139,15 @@ def compare(
             continue
         cur = new[name] * base_norm if normalize else new[name]
         ratio = cur / max(base, 1e-9)
-        hot = base >= min_us
+        hot = base >= min_us or name in gated
         flag = ""
         if hot and ratio > threshold:
             flag = "  << REGRESSION"
             regressions.append((name, base, cur, ratio))
         elif not hot:
             flag = "  (cold: skipped)"
+        elif base < min_us:
+            flag = "  (gated: latency SLO)"
         print(f"{name:<{width}}  {base:>12.1f}  {cur:>12.1f}  "
               f"{ratio:>6.2f}{flag}")
     for name in sorted(set(new) - set(baseline)):
@@ -205,6 +221,7 @@ def main() -> int:
     return compare(
         load_rows(args.baseline), min_merge(args.new, args.normalize),
         args.threshold, args.min_us, args.normalize,
+        gated=load_gates(args.baseline),
     )
 
 

@@ -33,6 +33,11 @@ def main() -> int:
                          f"(choose from: {', '.join(MODULES)})")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump rows as a BENCH_*.json artifact")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="dump the per-row telemetry channel (metrics "
+                         "snapshots noted by bench modules) as JSON — "
+                         "separate from --json so the regression gate's "
+                         "schema stays pure timings")
     args = ap.parse_args()
     small = not args.full
 
@@ -54,6 +59,10 @@ def main() -> int:
         from .common import write_bench
 
         write_bench(args.json)
+    if args.telemetry:
+        from .common import write_telemetry
+
+        write_telemetry(args.telemetry)
     return 0
 
 

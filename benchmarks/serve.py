@@ -8,11 +8,22 @@ Rows:
     the headline: cross-tenant slot batching should hold throughput
     near the single-tenant ``hier.*.query50k`` line instead of
     dividing it by tenant count.
+  * ``serve.p99.t8`` — tail latency: per-dispatch-chunk wall time over
+    the 8-tenant workload, emitted as exact p99 (p50 rides as a derived
+    field) with ``gate: true`` so ``compare.py`` gates the tail even
+    below its hot-row floor.  A serving SLO is a percentile, not a
+    mean — the qps rows above can hold steady while p99 regresses.
   * ``serve.load.miss`` — cold tenant admission: versioned npz off
     disk into a free pool slot (v2 artifacts carry the pack cache, so
     this is pure array reads — no O(n) host walk, no retrace).
   * ``serve.load.hit``  — resident-tenant ``ensure``: the LRU-touch
     fast path.
+  * ``serve.admit.slot`` / ``serve.admit.bucket`` — admission A/B:
+    per-slot ``dynamic_update_slice`` upload into a device-resident
+    bucket vs dirtying the bucket and re-uploading the whole stack on
+    the next dispatch.  Timed as admit + device-visible; the pool's
+    ``pool.admission_upload_ms`` / ``pool.bucket_upload_ms`` metrics
+    ride in the telemetry channel as the proof.
 
 Tenants are small powerlaw graphs spread over two shape buckets (the
 mixed-bucket case is the expensive one: one dispatch per bucket per
@@ -33,7 +44,7 @@ from repro.hierarchy import (ForestPool, MultiTenantService, build_hierarchy,
                              save_hierarchy)
 from repro.hierarchy.serve import OPS
 
-from .common import emit, timed
+from .common import emit, emit_latency, note_telemetry, timed
 
 N_QUERIES = 50_000
 BATCH = 4096
@@ -82,9 +93,31 @@ def run(small: bool = True):
             _, t_q = timed(svc.query_batch, tenants, ops, a, b,
                            repeat=2)  # best-of-2 excludes per-bucket compile
             qps = N_QUERIES / max(t_q, 1e-9)
-            emit(f"serve.mt.t{n_t}.q50k", t_q,
+            row = f"serve.mt.t{n_t}.q50k"
+            emit(row, t_q,
                  qps=int(qps), batch=BATCH, n_queries=N_QUERIES,
                  buckets=len(pool.buckets), dispatches=svc.dispatches // 2)
+            note_telemetry(row, svc.metrics.snapshot())
+
+        # tail latency: per-dispatch-chunk samples over the 8-tenant mix
+        # (compiles already paid above would pollute the distribution, so
+        # a fresh pool warms once before sampling)
+        pool = ForestPool(slots=N_TENANTS, artifact_dir=d)
+        svc = MultiTenantService(pool, batch=BATCH)
+        active = names[:8]
+        for t in active:
+            pool.ensure(t)
+        tenants, ops, a, b = _workload(pool, active, N_QUERIES, seed=1)
+        svc.query_batch(tenants[:BATCH], ops[:BATCH], a[:BATCH], b[:BATCH])
+        samples = []
+        for lo in range(0, N_QUERIES, BATCH):
+            hi = min(lo + BATCH, N_QUERIES)
+            t0 = time.perf_counter()
+            svc.query_batch(tenants[lo:hi], ops[lo:hi], a[lo:hi], b[lo:hi])
+            samples.append(time.perf_counter() - t0)
+        emit_latency("serve.p99.t8", samples, gate=True,
+                     batch=BATCH, n_tenants=8)
+        note_telemetry("serve.p99.t8", svc.metrics.snapshot())
 
         # load latency: admission path (cold, off disk) vs LRU-touch (hot)
         pool = ForestPool(slots=N_TENANTS, artifact_dir=d)
@@ -97,6 +130,34 @@ def run(small: bool = True):
              n_loads=len(probe), format_version=2, pack_cache="v2")
         _, t_hit = timed(pool.ensure, probe[0], repeat=3)
         emit("serve.load.hit", t_hit, **pool.stats())
+
+        # admission A/B: per-slot dynamic_update_slice vs whole-bucket
+        # re-upload.  Both sides time admit + device-visible (the bucket
+        # must be device-resident before admission for the slot path to
+        # exercise the in-place update; `evict` then frees the slot for
+        # the next admission without touching device arrays)
+        from repro.hierarchy.serialize import load_hierarchy
+
+        probe_h = load_hierarchy(os.path.join(d, f"{names[16]}.npz"))
+        for mode, slot_upload in (("slot", True), ("bucket", False)):
+            pool = ForestPool(slots=N_TENANTS, artifact_dir=d,
+                              slot_upload=slot_upload)
+            for t in names[:8]:
+                pool.ensure(t)
+            for key in list(pool.buckets):
+                pool.bucket_arrays(key)       # device-resident baseline
+
+            def _admit_cycle():
+                pool.add("probe", probe_h)
+                for key in list(pool.buckets):
+                    pool.bucket_arrays(key)   # pay any dirty re-upload
+                pool.evict("probe")
+
+            _admit_cycle()                    # claim/grow once, off-clock
+            _, t_admit = timed(_admit_cycle, repeat=5)
+            emit(f"serve.admit.{mode}", t_admit,
+                 slot_upload=slot_upload, warm_tenants=8)
+            note_telemetry(f"serve.admit.{mode}", pool.metrics.snapshot())
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ multi-device tests (spawned with forced host device counts).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import partial, wraps
 from typing import Optional, Tuple
 
 import jax
@@ -37,6 +37,7 @@ from ..sharding.compat import shard_map
 from . import csr
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
+from .. import obs
 from .peelspec import (
     FixedTarget,
     PeelResult,
@@ -1104,6 +1105,46 @@ def _finish(theta, part, ranges, sup_init, stats, extras, return_result):
     return theta, stats_out, result
 
 
+def _record_fd_sharded(n_parts: int, rounds) -> None:
+    """Record a sharded FD launch's per-partition round counts into the
+    active timeline collector (per-round rings don't cross the
+    ``shard_map`` boundary; totals stay exact)."""
+    col = obs.active_collector()
+    if col is not None and n_parts:
+        r = np.asarray(rounds).reshape(-1)[:n_parts]
+        col.record_fd_counts(
+            "sharded", list(range(n_parts)),
+            r.astype(np.int64).tolist())
+
+
+def _with_obs(kind: str):
+    """Wrap a distributed decomposition entry with the observability
+    collector: a ``peel``-cat span around the run, a timeline built from
+    the collector (CD rounds recorded live by ``cd_loop``; FD round
+    counts recorded by the sharded/vmapped FD sections), its trace
+    events, and attachment to the returned stats dict / PeelResult.
+    With the obs layer off this adds one ``is None`` check."""
+    def deco(fn):
+        @wraps(fn)
+        def wrapper(*args, **kwargs):
+            with obs.maybe_collect() as col:
+                with obs.span(f"peel.{fn.__name__}", cat="peel",
+                              kind=kind):
+                    out = fn(*args, **kwargs)
+            if col is not None:
+                tl = col.build()
+                tracer = obs.get_tracer()
+                if tracer is not None:
+                    tl.emit_trace_events(tracer)
+                out[1]["timeline"] = tl.summary()
+                if len(out) == 3:
+                    out[2].timeline = tl
+            return out
+        return wrapper
+    return deco
+
+
+@_with_obs("wing")
 def distributed_wing_decomposition(
     g: BipartiteGraph,
     mesh: Mesh,
@@ -1203,16 +1244,21 @@ def distributed_wing_decomposition(
         workload=lambda s: np.maximum(s, 1), est=lambda s: s,
         cd_step=step,
     )
-    part, sup_init, ranges, n_parts = cd_loop(
-        spec, P_parts, stats,
-        target=FixedTarget(float(sup0.sum()), P_parts))
+    with obs.span("cd", cat="cd"):
+        part, sup_init, ranges, n_parts = cd_loop(
+            spec, P_parts, stats,
+            target=FixedTarget(float(sup0.sum()), P_parts))
 
-    packed = pack_fd_partitions(g, be, part, sup_init, n_parts)
-    theta_loc, rounds = fd_peel_sharded(packed, mesh, axis)
+    with obs.span("fd", cat="fd", driver="sharded") as sp:
+        packed = pack_fd_partitions(g, be, part, sup_init, n_parts)
+        theta_loc, rounds = fd_peel_sharded(packed, mesh, axis)
+        if sp is not None:
+            sp.update(rounds=int(rounds.sum()))
     theta = np.zeros(m, dtype=np.int64)
     _scatter_theta(theta, packed, theta_loc, n_parts)
     stats.rho_fd_total = int(rounds.sum())
     stats.rho_fd_max = int(rounds.max()) if rounds.size else 0
+    _record_fd_sharded(n_parts, rounds)
     return _finish(
         theta, part, ranges, sup_init, stats,
         dict(n_parts=n_parts, n_links=be.n_links, n_dev=int(n_dev)),
@@ -1272,16 +1318,21 @@ def _distributed_wing_csr(
         workload=lambda s: np.maximum(s, 1), est=lambda s: s,
         cd_step=step,
     )
-    part, sup_init, ranges, n_parts = cd_loop(
-        spec, P_parts, stats,
-        target=FixedTarget(float(sup0_np.sum()), P_parts))
+    with obs.span("cd", cat="cd"):
+        part, sup_init, ranges, n_parts = cd_loop(
+            spec, P_parts, stats,
+            target=FixedTarget(float(sup0_np.sum()), P_parts))
 
-    packed = pack_fd_partitions_csr(wed, part, sup_init, n_parts)
-    theta_loc, rounds = fd_peel_sharded_csr(packed, mesh, axis)
+    with obs.span("fd", cat="fd", driver="sharded") as sp:
+        packed = pack_fd_partitions_csr(wed, part, sup_init, n_parts)
+        theta_loc, rounds = fd_peel_sharded_csr(packed, mesh, axis)
+        if sp is not None:
+            sp.update(rounds=int(rounds.sum()))
     theta = np.zeros(m, dtype=np.int64)
     _scatter_theta(theta, packed, theta_loc, n_parts)
     stats.rho_fd_total = int(rounds.sum())
     stats.rho_fd_max = int(rounds.max()) if rounds.size else 0
+    _record_fd_sharded(n_parts, rounds)
     return _finish(
         theta, part, ranges, sup_init, stats,
         dict(cd_sharding="pair_aligned" if pair_aligned else "wedge",
@@ -1344,6 +1395,7 @@ def _tip_fd_kernel(A_i, mine, sup0):
     return theta, rounds
 
 
+@_with_obs("tip")
 def distributed_tip_decomposition(
     g: BipartiteGraph,
     mesh: Mesh,
@@ -1443,22 +1495,29 @@ def _distributed_tip_csr(
         est=lambda s: wedge_w,
         cd_step=step,
     )
-    part, sup_init, ranges, n_parts = cd_loop(
-        spec, P_parts, stats,
-        target=FixedTarget(float(wedge_w.sum()), P_parts))
+    with obs.span("cd", cat="cd"):
+        part, sup_init, ranges, n_parts = cd_loop(
+            spec, P_parts, stats,
+            target=FixedTarget(float(wedge_w.sum()), P_parts))
 
     theta = np.zeros(n, dtype=np.int64)
     if n_parts:
-        if fd_driver == "vmapped":
-            from .peel import _tip_fd_vmapped_csr
+        with obs.span("fd", cat="fd", driver=fd_driver) as sp:
+            if fd_driver == "vmapped":
+                from .peel import _tip_fd_vmapped_csr
 
-            rounds = _tip_fd_vmapped_csr(
-                wed, pair_bf0, part, sup_init, theta, n_parts)
-        else:
-            packed = pack_fd_partitions_tip_csr(
-                wed, pair_bf0, part, sup_init, n_parts, stacked=True)
-            theta_loc, rounds = fd_peel_sharded_tip_csr(packed, mesh, axis)
-            _scatter_theta(theta, packed, theta_loc, n_parts)
+                # the vmapped wrapper drains its own counter rings
+                rounds = _tip_fd_vmapped_csr(
+                    wed, pair_bf0, part, sup_init, theta, n_parts)
+            else:
+                packed = pack_fd_partitions_tip_csr(
+                    wed, pair_bf0, part, sup_init, n_parts, stacked=True)
+                theta_loc, rounds = fd_peel_sharded_tip_csr(
+                    packed, mesh, axis)
+                _scatter_theta(theta, packed, theta_loc, n_parts)
+                _record_fd_sharded(n_parts, rounds)
+            if sp is not None:
+                sp.update(rounds=int(np.asarray(rounds).sum()))
         stats.rho_fd_total = int(np.asarray(rounds).sum())
         stats.rho_fd_max = int(np.asarray(rounds).max())
     return _finish(
@@ -1509,9 +1568,10 @@ def _distributed_tip_dense(
         est=lambda s: wedge_w,
         cd_step=step,
     )
-    part, sup_init, ranges, n_parts = cd_loop(
-        spec, P_parts, stats,
-        target=FixedTarget(float(wedge_w.sum()), P_parts))
+    with obs.span("cd", cat="cd"):
+        part, sup_init, ranges, n_parts = cd_loop(
+            spec, P_parts, stats,
+            target=FixedTarget(float(wedge_w.sum()), P_parts))
 
     # ---- FD: stack padded partitions, shard over devices
     rows_per = [np.where(part == i)[0] for i in range(n_parts)]
@@ -1532,14 +1592,18 @@ def _distributed_tip_dense(
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis)),
     )
-    theta_st, rounds = jax.jit(fd)(
-        jnp.asarray(A_st), jnp.asarray(mine), jnp.asarray(sup_st))
+    with obs.span("fd", cat="fd", driver="sharded") as sp:
+        theta_st, rounds = jax.jit(fd)(
+            jnp.asarray(A_st), jnp.asarray(mine), jnp.asarray(sup_st))
+        if sp is not None:
+            sp.update(rounds=int(np.asarray(rounds)[:n_parts].sum()))
     theta_st = np.asarray(theta_st).astype(np.int64)
     theta = np.zeros(n, np.int64)
     _scatter_theta(theta, dict(mine=mine, gids=gids), theta_st, n_parts)
     rounds = np.asarray(rounds)[:n_parts]
     stats.rho_fd_total = int(rounds.sum())
     stats.rho_fd_max = int(rounds.max()) if n_parts else 0
+    _record_fd_sharded(n_parts, rounds)
     return _finish(
         theta, part, ranges, sup_init, stats,
         dict(n_parts=n_parts, n_dev=n_dev),

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import counting, csr
+from .. import obs
 from .beindex import BEIndex, build_beindex
 from .graph import BipartiteGraph
 from .peelspec import (  # noqa: F401 — canonical home is peelspec; kept
@@ -75,6 +76,26 @@ __all__ = [
 # =====================================================================
 # Entity-specific single-dispatch (vmapped) FD bodies
 # =====================================================================
+# Each body's ``update`` rule lives in a ``*_update`` builder shared by
+# the default entry and its ``*_rings`` telemetry twin (a separate jit
+# entry with a static ``ring_cap``), so the peeling algebra exists once
+# while the default entry's jaxpr stays byte-identical to the
+# pre-instrumentation tree (tests/goldens/obs_jaxprs.json).
+
+def _tip_vmapped_update(pag, pbg, bff, B, Emax):
+    def update(S, aux):
+        Sf = S.reshape(-1)
+        loss = (
+            jax.ops.segment_sum(
+                jnp.where(Sf[pbg], bff, 0), pag, num_segments=B * Emax)
+            + jax.ops.segment_sum(
+                jnp.where(Sf[pag], bff, 0), pbg, num_segments=B * Emax)
+        ).reshape(B, Emax)
+        return loss, aux, jnp.int32(0)
+
+    return update
+
+
 @jax.jit
 def _fd_tip_vmapped(
     pag: jax.Array,      # (W,) int32 — globalized pair endpoints b·Emax+u
@@ -91,42 +112,20 @@ def _fd_tip_vmapped(
     ``segment_sum`` pass per round covers every partition.  Padding
     pairs carry bf=0 and are algebra-neutral."""
     B, Emax = mine.shape
-
-    def update(S, aux):
-        Sf = S.reshape(-1)
-        loss = (
-            jax.ops.segment_sum(
-                jnp.where(Sf[pbg], bff, 0), pag, num_segments=B * Emax)
-            + jax.ops.segment_sum(
-                jnp.where(Sf[pag], bff, 0), pbg, num_segments=B * Emax)
-        ).reshape(B, Emax)
-        return loss, aux, jnp.int32(0)
-
+    update = _tip_vmapped_update(pag, pbg, bff, B, Emax)
     return _fd_while_vmapped(mine, sup0, update, jnp.int32(0))
 
 
-@partial(jax.jit, static_argnames=("n_pairs",))
-def _fd_wing_vmapped(
-    e1g: jax.Array,      # (W,) int32 — globalized edge ids b·(Emax+1)+e
-    e2g: jax.Array,
-    wpg: jax.Array,      # (W,) int32 — globalized pair ids (dead pad → n_pairs-ish slot)
-    alive0: jax.Array,   # (W,) bool — wedges touching their partition
-    W0: jax.Array,       # (n_pairs,) int32 — alive ≥i wedges per pair
-    mine: jax.Array,     # (B, E) bool
-    sup0: jax.Array,     # (B, E) int32
-    n_pairs: int,
-):
-    """All wing-FD partitions in a single while_loop (one dispatch).
-
-    The per-round update is :func:`csr.wing_loss_csr`'s widow/survivor
-    algebra over the ragged-CONCATENATED wedge lists: the partition axis
-    is folded into pre-globalized segment ids (partition b's edge e →
-    segment b·(Emax+1)+e), so every round is ONE flat ``segment_sum``
-    pass whose work is Σ|touching wedges| with zero stacking padding —
-    and one scatter-add instead of a batched one.  No collectives
-    anywhere."""
+@partial(jax.jit, static_argnames=("ring_cap",))
+def _fd_tip_vmapped_rings(pag, pbg, bff, mine, sup0, ring_cap: int):
+    """:func:`_fd_tip_vmapped` + per-round counter rings (obs)."""
     B, Emax = mine.shape
+    update = _tip_vmapped_update(pag, pbg, bff, B, Emax)
+    return peelspec._fd_while_vmapped_rings(
+        mine, sup0, update, jnp.int32(0), ring_cap)
 
+
+def _wing_vmapped_update(e1g, e2g, wpg, B, Emax, n_pairs):
     def update(S, aux):
         alive_w, W = aux                      # (W,), (n_pairs,)
         S_pad = jnp.concatenate(
@@ -152,34 +151,47 @@ def _fd_wing_vmapped(
         )
         return loss, (alive_w & ~w_dies, W - c), nu
 
+    return update
+
+
+@partial(jax.jit, static_argnames=("n_pairs",))
+def _fd_wing_vmapped(
+    e1g: jax.Array,      # (W,) int32 — globalized edge ids b·(Emax+1)+e
+    e2g: jax.Array,
+    wpg: jax.Array,      # (W,) int32 — globalized pair ids (dead pad → n_pairs-ish slot)
+    alive0: jax.Array,   # (W,) bool — wedges touching their partition
+    W0: jax.Array,       # (n_pairs,) int32 — alive ≥i wedges per pair
+    mine: jax.Array,     # (B, E) bool
+    sup0: jax.Array,     # (B, E) int32
+    n_pairs: int,
+):
+    """All wing-FD partitions in a single while_loop (one dispatch).
+
+    The per-round update is :func:`csr.wing_loss_csr`'s widow/survivor
+    algebra over the ragged-CONCATENATED wedge lists: the partition axis
+    is folded into pre-globalized segment ids (partition b's edge e →
+    segment b·(Emax+1)+e), so every round is ONE flat ``segment_sum``
+    pass whose work is Σ|touching wedges| with zero stacking padding —
+    and one scatter-add instead of a batched one.  No collectives
+    anywhere."""
+    B, Emax = mine.shape
+    update = _wing_vmapped_update(e1g, e2g, wpg, B, Emax, n_pairs)
     return _fd_while_vmapped(mine, sup0, update, (alive0, W0))
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def _fd_wing_vmapped_pallas(
-    slot_e1: jax.Array,     # (B, R, K) int32 — local edge ids, sentinel E
-    slot_e2: jax.Array,
-    valid0: jax.Array,      # (B, R, K) bool — initial alive slots
-    W0: jax.Array,          # (B, R) int32 — alive wedges per slot row
-    mine: jax.Array,        # (B, E) bool
-    sup0: jax.Array,        # (B, E) int32
-    interpret: bool = True,
-):
-    """Single-dispatch wing FD with the blocked Pallas ``support_update``
-    kernel INSIDE the while_loop body.
+@partial(jax.jit, static_argnames=("n_pairs", "ring_cap"))
+def _fd_wing_vmapped_rings(e1g, e2g, wpg, alive0, W0, mine, sup0,
+                           n_pairs: int, ring_cap: int):
+    """:func:`_fd_wing_vmapped` + per-round counter rings (obs)."""
+    B, Emax = mine.shape
+    update = _wing_vmapped_update(e1g, e2g, wpg, B, Emax, n_pairs)
+    return peelspec._fd_while_vmapped_rings(
+        mine, sup0, update, (alive0, W0), ring_cap)
 
-    The stacked pairs-major slot blocks flatten along rows into one
-    (B·R, K) matrix, so each round is ONE kernel launch covering every
-    partition (the partition axis rides the kernel's row grid — no vmap
-    over ``pallas_call`` needed); only the loss scatter back onto the
-    per-partition edge slots stays a ``segment_sum``.  Counts are
-    re-integerized from f32 straight out of the kernel — exact while
-    W_p < 2²⁴ (guarded at pack time), parity-tested against the
-    segment-sum body.
-    """
+
+def _wing_pallas_update(slot_e1, slot_e2, B, Emax, interpret):
     from repro.kernels import ops as kops  # local import: keep core light
 
-    B, Emax = mine.shape
     _, R, K = slot_e1.shape
     # globalize slot edge ids: partition b's edge e → b·(Emax+1) + e
     # (sentinel Emax lands in b's own discard slot)
@@ -213,15 +225,11 @@ def _fd_wing_vmapped_pallas(
         )
         return loss, (alive_slots & ~dies, W - c_row), nu
 
-    return _fd_while_vmapped(
-        mine, sup0, update, (valid0.reshape(B * R, K), W0.reshape(B * R))
-    )
+    return update
 
 
-# =====================================================================
-# Fused FD bodies — the whole round is ONE Pallas launch
-# =====================================================================
-def _fd_wing_fused_impl(
+@partial(jax.jit, static_argnames=("interpret",))
+def _fd_wing_vmapped_pallas(
     slot_e1: jax.Array,     # (B, R, K) int32 — local edge ids, sentinel E
     slot_e2: jax.Array,
     valid0: jax.Array,      # (B, R, K) bool — initial alive slots
@@ -230,12 +238,42 @@ def _fd_wing_fused_impl(
     sup0: jax.Array,        # (B, E) int32
     interpret: bool = True,
 ):
-    """Zero-per-round-dispatch wing FD: the while_loop body is ONE fused
-    ``kernels.fd_round`` launch — k-advance, frontier compaction AND the
-    widow/survivor support update all in-kernel, no segment-sum/argmin
-    tail (cf. :func:`_fd_wing_vmapped_pallas`, which still scatters the
-    losses outside the kernel).  Returns (theta (B, E), rounds (B),
-    update count) bit-identical to the unfused drivers."""
+    """Single-dispatch wing FD with the blocked Pallas ``support_update``
+    kernel INSIDE the while_loop body.
+
+    The stacked pairs-major slot blocks flatten along rows into one
+    (B·R, K) matrix, so each round is ONE kernel launch covering every
+    partition (the partition axis rides the kernel's row grid — no vmap
+    over ``pallas_call`` needed); only the loss scatter back onto the
+    per-partition edge slots stays a ``segment_sum``.  Counts are
+    re-integerized from f32 straight out of the kernel — exact while
+    W_p < 2²⁴ (guarded at pack time), parity-tested against the
+    segment-sum body.
+    """
+    B, Emax = mine.shape
+    _, R, K = slot_e1.shape
+    update = _wing_pallas_update(slot_e1, slot_e2, B, Emax, interpret)
+    return _fd_while_vmapped(
+        mine, sup0, update, (valid0.reshape(B * R, K), W0.reshape(B * R))
+    )
+
+
+@partial(jax.jit, static_argnames=("interpret", "ring_cap"))
+def _fd_wing_vmapped_pallas_rings(slot_e1, slot_e2, valid0, W0, mine, sup0,
+                                  interpret: bool, ring_cap: int):
+    """:func:`_fd_wing_vmapped_pallas` + per-round counter rings (obs)."""
+    B, Emax = mine.shape
+    _, R, K = slot_e1.shape
+    update = _wing_pallas_update(slot_e1, slot_e2, B, Emax, interpret)
+    return peelspec._fd_while_vmapped_rings(
+        mine, sup0, update,
+        (valid0.reshape(B * R, K), W0.reshape(B * R)), ring_cap)
+
+
+# =====================================================================
+# Fused FD bodies — the whole round is ONE Pallas launch
+# =====================================================================
+def _wing_fused_setup(slot_e1, slot_e2, valid0, W0, mine, sup0, interpret):
     from repro.kernels import ops as kops  # local import: keep core light
 
     # loop-constant inits derived from inputs (cf. _fd_while_vmapped)
@@ -251,12 +289,64 @@ def _fd_wing_fused_impl(
             sup, alive, theta, k, rounds, nupd, aslot, W,
             slot_e1, slot_e2, interpret=interpret)
 
+    return state0, round_fn
+
+
+def _fd_wing_fused_impl(
+    slot_e1: jax.Array,     # (B, R, K) int32 — local edge ids, sentinel E
+    slot_e2: jax.Array,
+    valid0: jax.Array,      # (B, R, K) bool — initial alive slots
+    W0: jax.Array,          # (B, R) int32 — alive wedges per slot row
+    mine: jax.Array,        # (B, E) bool
+    sup0: jax.Array,        # (B, E) int32
+    interpret: bool = True,
+):
+    """Zero-per-round-dispatch wing FD: the while_loop body is ONE fused
+    ``kernels.fd_round`` launch — k-advance, frontier compaction AND the
+    widow/survivor support update all in-kernel, no segment-sum/argmin
+    tail (cf. :func:`_fd_wing_vmapped_pallas`, which still scatters the
+    losses outside the kernel).  Returns (theta (B, E), rounds (B),
+    update count) bit-identical to the unfused drivers."""
+    state0, round_fn = _wing_fused_setup(
+        slot_e1, slot_e2, valid0, W0, mine, sup0, interpret)
     out = peelspec._fd_while_fused(state0, round_fn)
     return out[2], out[4][:, 0], jnp.sum(out[5])
 
 
 _fd_wing_fused = partial(
     jax.jit, static_argnames=("interpret",))(_fd_wing_fused_impl)
+
+
+def _fd_wing_fused_rings_impl(slot_e1, slot_e2, valid0, W0, mine, sup0,
+                              interpret: bool, ring_cap: int):
+    """:func:`_fd_wing_fused_impl` + per-round counter rings derived
+    around the fused round (the kernel itself is untouched); the update
+    ring carries the state's *cumulative* per-partition counts — drain
+    with ``cumulative_updates=True``."""
+    state0, round_fn = _wing_fused_setup(
+        slot_e1, slot_e2, valid0, W0, mine, sup0, interpret)
+    out, rings = peelspec._fd_while_fused_rings(state0, round_fn, ring_cap)
+    return out[2], out[4][:, 0], jnp.sum(out[5]), rings
+
+
+_fd_wing_fused_rings = partial(
+    jax.jit,
+    static_argnames=("interpret", "ring_cap"))(_fd_wing_fused_rings_impl)
+
+
+def _tip_fused_setup(st_pa, st_pb, st_bf, mine, sup0, interpret):
+    from repro.kernels import ops as kops
+
+    z = sup0 * 0
+    z1 = z[:, :1]
+    state0 = (sup0.astype(jnp.int32), mine.astype(jnp.int32), z, z1, z1)
+
+    def round_fn(sup, alive, theta, k, rounds):
+        return kops.fd_round_tip(
+            sup, alive, theta, k, rounds, st_pa, st_pb, st_bf,
+            interpret=interpret)
+
+    return state0, round_fn
 
 
 def _fd_tip_fused_impl(
@@ -270,17 +360,8 @@ def _fd_tip_fused_impl(
     """Tip counterpart of :func:`_fd_wing_fused_impl`: one fused Pallas
     launch per round over the stacked partition-local pair lists.
     Returns (theta (B, E), rounds (B))."""
-    from repro.kernels import ops as kops
-
-    z = sup0 * 0
-    z1 = z[:, :1]
-    state0 = (sup0.astype(jnp.int32), mine.astype(jnp.int32), z, z1, z1)
-
-    def round_fn(sup, alive, theta, k, rounds):
-        return kops.fd_round_tip(
-            sup, alive, theta, k, rounds, st_pa, st_pb, st_bf,
-            interpret=interpret)
-
+    state0, round_fn = _tip_fused_setup(
+        st_pa, st_pb, st_bf, mine, sup0, interpret)
     out = peelspec._fd_while_fused(state0, round_fn)
     return out[2], out[4][:, 0]
 
@@ -289,9 +370,31 @@ _fd_tip_fused = partial(
     jax.jit, static_argnames=("interpret",))(_fd_tip_fused_impl)
 
 
+def _fd_tip_fused_rings_impl(st_pa, st_pb, st_bf, mine, sup0,
+                             interpret: bool, ring_cap: int):
+    """:func:`_fd_tip_fused_impl` + per-round counter rings (obs)."""
+    state0, round_fn = _tip_fused_setup(
+        st_pa, st_pb, st_bf, mine, sup0, interpret)
+    out, rings = peelspec._fd_while_fused_rings(state0, round_fn, ring_cap)
+    return out[2], out[4][:, 0], rings
+
+
+_fd_tip_fused_rings = partial(
+    jax.jit,
+    static_argnames=("interpret", "ring_cap"))(_fd_tip_fused_rings_impl)
+
+
 # =====================================================================
 # Entity-specific per-partition (device) FD bodies
 # =====================================================================
+def _tip_device_update(pa, pb, pbf, n):
+    def update(S, aux):
+        loss = csr.tip_delta_csr(S, pa, pb, pbf, n)
+        return loss, aux, jnp.int32(0)
+
+    return update
+
+
 @partial(jax.jit, static_argnames=("n",))
 def _fd_tip_device(
     mine: jax.Array,      # (n,) bool — partition members
@@ -302,12 +405,27 @@ def _fd_tip_device(
     n: int,
 ):
     """Whole tip-FD cascade of one partition in a single while_loop."""
-
-    def update(S, aux):
-        loss = csr.tip_delta_csr(S, pa, pb, pbf, n)
-        return loss, aux, jnp.int32(0)
-
+    update = _tip_device_update(pa, pb, pbf, n)
     return _fd_while_device(mine, sup0, update, jnp.int32(0))
+
+
+@partial(jax.jit, static_argnames=("n", "ring_cap"))
+def _fd_tip_device_rings(mine, sup0, pa, pb, pbf, n: int, ring_cap: int):
+    """:func:`_fd_tip_device` + per-round counter rings (obs)."""
+    update = _tip_device_update(pa, pb, pbf, n)
+    return peelspec._fd_while_device_rings(
+        mine, sup0, update, jnp.int32(0), ring_cap)
+
+
+def _wing_device_update(we1, we2, wp, n_pairs, m):
+    def update(S, aux):
+        alive_w, W = aux
+        alive_w, W, loss, nu = csr.wing_loss_csr(
+            S, alive_w, W, we1, we2, wp, n_pairs, m
+        )
+        return loss, (alive_w, W), nu
+
+    return update
 
 
 @partial(jax.jit, static_argnames=("n_pairs", "m"))
@@ -323,15 +441,27 @@ def _fd_wing_device(
     m: int,
 ):
     """Whole wing-FD cascade of one partition in a single while_loop."""
-
-    def update(S, aux):
-        alive_w, W = aux
-        alive_w, W, loss, nu = csr.wing_loss_csr(
-            S, alive_w, W, we1, we2, wp, n_pairs, m
-        )
-        return loss, (alive_w, W), nu
-
+    update = _wing_device_update(we1, we2, wp, n_pairs, m)
     return _fd_while_device(mine, sup0, update, (alive_w0, W0))
+
+
+@partial(jax.jit, static_argnames=("n_pairs", "m", "ring_cap"))
+def _fd_wing_device_rings(mine, sup0, alive_w0, W0, we1, we2, wp,
+                          n_pairs: int, m: int, ring_cap: int):
+    """:func:`_fd_wing_device` + per-round counter rings (obs)."""
+    update = _wing_device_update(we1, we2, wp, n_pairs, m)
+    return peelspec._fd_while_device_rings(
+        mine, sup0, update, (alive_w0, W0), ring_cap)
+
+
+def _drain_rings(mode, parts, rounds, rings, cap, cumulative=False):
+    """Hand one FD launch's counter rings to the active timeline
+    collector (no-op when the obs layer is off)."""
+    col = obs.active_collector()
+    if col is not None:
+        col.record_fd_rings(mode, parts, rounds,
+                            [np.asarray(r) for r in rings], cap,
+                            cumulative_updates=cumulative)
 
 
 def _dense_guard(n_u: int, n_v: int) -> None:
@@ -505,7 +635,7 @@ def _tip_spec_dense(
         rows = np.where(part == i)[0]
         if rows.size == 0:
             return 0, 0, 0
-        rounds = _tip_fd_peel(A_np, rows, sup_init[rows], theta)
+        rounds = _tip_fd_peel(A_np, rows, sup_init[rows], theta, int(i))
         return rounds, 0, 0
 
     return PeelSpec(
@@ -518,7 +648,8 @@ def _tip_spec_dense(
 
 
 def _tip_fd_peel(
-    A_np: np.ndarray, rows: np.ndarray, sup0: np.ndarray, theta: np.ndarray
+    A_np: np.ndarray, rows: np.ndarray, sup0: np.ndarray,
+    theta: np.ndarray, part_i: int = 0,
 ) -> int:
     """Sequential (level-synchronous) bottom-up peel of one partition.
 
@@ -533,6 +664,8 @@ def _tip_fd_peel(
     s = rows.size
     alive = np.ones(s, dtype=bool)
     support = sup0.astype(np.float64).copy()
+    col = obs.active_collector()
+    trows: list = []
     k = 0
     rounds = 0
     while alive.any():
@@ -546,6 +679,11 @@ def _tip_fd_peel(
             delta = np.asarray(_tip_fd_delta(pair_bf, jnp.asarray(S)))
             support -= delta
             rounds += 1
+            if col is not None:
+                trows.append(dict(k=k, died=int(S.sum()),
+                                  frontier=int(alive.sum())))
+    if col is not None:
+        col.record_fd_host(part_i, trows)
     return rounds
 
 
@@ -620,14 +758,23 @@ def _tip_spec_csr(
                     bucket=True, stacked=True,
                 )
             p = fused_pack["p"]
-            theta_st, rounds = _fd_tip_fused(
+            f_args = (
                 jnp.asarray(p["st_pa"][i:i + 1]),
                 jnp.asarray(p["st_pb"][i:i + 1]),
                 jnp.asarray(p["st_bf"][i:i + 1]),
                 jnp.asarray(p["mine"][i:i + 1]),
                 jnp.asarray(p["sup0"][i:i + 1]),
-                interpret=kops.default_interpret(),
             )
+            cap = obs.fd_ring_cap()
+            if cap:
+                theta_st, rounds, rings = _fd_tip_fused_rings(
+                    *f_args, interpret=kops.default_interpret(),
+                    ring_cap=cap)
+                _drain_rings("fused", [i], [int(rounds[0])], rings, cap,
+                             cumulative=True)
+            else:
+                theta_st, rounds = _fd_tip_fused(
+                    *f_args, interpret=kops.default_interpret())
             mm = p["mine"][i]
             theta[p["gids"][i][mm]] = (
                 np.asarray(theta_st[0]).astype(np.int64)[mm])
@@ -680,17 +827,24 @@ def _tip_fd_csr(
     support0 = np.zeros(n, dtype=np.int64)
     support0[mine] = sup_init[mine]
 
+    cap = obs.fd_ring_cap()
     if fd_driver == "device":
         # bucket-pad the pair arrays so the while_loop compiles once per
         # size bucket, not once per partition
         size = _bucket_pad(int(mask.sum()))
-        theta_d, rounds, _ = _fd_tip_device(
+        args = (
             jnp.asarray(mine), jnp.asarray(support0.astype(np.int32)),
             jnp.asarray(_pad_zeros(wed.pair_a[mask], size)),
             jnp.asarray(_pad_zeros(wed.pair_b[mask], size)),
             jnp.asarray(_pad_zeros(pair_bf0[mask].astype(np.int32), size)),
             n,
         )
+        if cap:
+            theta_d, rounds, _, rings = _fd_tip_device_rings(
+                *args, ring_cap=cap)
+            _drain_rings("device", [i], [int(rounds)], rings, cap)
+        else:
+            theta_d, rounds, _ = _fd_tip_device(*args)
         theta_np = np.asarray(theta_d).astype(np.int64)
         theta[mine] = theta_np[mine]
         return int(rounds)
@@ -705,7 +859,16 @@ def _tip_fd_csr(
         ).astype(np.int64)
         return sup - delta
 
-    return _fd_cascade(mine, support0, theta, peel)
+    col = obs.active_collector()
+    if col is None:
+        return _fd_cascade(mine, support0, theta, peel)
+    rows: list = []
+    rounds = _fd_cascade(
+        mine, support0, theta, peel,
+        on_round=lambda k, died, frontier: rows.append(
+            dict(k=k, died=died, frontier=frontier)))
+    col.record_fd_host(i, rows)
+    return rounds
 
 
 def _tip_fd_vmapped_csr(
@@ -734,24 +897,45 @@ def _tip_fd_vmapped_csr(
     packed = pack_fd_partitions_tip_csr(
         wed, pair_bf0, part, sup_init, n_parts, bucket=True, stacked=fused
     )
+    cap = obs.fd_ring_cap()
     if fused:
         from repro.kernels import ops as kops
 
-        theta_st, rounds = _fd_tip_fused(
-            jnp.asarray(packed["st_pa"]), jnp.asarray(packed["st_pb"]),
-            jnp.asarray(packed["st_bf"]), jnp.asarray(packed["mine"]),
-            jnp.asarray(packed["sup0"]),
-            interpret=kops.default_interpret(),
-        )
+        if cap:
+            theta_st, rounds, rings = _fd_tip_fused_rings(
+                jnp.asarray(packed["st_pa"]), jnp.asarray(packed["st_pb"]),
+                jnp.asarray(packed["st_bf"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]),
+                interpret=kops.default_interpret(), ring_cap=cap,
+            )
+        else:
+            theta_st, rounds = _fd_tip_fused(
+                jnp.asarray(packed["st_pa"]), jnp.asarray(packed["st_pb"]),
+                jnp.asarray(packed["st_bf"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]),
+                interpret=kops.default_interpret(),
+            )
     else:
-        theta_st, rounds, _ = _fd_tip_vmapped(
-            jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
-            jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
-            jnp.asarray(packed["sup0"]),
-        )
+        if cap:
+            theta_st, rounds, _, rings = _fd_tip_vmapped_rings(
+                jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
+                jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]), ring_cap=cap,
+            )
+        else:
+            theta_st, rounds, _ = _fd_tip_vmapped(
+                jnp.asarray(packed["pa"]), jnp.asarray(packed["pb"]),
+                jnp.asarray(packed["bf"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]),
+            )
     mm = packed["mine"]
     theta[packed["gids"][mm]] = np.asarray(theta_st).astype(np.int64)[mm]
-    return np.asarray(rounds).astype(np.int64)
+    rounds_np = np.asarray(rounds).astype(np.int64)
+    if cap:
+        _drain_rings("fused" if fused else "vmapped",
+                     list(range(rounds_np.size)), rounds_np.tolist(),
+                     rings, cap, cumulative=fused)
+    return rounds_np
 
 
 def _wing_fd_vmapped_csr(
@@ -782,6 +966,8 @@ def _wing_fd_vmapped_csr(
         wed, part, sup_init, n_parts, bucket=True,
         flat=not slotted, slots=slotted,
     )
+    cap = obs.fd_ring_cap()
+    rings = None
     if slotted:
         from repro.kernels import ops as kops  # local: keep core light
 
@@ -790,24 +976,54 @@ def _wing_fd_vmapped_csr(
         W_rows = np.zeros((n_parts, R), dtype=np.int32)
         w = min(R, W0.shape[1])
         W_rows[:, :w] = W0[:, :w]
-        body = _fd_wing_fused if fused else _fd_wing_vmapped_pallas
-        theta_st, rounds, nupd = body(
-            jnp.asarray(packed["slot_e1"]), jnp.asarray(packed["slot_e2"]),
-            jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
-            jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]),
-            interpret=kops.default_interpret(),
-        )
+        if cap:
+            body = (_fd_wing_fused_rings if fused
+                    else _fd_wing_vmapped_pallas_rings)
+            theta_st, rounds, nupd, rings = body(
+                jnp.asarray(packed["slot_e1"]),
+                jnp.asarray(packed["slot_e2"]),
+                jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
+                jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]),
+                interpret=kops.default_interpret(), ring_cap=cap,
+            )
+        else:
+            body = _fd_wing_fused if fused else _fd_wing_vmapped_pallas
+            theta_st, rounds, nupd = body(
+                jnp.asarray(packed["slot_e1"]),
+                jnp.asarray(packed["slot_e2"]),
+                jnp.asarray(packed["slot_valid"]), jnp.asarray(W_rows),
+                jnp.asarray(packed["mine"]), jnp.asarray(packed["sup0"]),
+                interpret=kops.default_interpret(),
+            )
     else:
-        theta_st, rounds, nupd = _fd_wing_vmapped(
-            jnp.asarray(packed["flat_we1"]), jnp.asarray(packed["flat_we2"]),
-            jnp.asarray(packed["flat_wp"]), jnp.asarray(packed["flat_alive0"]),
-            jnp.asarray(packed["flat_W0"]), jnp.asarray(packed["mine"]),
-            jnp.asarray(packed["sup0"]),
-            n_pairs=int(packed["flat_W0"].shape[0]),
-        )
+        if cap:
+            theta_st, rounds, nupd, rings = _fd_wing_vmapped_rings(
+                jnp.asarray(packed["flat_we1"]),
+                jnp.asarray(packed["flat_we2"]),
+                jnp.asarray(packed["flat_wp"]),
+                jnp.asarray(packed["flat_alive0"]),
+                jnp.asarray(packed["flat_W0"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]),
+                n_pairs=int(packed["flat_W0"].shape[0]), ring_cap=cap,
+            )
+        else:
+            theta_st, rounds, nupd = _fd_wing_vmapped(
+                jnp.asarray(packed["flat_we1"]),
+                jnp.asarray(packed["flat_we2"]),
+                jnp.asarray(packed["flat_wp"]),
+                jnp.asarray(packed["flat_alive0"]),
+                jnp.asarray(packed["flat_W0"]), jnp.asarray(packed["mine"]),
+                jnp.asarray(packed["sup0"]),
+                n_pairs=int(packed["flat_W0"].shape[0]),
+            )
     mm = packed["mine"]
     theta[packed["gids"][mm]] = np.asarray(theta_st).astype(np.int64)[mm]
-    return np.asarray(rounds).astype(np.int64), int(nupd)
+    rounds_np = np.asarray(rounds).astype(np.int64)
+    if rings is not None:
+        _drain_rings("fused" if fused else "vmapped",
+                     list(range(rounds_np.size)), rounds_np.tolist(),
+                     rings, cap, cumulative=fused)
+    return rounds_np, int(nupd)
 
 
 # =====================================================================
@@ -1083,15 +1299,24 @@ def _wing_spec_csr(
                 p["W_rows"] = W_rows
                 fused_pack["p"] = p
             p = fused_pack["p"]
-            theta_st, rounds, nupd = _fd_wing_fused(
+            f_args = (
                 jnp.asarray(p["slot_e1"][i:i + 1]),
                 jnp.asarray(p["slot_e2"][i:i + 1]),
                 jnp.asarray(p["slot_valid"][i:i + 1]),
                 jnp.asarray(p["W_rows"][i:i + 1]),
                 jnp.asarray(p["mine"][i:i + 1]),
                 jnp.asarray(p["sup0"][i:i + 1]),
-                interpret=kops.default_interpret(),
             )
+            cap = obs.fd_ring_cap()
+            if cap:
+                theta_st, rounds, nupd, rings = _fd_wing_fused_rings(
+                    *f_args, interpret=kops.default_interpret(),
+                    ring_cap=cap)
+                _drain_rings("fused", [i], [int(rounds[0])], rings, cap,
+                             cumulative=True)
+            else:
+                theta_st, rounds, nupd = _fd_wing_fused(
+                    *f_args, interpret=kops.default_interpret())
             mm = p["mine"][i]
             theta[p["gids"][i][mm]] = (
                 np.asarray(theta_st[0]).astype(np.int64)[mm])
@@ -1130,6 +1355,8 @@ def _wing_fd_dense(
 
     alive = np.ones(sel.size, dtype=bool)
     support = sup_init[sel].astype(np.int64).copy()
+    col = obs.active_collector()
+    trows: list = []
     k = 0
     rounds = 0
     recounts = 0
@@ -1145,6 +1372,11 @@ def _wing_fd_dense(
             recounts += 1
             support = np.rint(np.asarray(sup)).astype(np.int64)
             rounds += 1
+            if col is not None:
+                trows.append(dict(k=k, died=int(S.sum()),
+                                  frontier=int((alive & mine).sum())))
+    if col is not None:
+        col.record_fd_host(int(i), trows)
     return rounds, recounts
 
 
@@ -1195,6 +1427,7 @@ def _wing_fd_csr(
     support_full = np.zeros(m, dtype=np.int64)
     support_full[mine] = sup_init[mine]
 
+    cap = obs.fd_ring_cap()
     if fd_driver == "device":
         # bucket-pad the wedge arrays (dead zero wedges are inert) so
         # the while_loop compiles once per size bucket
@@ -1202,7 +1435,7 @@ def _wing_fd_csr(
         size = _bucket_pad(n_kept)
         alive_w = np.zeros(size, dtype=bool)
         alive_w[:n_kept] = True
-        theta_d, rounds, nupd = _fd_wing_device(
+        args = (
             jnp.asarray(mine), jnp.asarray(support_full.astype(np.int32)),
             jnp.asarray(alive_w), Wp,
             jnp.asarray(_pad_zeros(wed.wedge_e1[keep], size)),
@@ -1210,6 +1443,12 @@ def _wing_fd_csr(
             jnp.asarray(_pad_zeros(wed.wedge_pair[keep], size)),
             n_pairs, m,
         )
+        if cap:
+            theta_d, rounds, nupd, rings = _fd_wing_device_rings(
+                *args, ring_cap=cap)
+            _drain_rings("device", [i], [int(rounds)], rings, cap)
+        else:
+            theta_d, rounds, nupd = _fd_wing_device(*args)
         theta_np = np.asarray(theta_d).astype(np.int64)
         theta[mine] = theta_np[mine]
         return int(rounds), int(nupd)
@@ -1231,7 +1470,22 @@ def _wing_fd_csr(
         nupd += int(nu)
         return np.asarray(support).astype(np.int64)
 
-    rounds = _fd_cascade(mine, support_full, theta, peel)
+    col = obs.active_collector()
+    if col is None:
+        rounds = _fd_cascade(mine, support_full, theta, peel)
+        return rounds, nupd
+    rows: list = []
+    upds: list = []
+    last = dict(n=0)
+
+    def on_round(k, died, frontier):
+        rows.append(dict(k=k, died=died, frontier=frontier))
+        upds.append(nupd - last["n"])
+        last["n"] = nupd
+
+    rounds = _fd_cascade(mine, support_full, theta, peel,
+                         on_round=on_round)
+    col.record_fd_host(i, rows, updates=upds)
     return rounds, nupd
 
 
@@ -1287,7 +1541,22 @@ def _wing_fd_beindex(
         nupd += int(nu)
         return np.asarray(support).astype(np.int64)
 
-    rounds = _fd_cascade(mine, support_full.copy(), theta, peel)
+    col = obs.active_collector()
+    if col is None:
+        rounds = _fd_cascade(mine, support_full.copy(), theta, peel)
+        return rounds, nupd
+    rows: list = []
+    upds: list = []
+    last = dict(n=0)
+
+    def on_round(k, died, frontier):
+        rows.append(dict(k=k, died=died, frontier=frontier))
+        upds.append(nupd - last["n"])
+        last["n"] = nupd
+
+    rounds = _fd_cascade(mine, support_full.copy(), theta, peel,
+                         on_round=on_round)
+    col.record_fd_host(i, rows, updates=upds)
     return rounds, nupd
 
 

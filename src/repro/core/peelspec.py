@@ -35,6 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
+
 __all__ = [
     "PeelStats",
     "PeelResult",
@@ -115,6 +117,9 @@ class PeelResult:
     ranges: np.ndarray       # (P+1,) range boundaries θ(1..P+1)
     support_init: np.ndarray  # ⋈init vector
     stats: PeelStats
+    # per-round work curves, present only when the obs layer was
+    # enabled during the run (obs.enable(); see docs/OBSERVABILITY.md)
+    timeline: Optional["obs.PeelTimeline"] = None
 
     def provenance(self) -> dict:
         """Everything besides θ a downstream consumer (the hierarchy
@@ -122,13 +127,17 @@ class PeelResult:
         was produced: engine-tagged stats plus the CD partition
         assignment, range boundaries, and ⋈init — together they rebuild
         the peeling order (entities peel by partition, then by θ within
-        the partition from the recorded support snapshot)."""
-        return dict(
+        the partition from the recorded support snapshot).  When a
+        timeline was collected its compact digest rides along."""
+        prov = dict(
             stats=self.stats.as_dict(),
             part=np.asarray(self.part),
             ranges=np.asarray(self.ranges),
             support_init=np.asarray(self.support_init),
         )
+        if self.timeline is not None:
+            prov["timeline"] = self.timeline.summary()
+        return prov
 
 
 # =====================================================================
@@ -252,7 +261,14 @@ def cd_loop(spec: PeelSpec, P: int, stats: PeelStats, target=None):
     Returns ``(part, sup_init, ranges, p_effective)``; each inner peel
     round charges ``stats.rho_cd`` (the paper's ρ — the only global
     synchronization points), and the engine's ``cd_step`` charges its
-    own update/recount counters."""
+    own update/recount counters.
+
+    When the obs layer is collecting (``obs.maybe_collect`` installed a
+    collector), every inner round is additionally wrapped in a
+    ``cd.round`` span and recorded into the run's timeline — span count
+    == ``stats.rho_cd`` by construction.  CD is host-driven, so this is
+    pure host bookkeeping: device programs are untouched either way."""
+    col = obs.active_collector()
     sup_np = np.asarray(spec.sup0, dtype=np.int64).copy()
     n = sup_np.size
     if target is None:
@@ -282,7 +298,20 @@ def cd_loop(spec: PeelSpec, P: int, stats: PeelStats, target=None):
                 break
             part[active] = i
             alive &= ~active
-            sup_np = spec.cd_step(active)
+            if col is None:
+                sup_np = spec.cd_step(active)
+            else:
+                died = int(active.sum())
+                u0, r0 = stats.updates, stats.recounts
+                with obs.span("cd.round", cat="cd.round",
+                              part=int(i)) as sp:
+                    sup_np = spec.cd_step(active)
+                    frontier = int(alive.sum())
+                    du = stats.updates - u0
+                    dr = stats.recounts - r0
+                    sp.update(died=died, frontier=frontier, hi=int(hi),
+                              updates=du, recounts=dr)
+                col.record_cd_round(i, died, frontier, int(hi), du, dr)
             stats.rho_cd += 1
 
         final_est = float(spec.est(sup_init)[part == i].sum())
@@ -317,8 +346,12 @@ def run_fd(
         if spec.fd_vmapped is None:
             raise ValueError(
                 f"engine '{stats.engine}' has no vmapped FD driver")
-        rounds_v, nupd = spec.fd_vmapped(part, sup_init, theta, n_parts)
-        rounds_v = np.asarray(rounds_v)
+        with obs.span("fd.vmapped", cat="fd.launch",
+                      n_parts=int(n_parts)) as sp:
+            rounds_v, nupd = spec.fd_vmapped(part, sup_init, theta, n_parts)
+            rounds_v = np.asarray(rounds_v)
+            if sp is not None:
+                sp.update(rounds=int(rounds_v.sum()), updates=int(nupd))
         stats.rho_fd_total = int(rounds_v.sum())
         stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
         stats.updates += int(nupd)
@@ -328,8 +361,13 @@ def run_fd(
         [est_w[part == i].sum() for i in range(n_parts)], dtype=np.float64
     )
     for i in _lpt_order(part_work):
-        rounds, nupd, nrec = spec.fd_partition(
-            int(i), part, sup_init, theta, fd_driver)
+        with obs.span(f"fd.partition[{int(i)}]", cat="fd.launch",
+                      part=int(i)) as sp:
+            rounds, nupd, nrec = spec.fd_partition(
+                int(i), part, sup_init, theta, fd_driver)
+            if sp is not None:
+                sp.update(rounds=int(rounds), updates=int(nupd),
+                          recounts=int(nrec))
         stats.rho_fd_total += rounds
         stats.rho_fd_max = max(stats.rho_fd_max, rounds)
         stats.updates += nupd
@@ -345,16 +383,36 @@ def decompose(
 ) -> PeelResult:
     """Run both phases of one :class:`PeelSpec` and assemble the
     :class:`PeelResult` — THE driver behind ``tip_decomposition`` and
-    ``wing_decomposition`` (every engine)."""
-    part, sup_init, ranges, p_eff = cd_loop(spec, P, stats, target=target)
-    theta = np.zeros(spec.n, dtype=np.int64)
-    run_fd(spec, part, sup_init, theta, p_eff, stats, fd_driver=fd_driver)
+    ``wing_decomposition`` (every engine).
+
+    When the obs layer is enabled this is also the telemetry root: it
+    installs the timeline collector, wraps the run in a ``peel`` span
+    with ``cd``/``fd`` phase spans, and attaches the built
+    :class:`~repro.obs.PeelTimeline` to the result (synthesizing the
+    per-round ``fd.round`` trace events from the drained rings)."""
+    with obs.maybe_collect() as col:
+        with obs.span("peel.decompose", cat="peel", kind=spec.kind,
+                      engine=stats.engine, fd_driver=fd_driver, P=int(P)):
+            with obs.span("cd", cat="cd"):
+                part, sup_init, ranges, p_eff = cd_loop(
+                    spec, P, stats, target=target)
+            theta = np.zeros(spec.n, dtype=np.int64)
+            with obs.span("fd", cat="fd", driver=fd_driver):
+                run_fd(spec, part, sup_init, theta, p_eff, stats,
+                       fd_driver=fd_driver)
+    timeline = None
+    if col is not None:
+        timeline = col.build()
+        tracer = obs.get_tracer()
+        if tracer is not None:
+            timeline.emit_trace_events(tracer)
     return PeelResult(
         theta=theta,
         part=part,
         ranges=ranges,
         support_init=sup_init,
         stats=stats,
+        timeline=timeline,
     )
 
 
@@ -362,7 +420,7 @@ def decompose(
 # FD cascade drivers — each body exists exactly once
 # =====================================================================
 def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
-                apply_peel) -> int:
+                apply_peel, on_round=None) -> int:
     """Level-synchronous bottom-up cascade shared by the incremental FD
     engines: advance k to the minimum alive support, peel the ≤k set,
     apply the engine's update, repeat until the partition is empty.
@@ -370,6 +428,9 @@ def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
     ``apply_peel(S, sup)`` consumes the peel mask and the current int64
     support vector and returns the refreshed one (updating any engine
     state it closes over).  Returns the number of peel rounds.
+    ``on_round(k, died, frontier)``, when given, is called after every
+    round — the obs layer's host-side stand-in for the device counter
+    rings (None, the default, changes nothing).
 
     This is the *host-loop* driver (one device dispatch per peel round).
     The csr engine defaults to :func:`_fd_while_device`, which runs the
@@ -389,6 +450,8 @@ def _fd_cascade(mine: np.ndarray, support0: np.ndarray, theta: np.ndarray,
             alive &= ~S
             sup = apply_peel(S, sup)
             rounds += 1
+            if on_round is not None:
+                on_round(k=k, died=int(S.sum()), frontier=int(alive.sum()))
     return rounds
 
 
@@ -528,3 +591,139 @@ def _fd_while_fused(state0, round_fn):
         return round_fn(*state)
 
     return jax.lax.while_loop(cond, body, state0)
+
+
+# =====================================================================
+# Telemetry-ON twins of the FD cascade drivers (obs counter rings)
+# =====================================================================
+# Each ``*_rings`` function repeats its twin's loop algebra VERBATIM and
+# additionally threads preallocated per-round int32 counter rings
+# through the carry — dying count, frontier size, k-advance, update
+# count — written at slot ``min(round, cap-1)`` (first cap-1 rounds
+# plus the final round survive an overflow; the drain flags it
+# ``truncated``).  They are separate functions, not a branch inside the
+# twins, so the telemetry-OFF path traces the byte-identical jaxpr — a
+# guarantee locked by ``tests/goldens/obs_jaxprs.json``.  Entity
+# wrappers in ``core.peel`` expose them behind a static ``ring_cap``
+# argument and drain the rings into the run's timeline collector.
+
+def _fd_while_device_rings(mine: jax.Array, sup0: jax.Array, update, aux,
+                           ring_cap: int):
+    """:func:`_fd_while_device` + counter rings; returns
+    ``(theta, rounds, nupd, (died, frontier, k, upd))`` with each ring
+    shaped ``(ring_cap,)``."""
+    cap = int(ring_cap)
+
+    def cond(state):
+        alive, *_ = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, sup, aux, theta, k, rounds, nupd, rings = state
+        died_r, fr_r, k_r, nu_r = rings
+        cur = jnp.where(alive, sup, _FD_BIG)
+        k = jnp.maximum(k, jnp.min(cur))
+        S = alive & (sup <= k)
+        theta = jnp.where(S, k, theta)
+        alive = alive & ~S
+        loss, aux, nu = update(S, aux)
+        slot = jnp.minimum(rounds, cap - 1)
+        rings = (
+            died_r.at[slot].set(jnp.sum(S.astype(jnp.int32))),
+            fr_r.at[slot].set(jnp.sum(alive.astype(jnp.int32))),
+            k_r.at[slot].set(k.astype(jnp.int32)),
+            nu_r.at[slot].set(jnp.asarray(nu).astype(jnp.int32)),
+        )
+        return (alive, sup - loss, aux, theta, k, rounds + 1, nupd + nu,
+                rings)
+
+    zero_e = sup0 * 0
+    zero_s = jnp.min(zero_e)
+    zring = jnp.zeros((cap,), jnp.int32)
+    init = (mine, sup0, aux, zero_e, zero_s, zero_s, zero_s,
+            (zring, zring, zring, zring))
+    out = jax.lax.while_loop(cond, body, init)
+    return out[3], out[5], out[6], out[7]
+
+
+def _fd_while_vmapped_rings(mine: jax.Array, sup0: jax.Array, update, aux,
+                            ring_cap: int):
+    """:func:`_fd_while_vmapped` + counter rings; returns
+    ``(theta, rounds, nupd, (died, frontier, k, upd))`` where the first
+    three rings are ``(ring_cap, B)`` and the update ring ``(ring_cap,)``
+    (the engine's per-round update count is a phase-global scalar)."""
+    cap = int(ring_cap)
+
+    def cond(state):
+        alive, *_ = state
+        return jnp.any(alive)
+
+    def body(state):
+        alive, sup, aux, theta, k, rounds, nupd, it, rings = state
+        died_r, fr_r, k_r, nu_r = rings
+        live = jnp.any(alive, axis=1)
+        cur = jnp.where(alive, sup, _FD_BIG)
+        k = jnp.maximum(k, jnp.min(cur, axis=1))
+        S = alive & (sup <= k[:, None])
+        theta = jnp.where(S, k[:, None], theta)
+        alive = alive & ~S
+        loss, aux, nu = update(S, aux)
+        slot = jnp.minimum(it, cap - 1)
+        rings = (
+            died_r.at[slot].set(jnp.sum(S.astype(jnp.int32), axis=1)),
+            fr_r.at[slot].set(jnp.sum(alive.astype(jnp.int32), axis=1)),
+            k_r.at[slot].set(k.astype(jnp.int32)),
+            nu_r.at[slot].set(jnp.asarray(nu).astype(jnp.int32)),
+        )
+        return (alive, sup - loss, aux, theta, k,
+                rounds + live.astype(jnp.int32), nupd + nu, it + 1, rings)
+
+    zero_e = sup0 * 0
+    zero_p = jnp.min(zero_e, axis=1)
+    B = sup0.shape[0]
+    zrow = jnp.zeros((cap, B), jnp.int32)
+    init = (mine, sup0, aux, zero_e, zero_p, zero_p, jnp.int32(0),
+            jnp.int32(0), (zrow, zrow, zrow, jnp.zeros((cap,), jnp.int32)))
+    out = jax.lax.while_loop(cond, body, init)
+    return out[3], out[5], out[6], out[8]
+
+
+def _fd_while_fused_rings(state0, round_fn, ring_cap: int):
+    """:func:`_fd_while_fused` + counter rings derived OUTSIDE the
+    fused round (the Pallas kernel itself is untouched): died/frontier
+    from the alive mask (state index 1, nonzero = alive) before/after
+    the round, k from state index 3, and — when the state carries a
+    per-partition update count at index 5 (the wing 8-tuple) — the ring
+    stores its *cumulative* value per round (the drain converts to
+    deltas via ``cumulative_updates=True``).  Returns
+    ``(state, (died, frontier, k, upd_cum))``, rings ``(ring_cap, B)``.
+    """
+    cap = int(ring_cap)
+    B = state0[1].shape[0]
+
+    def cond(carry):
+        state, _, _ = carry
+        return jnp.any(state[1] != 0)
+
+    def body(carry):
+        state, it, rings = carry
+        died_r, fr_r, k_r, nu_r = rings
+        alive_before = jnp.sum((state[1] != 0).astype(jnp.int32), axis=1)
+        new = round_fn(*state)
+        alive_after = jnp.sum((new[1] != 0).astype(jnp.int32), axis=1)
+        k_now = new[3][:, 0].astype(jnp.int32)
+        nu_cum = (jnp.sum(new[5], axis=1).astype(jnp.int32)
+                  if len(new) > 5 else jnp.zeros((B,), jnp.int32))
+        slot = jnp.minimum(it, cap - 1)
+        rings = (
+            died_r.at[slot].set(alive_before - alive_after),
+            fr_r.at[slot].set(alive_after),
+            k_r.at[slot].set(k_now),
+            nu_r.at[slot].set(nu_cum),
+        )
+        return (new, it + 1, rings)
+
+    zrow = jnp.zeros((cap, B), jnp.int32)
+    state, _, rings = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), (zrow, zrow, zrow, zrow)))
+    return state, rings

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import csr
 from repro.core.graph import BipartiteGraph
 from repro.core.peel import PeelResult
@@ -279,6 +280,9 @@ def build_hierarchy(
 ) -> Hierarchy:
     """Construct the k-wing / k-tip hierarchy forest from peel output.
 
+    Traced under a ``hierarchy``-cat span (labeling / node creation /
+    per-node stats sub-spans) when the obs layer is enabled.
+
     ``result`` is a :class:`~repro.core.peel.PeelResult` from ANY engine
     (``dense`` / ``beindex`` / ``csr`` — their θ are bit-identical, so
     so are the forests) or a raw θ array.  For ``kind="tip"`` pass the
@@ -290,6 +294,12 @@ def build_hierarchy(
     device-resident at once (memory = O(level_block × wedges)); the
     forest is identical for any value ≥ 1.
     """
+    with obs.span("hierarchy.build", cat="hierarchy", kind=kind):
+        return _build_hierarchy_impl(
+            g, result, kind, side, meta, level_block)
+
+
+def _build_hierarchy_impl(g, result, kind, side, meta, level_block):
     if kind not in ("wing", "tip"):
         raise ValueError(kind)
     gg = g if (kind == "wing" or side == "u") else g.transpose()
@@ -307,9 +317,11 @@ def build_hierarchy(
         )
 
     levels = np.unique(theta[theta > 0])
-    labels = _component_labels_per_level(
-        gg, theta, levels, kind, level_block=level_block
-    )
+    with obs.span("hierarchy.labels", cat="hierarchy",
+                  levels=int(levels.size)):
+        labels = _component_labels_per_level(
+            gg, theta, levels, kind, level_block=level_block
+        )
 
     # ---- level-ascending node creation (collapsed chains)
     node_level = [0]
@@ -362,26 +374,28 @@ def build_hierarchy(
     node_m = np.zeros(n_nodes, dtype=np.int64)
     node_nu = np.zeros(n_nodes, dtype=np.int64)
     node_nv = np.zeros(n_nodes, dtype=np.int64)
-    if kind == "wing":
-        eu = gg.edges[:, 0]
-        ev = gg.edges[:, 1]
-        for x in range(n_nodes):
-            ids = ent_order[estart[x]:eend[x]]
-            node_m[x] = ids.size
-            node_nu[x] = np.unique(eu[ids]).size
-            node_nv[x] = np.unique(ev[ids]).size
-    else:
-        du, _ = gg.degrees()
-        offu, nbru, _ = gg.csr_u()  # per-U CSR: neighbors are V ids
-        for x in range(n_nodes):
-            us = ent_order[estart[x]:eend[x]]
-            node_nu[x] = us.size
-            node_m[x] = int(du[us].sum())
-            if us.size:
-                vs = np.concatenate(
-                    [nbru[offu[u]:offu[u + 1]] for u in us]
-                )
-                node_nv[x] = np.unique(vs).size
+    with obs.span("hierarchy.node_stats", cat="hierarchy",
+                  n_nodes=int(n_nodes)):
+        if kind == "wing":
+            eu = gg.edges[:, 0]
+            ev = gg.edges[:, 1]
+            for x in range(n_nodes):
+                ids = ent_order[estart[x]:eend[x]]
+                node_m[x] = ids.size
+                node_nu[x] = np.unique(eu[ids]).size
+                node_nv[x] = np.unique(ev[ids]).size
+        else:
+            du, _ = gg.degrees()
+            offu, nbru, _ = gg.csr_u()  # per-U CSR: neighbors are V ids
+            for x in range(n_nodes):
+                us = ent_order[estart[x]:eend[x]]
+                node_nu[x] = us.size
+                node_m[x] = int(du[us].sum())
+                if us.size:
+                    vs = np.concatenate(
+                        [nbru[offu[u]:offu[u + 1]] for u in us]
+                    )
+                    node_nv[x] = np.unique(vs).size
 
     span = node_nu * node_nv
     density = np.divide(

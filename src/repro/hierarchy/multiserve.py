@@ -18,6 +18,7 @@ slots, so a batch can never be invalidated by its own admissions.
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from functools import partial
 from typing import Deque, Dict, List, Optional, Sequence
@@ -26,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from .pool import BucketKey, ForestPool
 from .serve import _OP_NAMES, OPS
 
@@ -90,6 +92,13 @@ def _answer_batch_multi(
     )
 
 
+def _tenant_counts(tenants: Sequence[str]) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for t in tenants:
+        counts[t] = counts.get(t, 0) + 1
+    return counts
+
+
 def compiled_dispatch_count() -> int:
     """Number of compiled multi-tenant dispatch programs — one per
     (bucket shape, batch size) the service has seen.  The zero-retrace
@@ -120,6 +129,8 @@ class MultiTenantService:
         self.queue: Deque[MTQuery] = deque()
         self.served = 0
         self.dispatches = 0
+        # shares the pool's registry: one snapshot covers cache + serve
+        self.metrics = pool.metrics
 
     # ------------------------------------------------------------ admin
     def _validate(self, tenant: str, op: str, a: int, b: int) -> None:
@@ -148,6 +159,7 @@ class MultiTenantService:
         self._validate(q.tenant, q.op, q.a, q.b)
         self.pool.note_queued(q.tenant, +1)
         self.queue.append(q)
+        self.metrics.set_gauge("serve.queue_depth", len(self.queue))
 
     def pending(self) -> int:
         """Number of queued queries not yet served by :meth:`run`."""
@@ -215,15 +227,26 @@ class MultiTenantService:
                     op_c[j] = ops[i]
                     a_c[j] = a[i]
                     b_c[j] = b[i]
-                res = _answer_batch_multi(
-                    arrs["theta"], arrs["entity_node"], arrs["node_level"],
-                    arrs["depth"], arrs["node_size"], arrs["up"],
-                    jnp.asarray(t_sl), jnp.asarray(op_c), jnp.asarray(a_c),
-                    jnp.asarray(b_c), J,
-                )
-                out[chunk] = np.asarray(res)[:n]
+                t0 = time.perf_counter()
+                with obs.span("serve.dispatch", cat="serve",
+                              bucket=list(key), n=n):
+                    res = _answer_batch_multi(
+                        arrs["theta"], arrs["entity_node"],
+                        arrs["node_level"], arrs["depth"],
+                        arrs["node_size"], arrs["up"],
+                        jnp.asarray(t_sl), jnp.asarray(op_c),
+                        jnp.asarray(a_c), jnp.asarray(b_c), J,
+                    )
+                    out[chunk] = np.asarray(res)[:n]
+                self.metrics.observe("serve.dispatch_ms",
+                                     (time.perf_counter() - t0) * 1e3)
+                self.metrics.inc("serve.dispatches")
+                self.metrics.inc("serve.slots_padded", self.batch - n)
                 self.dispatches += 1
                 self.served += n
+        self.metrics.inc("serve.served", len(tenants))
+        for t, cnt in _tenant_counts(tenants).items():
+            self.metrics.inc(f"serve.tenant.{t}", cnt)
         return out
 
     def buckets_J(self, key: BucketKey) -> int:
@@ -236,6 +259,7 @@ class MultiTenantService:
         ContinuousBatcher contract, like ``HierarchyService.run``)."""
         todo = list(self.queue)
         self.queue.clear()
+        self.metrics.set_gauge("serve.queue_depth", 0)
         if todo:
             res = self._dispatch_grouped(
                 [q.tenant for q in todo],

@@ -25,6 +25,14 @@ can answer a mixed-tenant batch:
   is part of.  v2 artifacts carry the pack cache (depth + lifting
   table), making a cold load pure array reads + one device upload.
 
+* **Per-slot admission upload** — admitting into a bucket that is
+  already device-resident updates just that tenant's slot row with
+  ``jax.lax.dynamic_update_slice`` (O(row) transfer) instead of
+  dirtying the whole bucket; ``slot_upload=False`` restores the
+  whole-bucket re-upload (the bench A/B, row
+  ``serve.admit.slot/bucket``).  Timed into the
+  ``pool.admission_upload_ms`` / ``pool.bucket_upload_ms`` metrics.
+
 Capacity model: ``slots`` bounds the number of *resident tenants*
 across all buckets.  Bucket arrays grow in power-of-two slot-capacity
 steps (a one-time recompile per (bucket, capacity) shape) and are
@@ -37,9 +45,11 @@ import os
 import time
 from typing import Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.peelspec import _bucket_pad
 
 from .build import Hierarchy
@@ -158,7 +168,9 @@ class ForestPool:
     """
 
     def __init__(self, slots: int = 64,
-                 artifact_dir: Optional[str] = None):
+                 artifact_dir: Optional[str] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None,
+                 slot_upload: bool = True):
         if slots < 1:
             raise ValueError("pool needs at least one slot")
         self.slots = int(slots)
@@ -170,6 +182,13 @@ class ForestPool:
         self.misses = 0
         self.evictions = 0
         self.load_seconds = 0.0
+        # pool.* serving metrics (shared with MultiTenantService when it
+        # wraps this pool); counters mirror the plain-int fields above
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
+        # per-slot device update on admission (dynamic_update_slice of
+        # one slot row) instead of dirtying the whole bucket; False
+        # restores the whole-bucket re-upload for the bench A/B
+        self.slot_upload = bool(slot_upload)
 
     # ------------------------------------------------------------ admin
     @property
@@ -231,7 +250,21 @@ class ForestPool:
         row = _pack_tenant(h, key[0], key[1], bucket.J)
         for name, _ in _STACK_FIELDS:
             bucket.host[name][slot] = row[name]
-        bucket.device = None                      # dirty: re-upload
+        if self.slot_upload and bucket.device is not None:
+            # update ONE slot row in place on device — O(row) transfer
+            # instead of dirtying the bucket and re-uploading all
+            # cap × row bytes on the next dispatch
+            t0 = time.perf_counter()
+            for name, _ in _STACK_FIELDS:
+                dev = bucket.device[name]
+                upd = jnp.asarray(row[name][None])
+                bucket.device[name] = jax.lax.dynamic_update_slice(
+                    dev, upd, (slot,) + (0,) * (dev.ndim - 1))
+            jax.block_until_ready(bucket.device["up"])
+            self.metrics.observe("pool.admission_upload_ms",
+                                 (time.perf_counter() - t0) * 1e3)
+        else:
+            bucket.device = None                  # dirty: re-upload
         bucket.tenants[slot] = tenant
         self.meta[tenant] = TenantMeta(
             n_nodes=h.n_nodes, n_entities=h.n_entities, bucket=key,
@@ -250,9 +283,11 @@ class ForestPool:
         m = self.meta.get(tenant)
         if m and m.resident:
             self.hits += 1
+            self.metrics.inc("pool.hits")
             self.touch(tenant)
             return m.bucket, m.slot
         self.misses += 1
+        self.metrics.inc("pool.misses")
         if self.artifact_dir is None:
             raise KeyError(
                 f"tenant {tenant!r} not resident and the pool has no "
@@ -261,8 +296,12 @@ class ForestPool:
         if not os.path.exists(path):
             raise KeyError(f"no artifact for tenant {tenant!r}: {path}")
         t0 = time.perf_counter()
-        out = self.add(tenant, load_hierarchy(path))
-        self.load_seconds += time.perf_counter() - t0
+        with obs.span("pool.cold_load", cat="serve", tenant=tenant):
+            out = self.add(tenant, load_hierarchy(path))
+        dt = time.perf_counter() - t0
+        self.load_seconds += dt
+        self.metrics.observe("pool.load_ms", dt * 1e3)
+        self.metrics.set_gauge("pool.resident", self.resident_count)
         return out
 
     def evict(self, tenant: str) -> None:
@@ -279,6 +318,8 @@ class ForestPool:
         m.resident = False
         m.slot = -1
         self.evictions += 1
+        self.metrics.inc("pool.evictions")
+        self.metrics.set_gauge("pool.resident", self.resident_count)
 
     def _claim_slot(self, key: BucketKey) -> int:
         """Find a free slot for a tenant of bucket ``key``: free slot →
@@ -337,9 +378,13 @@ class ForestPool:
         re-uploaded only after an admission changed the bucket)."""
         bucket = self.buckets[key]
         if bucket.device is None:
+            t0 = time.perf_counter()
             bucket.device = {
                 name: jnp.asarray(arr) for name, arr in bucket.host.items()
             }
+            jax.block_until_ready(bucket.device["up"])
+            self.metrics.observe("pool.bucket_upload_ms",
+                                 (time.perf_counter() - t0) * 1e3)
         return bucket.device
 
     def forest_of(self, tenant: str) -> PackedForest:

@@ -12,13 +12,44 @@ buckets, serves a mixed workload, and asserts the serving-layer
 structural claims — exactly one compiled dispatch per bucket, a cold
 same-bucket load triggering zero retraces, and a dispatch jaxpr that is
 pure gathers/selects (no ``while``, no collectives).
+
+The serve loop shuts down gracefully: SIGINT/SIGTERM stop it between
+dispatch chunks, queued slots are drained, the final metrics snapshot
+(``--metrics``) and trace (``--trace``) are flushed, and the process
+exits 0.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import signal
 import sys
 import time
+
+
+class GracefulShutdown:
+    """Flip ``stop`` on SIGINT/SIGTERM instead of dying mid-dispatch;
+    previous handlers are restored on exit (nested use is safe)."""
+
+    def __init__(self):
+        self.stop = False
+        self._prev = {}
+
+    def _handler(self, signum, frame):
+        self.stop = True
+
+    def __enter__(self):
+        for s in (signal.SIGINT, signal.SIGTERM):
+            try:
+                self._prev[s] = signal.signal(s, self._handler)
+            except ValueError:      # not the main thread
+                pass
+        return self
+
+    def __exit__(self, *exc):
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        return False
 
 
 def _mixed_workload(pool, tenants, n, seed=0):
@@ -120,6 +151,7 @@ def _dryrun() -> int:
 def _run(args) -> int:
     import numpy as np
 
+    from repro import obs
     from repro.hierarchy import ForestPool, MultiTenantService, multiserve
 
     tenants = sorted(
@@ -131,28 +163,59 @@ def _run(args) -> int:
     svc = MultiTenantService(pool, batch=args.batch)
     warm = tenants[:args.pool_slots]
     t0 = time.perf_counter()
-    for t in warm:
-        pool.ensure(t)
+    with obs.span("serve.warm", cat="serve", n=len(warm)):
+        for t in warm:
+            pool.ensure(t)
     t_load = time.perf_counter() - t0
     print(f"[hserve] {len(tenants)} tenants found; warmed {len(warm)} "
           f"into {len(pool.buckets)} shape buckets in {t_load * 1e3:.1f} ms")
 
-    t_col, ops, a, b = _mixed_workload(pool, warm, args.queries,
-                                       seed=args.seed)
-    t0 = time.perf_counter()
-    out = svc.query_batch(t_col, ops, a, b)
-    dt = time.perf_counter() - t0
-    qps = args.queries / max(dt, 1e-9)
-    print(f"[hserve] {args.queries} mixed-tenant queries in "
+    served = 0
+    checksum = np.int64(0)
+    interrupted = False
+    # the shutdown handler covers workload generation too: a SIGINT any
+    # time after the warm print takes the graceful path
+    with GracefulShutdown() as gs:
+        t_col, ops, a, b = _mixed_workload(pool, warm, args.queries,
+                                           seed=args.seed)
+        t0 = time.perf_counter()
+        try:
+            # one dispatch-sized chunk per iteration so a shutdown
+            # signal is honored between dispatches, never inside one
+            for lo in range(0, args.queries, args.batch):
+                if gs.stop:
+                    interrupted = True
+                    break
+                hi = min(lo + args.batch, args.queries)
+                out = svc.query_batch(
+                    t_col[lo:hi], ops[lo:hi], a[lo:hi], b[lo:hi])
+                checksum += np.int64(out.sum())
+                served += hi - lo
+        finally:
+            # drain queued slots so no tenant retires with in-flight
+            # queries (run() is a no-op on an empty queue)
+            svc.run()
+        dt = time.perf_counter() - t0
+        interrupted = interrupted or gs.stop
+    qps = served / max(dt, 1e-9)
+    print(f"[hserve] {served} mixed-tenant queries in "
           f"{dt * 1e3:.1f} ms -> {qps:,.0f} q/s "
           f"({svc.dispatches} dispatches, "
           f"{multiserve.compiled_dispatch_count()} compiled programs)")
     print(f"[hserve] cache: {pool.stats()}")
+    if interrupted:
+        print("[hserve] shutdown signal: queue drained, telemetry "
+              "flushed, exiting 0")
+    svc.metrics.set_gauge("serve.qps", qps)
+    if args.metrics:
+        svc.metrics.save(args.metrics)
+        print(f"[hserve] metrics snapshot -> {args.metrics}")
     if args.out:
         import json
         with open(args.out, "w") as f:
             json.dump(dict(qps=qps, n_tenants=len(warm),
-                           answers_checksum=int(np.int64(out.sum())),
+                           served=served,
+                           answers_checksum=int(checksum),
                            **pool.stats()), f)
     return 0
 
@@ -173,17 +236,36 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=None, metavar="PATH",
                     help="dump qps + cache stats JSON")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write the final serving-metrics snapshot "
+                         "(pool.* cache counters, serve.* dispatch "
+                         "latency histograms with p50/p99) as JSON")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the observability layer and write a "
+                         "Chrome-trace JSON of the serve run (warm / "
+                         "cold-load / dispatch spans; open in Perfetto)")
     ap.add_argument("--dryrun", action="store_true",
                     help="no artifacts needed: synthesize two shape "
                          "buckets and assert the serving invariants "
                          "(one compile per bucket, zero-retrace cold "
                          "load, loop/collective-free dispatch)")
     args = ap.parse_args()
+    if args.trace:
+        from repro import obs
+        obs.enable()
     if args.dryrun:
-        sys.exit(_dryrun())
-    if not args.artifact_dir:
-        ap.error("--artifact-dir is required (or pass --dryrun)")
-    sys.exit(_run(args))
+        rc = _dryrun()
+    else:
+        if not args.artifact_dir:
+            ap.error("--artifact-dir is required (or pass --dryrun)")
+        rc = _run(args)
+    if args.trace:
+        from repro import obs
+        tracer = obs.get_tracer()
+        tracer.save(args.trace)
+        print(f"[hserve] trace: {len(tracer.events)} events -> "
+              f"{args.trace}")
+    sys.exit(rc)
 
 
 if __name__ == "__main__":

@@ -441,6 +441,10 @@ def _run(args) -> int:
                   f"rho_cd={s.rho_cd} rho_fd_max={s.rho_fd_max} "
                   f"recounts={s.recounts}")
 
+    if (result is not None
+            and getattr(result, "timeline", None) is not None):
+        stats_out["timeline"] = result.timeline.summary()
+        print(f"[peel] timeline: {stats_out['timeline']}")
     print(f"[peel] theta: max={int(theta.max()) if theta.size else 0} "
           f"levels={len(set(theta.tolist()))}")
     if args.emit_hierarchy:
@@ -504,10 +508,24 @@ def main():
                          "artifact (load with "
                          "repro.hierarchy.load_hierarchy)")
     ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable the observability layer and write a "
+                         "Chrome-trace JSON of the run (open in "
+                         "Perfetto / chrome://tracing): peel/cd/fd "
+                         "spans, per-round cd.round/fd.round events, "
+                         "hierarchy build spans.  Off by default — the "
+                         "traced programs are byte-identical without it")
     args = ap.parse_args()
-    if args.dryrun:
-        sys.exit(_dryrun())
-    sys.exit(_run(args))
+    if args.trace:
+        from repro import obs
+        obs.enable()
+    rc = _dryrun() if args.dryrun else _run(args)
+    if args.trace:
+        tracer = obs.get_tracer()
+        tracer.save(args.trace)
+        print(f"[peel] trace: {len(tracer.events)} events -> "
+              f"{args.trace}")
+    sys.exit(rc)
 
 
 if __name__ == "__main__":

@@ -59,3 +59,33 @@ except ImportError:  # pragma: no cover - exercised on minimal containers
     stub.strategies = strategies
     sys.modules["hypothesis"] = stub
     sys.modules["hypothesis.strategies"] = strategies
+
+
+@pytest.fixture(scope="session")
+def obs_golden():
+    """The telemetry-off reference jaxprs (zero-overhead-off oracle).
+
+    Loads ``tests/goldens/record_obs_jaxprs.py`` (the case builders)
+    and ``obs_jaxprs.json`` (the texts recorded at the
+    pre-instrumentation tree).  The consuming suites re-derive each
+    jaxpr from the instrumented tree with telemetry disabled and assert
+    byte-equality — proving the obs layer is a trace-time branch whose
+    off path changes no compiled program.
+    """
+    import importlib.util
+    import json
+
+    import jax
+
+    here = os.path.dirname(os.path.abspath(__file__))
+    path = os.path.join(here, "goldens", "record_obs_jaxprs.py")
+    spec = importlib.util.spec_from_file_location("record_obs_jaxprs", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    with open(mod.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    if golden.get("jax") != jax.__version__:
+        pytest.skip(
+            f"obs jaxprs recorded on jax {golden.get('jax')}, running "
+            f"{jax.__version__} — re-record via the script's docstring")
+    return mod, golden["jaxprs"]

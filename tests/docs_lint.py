@@ -18,7 +18,8 @@ basenames = {
 }
 
 missing = []
-for doc in ("docs/ARCHITECTURE.md", "docs/KERNELS.md"):
+for doc in ("docs/ARCHITECTURE.md", "docs/KERNELS.md",
+            "docs/OBSERVABILITY.md"):
     text = open(os.path.join(ROOT, doc)).read()
     for ref in set(re.findall(r"`([\w./-]+\.(?:py|yml|json))(?:::[\w.]+)?`", text)):
         candidates = (ref, f"src/repro/{ref}", f"src/{ref}")

@@ -741,3 +741,14 @@ def test_hierarchical_cd_512dev_two_staged_allreduces():
         print("OK", n)
     """, n_dev=512)
     assert "OK" in out
+
+
+def test_obs_off_cd_pair_aligned_jaxpr_byte_identical(obs_golden):
+    """Zero-overhead-off at mesh scale: the one-psum pair-aligned CD
+    round jaxpr (8 devices) re-derived with telemetry disabled equals
+    the pre-instrumentation golden byte-for-byte.  CD instrumentation
+    is host-side span bookkeeping around ``cd_step`` — the shard_map
+    program itself must be untouched."""
+    rec, golden = obs_golden
+    out = _run(rec.CD_PAIR_ALIGNED_SRC)
+    assert out.strip() == golden["cd_pair_aligned_8dev"]

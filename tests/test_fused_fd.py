@@ -281,3 +281,22 @@ def test_fused_rejects_unsupported_combinations():
         tip_decomposition(g, engine="dense", fused=True)
     with pytest.raises(ValueError):
         tip_decomposition(g, engine="csr", fd_driver="host", fused=True)
+
+
+def test_obs_off_fd_jaxprs_byte_identical(obs_golden):
+    """Zero-overhead-off: with telemetry disabled (the default), the
+    fused and vmapped FD programs re-derived from the instrumented tree
+    are byte-identical to the pre-instrumentation goldens
+    (``tests/goldens/obs_jaxprs.json``).  The counter rings the obs
+    layer threads through the FD loop carries live in separate
+    ``*_rings`` jit twins — the default entries may not trace a single
+    extra op."""
+    from repro import obs
+
+    rec, golden = obs_golden
+    assert not obs.enabled()
+    for name in ("fused_wing", "fused_tip", "vmapped_wing",
+                 "vmapped_tip"):
+        assert rec.CASES[name]() == golden[name], \
+            f"{name}: default-path jaxpr drifted from the telemetry-off " \
+            f"golden (re-record ONLY for intentional kernel changes)"

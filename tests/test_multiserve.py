@@ -265,3 +265,17 @@ def test_unwritable_version_rejected(tmp_path):
     with pytest.raises(ValueError, match="cannot write"):
         save_hierarchy(str(tmp_path / "x.npz"), _hier(nu=12, nv=8, m=24),
                        version=99)
+
+
+def test_obs_off_dispatch_jaxpr_byte_identical(obs_golden):
+    """Zero-overhead-off for the serving layer: the batched multi-tenant
+    dispatch jaxpr with telemetry disabled equals the
+    pre-instrumentation golden byte-for-byte — the serve spans/metrics
+    are host-side only and must never enter the compiled program."""
+    from repro import obs
+
+    rec, golden = obs_golden
+    assert not obs.enabled()
+    got = rec.CASES["multiserve_dispatch"]()
+    assert got == golden["multiserve_dispatch"], \
+        "dispatch jaxpr drifted from the telemetry-off golden"
