@@ -6,11 +6,12 @@ CSV rows.  --full runs the larger dataset sweeps used for EXPERIMENTS.md.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 
 # registry: declared up front (no heavy imports) so --only can be
 # validated before any module is loaded
-MODULES = ("counting", "wing", "tip", "hierarchy", "serve",
+MODULES = ("counting", "wing", "tip", "hierarchy", "serve", "streaming",
            "p_sweep", "optimizations", "scaling")
 
 _IMPORTS = dict(
@@ -19,10 +20,36 @@ _IMPORTS = dict(
     tip="tip_decomposition",
     hierarchy="hierarchy",
     serve="serve",
+    streaming="streaming",
     p_sweep="p_sweep",
     optimizations="optimizations",
     scaling="scaling",
 )
+
+_PKG_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _purge_stale_bytecode() -> None:
+    """Drop compiled leftovers whose source module is gone.
+
+    A renamed/deleted bench module leaves artifacts behind: a
+    sourceless ``.pyc`` next to the package shadows the import outright
+    (the old code silently runs under the new name), and ``__pycache__``
+    leftovers make the module *look* present to naive discovery.
+    Hygiene runs before any import so ``--only`` always exercises the
+    code that is actually in the tree."""
+    for d in (_PKG_DIR, os.path.join(_PKG_DIR, "__pycache__")):
+        if not os.path.isdir(d):
+            continue
+        for fn in os.listdir(d):
+            if not fn.endswith((".pyc", ".pyo")):
+                continue
+            src = os.path.join(_PKG_DIR, fn.split(".")[0] + ".py")
+            if not os.path.exists(src):
+                path = os.path.join(d, fn)
+                os.remove(path)
+                print(f"[bench] purged stale bytecode {path} "
+                      f"(no matching source)", flush=True)
 
 
 def main() -> int:
@@ -48,6 +75,15 @@ def main() -> int:
         # KeyError from deep inside the loop after minutes of work
         ap.error(f"unknown --only module(s) {', '.join(sorted(unknown))}; "
                  f"valid names: {', '.join(MODULES)}")
+
+    _purge_stale_bytecode()
+    # discovery must see the SOURCE, not a compiled leftover: a stale
+    # sourceless .pyc imports fine but runs the pre-rename code
+    gone = [p for p in picks if not os.path.exists(
+        os.path.join(_PKG_DIR, _IMPORTS[p] + ".py"))]
+    if gone:
+        ap.error(f"module(s) {', '.join(sorted(gone))} have no source "
+                 f"file under benchmarks/ (stale bytecode is ignored)")
 
     import importlib
 

@@ -66,11 +66,73 @@ __all__ = [
     "PeelStats",
     "PeelResult",
     "PeelSpec",
+    "build_peel_spec",
     "tip_decomposition",
     "wing_decomposition",
     "wing_decomposition_bepc",
     "bup_levels",
 ]
+
+
+def build_peel_spec(
+    g: BipartiteGraph,
+    kind: str,
+    stats: PeelStats,
+    side: str = "u",
+    engine: str = "csr",
+    batch_recount="adaptive",
+    be: Optional[BEIndex] = None,
+    fd_driver: str = "device",
+    use_pallas: bool = False,
+    fused: bool = False,
+    sup0: Optional[np.ndarray] = None,
+    wed: Optional["csr.Wedges"] = None,
+) -> PeelSpec:
+    """Build the :class:`PeelSpec` for a ``(kind, engine)`` universe.
+
+    The shared front door for :func:`tip_decomposition`,
+    :func:`wing_decomposition` and the streaming updater
+    (``repro.streaming``): one place validates the engine/driver matrix
+    and hands back the spec without running the decomposition, so a
+    caller that already knows the support vector can drive
+    ``peelspec.cd_loop`` / ``peelspec.run_fd`` directly.
+
+    ``sup0`` injects a precomputed ⋈init vector (int64, one entry per
+    entity of ``kind``) — honored by both csr specs and the wing dense
+    spec, where it skips the from-scratch butterfly count (the streaming
+    path maintains it incrementally via wedge-local deltas).  The tip
+    dense spec recounts regardless: its device CD state needs the
+    counting pass anyway.  ``wed`` likewise injects prebuilt wedge
+    structures for the csr specs.  Injection never changes results —
+    only who pays for the count."""
+    if kind not in ("tip", "wing"):
+        raise ValueError(kind)
+    if kind == "tip":
+        if engine not in ("dense", "csr"):
+            raise ValueError(engine)
+    else:
+        if engine not in ("beindex", "dense", "csr"):
+            raise ValueError(engine)
+    if fd_driver not in ("device", "host", "vmapped"):
+        raise ValueError(fd_driver)
+    if kind == "tip" and use_pallas and engine != "csr":
+        raise ValueError("use_pallas applies to engine='csr' only")
+    if fused and engine != "csr":
+        raise ValueError("fused applies to engine='csr' only")
+    if fused and fd_driver == "host":
+        raise ValueError("fused requires fd_driver='device' or 'vmapped'")
+    if kind == "tip":
+        gg = g if side == "u" else g.transpose()
+        if engine == "csr":
+            return _tip_spec_csr(gg, stats, use_pallas=use_pallas,
+                                 fused=fused, sup0=sup0, wed=wed)
+        return _tip_spec_dense(gg, batch_recount, stats)
+    if engine == "beindex":
+        return _wing_spec_beindex(g, be, stats)
+    if engine == "csr":
+        return _wing_spec_csr(g, stats, use_pallas=use_pallas, fused=fused,
+                              sup0=sup0, wed=wed)
+    return _wing_spec_dense(g, stats, sup0=sup0)
 
 
 # =====================================================================
@@ -558,26 +620,15 @@ def tip_decomposition(
       * ``True`` — always re-count; ``False`` — always incremental
         (the PBNG-- ablation).
     """
-    if engine not in ("dense", "csr"):
-        raise ValueError(engine)
-    if fd_driver not in ("device", "host", "vmapped"):
-        raise ValueError(fd_driver)
-    if use_pallas and engine != "csr":
-        raise ValueError("use_pallas applies to engine='csr' only")
-    if fused and engine != "csr":
-        raise ValueError("fused applies to engine='csr' only")
-    if fused and fd_driver == "host":
-        raise ValueError("fused requires fd_driver='device' or 'vmapped'")
-    gg = g if side == "u" else g.transpose()
     stats = PeelStats(
         engine=engine,
         fd_driver=fd_driver if engine == "csr" else "host",
         side=side,
     )
-    if engine == "csr":
-        spec = _tip_spec_csr(gg, stats, use_pallas=use_pallas, fused=fused)
-    else:
-        spec = _tip_spec_dense(gg, batch_recount, stats)
+    spec = build_peel_spec(
+        g, "tip", stats, side=side, engine=engine,
+        batch_recount=batch_recount, fd_driver=fd_driver,
+        use_pallas=use_pallas, fused=fused)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
 
 
@@ -692,7 +743,8 @@ def _tip_fd_peel(
 # =====================================================================
 def _tip_spec_csr(
     gg: BipartiteGraph, stats: PeelStats, use_pallas: bool = False,
-    fused: bool = False,
+    fused: bool = False, sup0: Optional[np.ndarray] = None,
+    wed: Optional[csr.Wedges] = None,
 ) -> PeelSpec:
     """csr-engine tip spec: CD + FD on the flat wedge list — no dense
     matrices anywhere.
@@ -707,7 +759,8 @@ def _tip_spec_csr(
     slice each partition from the shared stack; vmapped: the whole
     stack at once)."""
     n = gg.n_u
-    wed = csr.build_wedges(gg)
+    if wed is None:
+        wed = csr.build_wedges(gg)
     pa = jnp.asarray(wed.pair_a)
     pb = jnp.asarray(wed.pair_b)
     pair_bf0 = wed.pair_butterflies0()
@@ -715,7 +768,8 @@ def _tip_spec_csr(
     wu, _ = csr.wedge_workload(gg)
     wedge_w = wu.astype(np.float64)
 
-    sup_np = csr.vertex_butterflies_csr(wed)
+    sup_np = (csr.vertex_butterflies_csr(wed) if sup0 is None
+              else np.asarray(sup0, dtype=np.int64))
     if sup_np.size and int(sup_np.max()) > 2 ** 31 - 1:
         raise OverflowError("tip supports exceed int32; shard the graph")
     state = dict(support=jnp.asarray(sup_np.astype(np.int32)))
@@ -1137,24 +1191,13 @@ def wing_decomposition(
     update and loss scatter — into one ``kernels.fd_round`` Pallas
     launch, so a round is a single kernel dispatch and nothing else.  θ
     and round/update counts bit-identical to the unfused drivers."""
-    if engine not in ("beindex", "dense", "csr"):
-        raise ValueError(engine)
-    if fd_driver not in ("device", "host", "vmapped"):
-        raise ValueError(fd_driver)
-    if fused and engine != "csr":
-        raise ValueError("fused applies to engine='csr' only")
-    if fused and fd_driver == "host":
-        raise ValueError("fused requires fd_driver='device' or 'vmapped'")
     stats = PeelStats(
         engine=engine,
         fd_driver=fd_driver if engine == "csr" else "host",
     )
-    if engine == "beindex":
-        spec = _wing_spec_beindex(g, be, stats)
-    elif engine == "csr":
-        spec = _wing_spec_csr(g, stats, use_pallas=use_pallas, fused=fused)
-    else:
-        spec = _wing_spec_dense(g, stats)
+    spec = build_peel_spec(
+        g, "wing", stats, engine=engine, be=be, fd_driver=fd_driver,
+        use_pallas=use_pallas, fused=fused)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
 
 
@@ -1202,15 +1245,21 @@ def _wing_spec_beindex(
     )
 
 
-def _wing_spec_dense(g: BipartiteGraph, stats: PeelStats) -> PeelSpec:
+def _wing_spec_dense(
+    g: BipartiteGraph, stats: PeelStats,
+    sup0: Optional[np.ndarray] = None,
+) -> PeelSpec:
     """Dense wing spec: masked-MXU batch re-counts for both phases."""
     m = g.m
     _dense_guard(g.n_u, g.n_v)
     edges = jnp.asarray(g.edges.astype(np.int32))
     shape = (g.n_u, g.n_v)
-    support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
-    counting.assert_exact(support)
-    sup0 = np.rint(np.asarray(support)).astype(np.int64)
+    if sup0 is None:
+        support = _wing_recount(shape, edges, jnp.ones((m,), dtype=bool))
+        counting.assert_exact(support)
+        sup0 = np.rint(np.asarray(support)).astype(np.int64)
+    else:
+        sup0 = np.asarray(sup0, dtype=np.int64)
     state = dict(alive=np.ones(m, dtype=bool))
 
     def cd_step(active: np.ndarray) -> np.ndarray:
@@ -1232,7 +1281,8 @@ def _wing_spec_dense(g: BipartiteGraph, stats: PeelStats) -> PeelSpec:
 
 def _wing_spec_csr(
     g: BipartiteGraph, stats: PeelStats, use_pallas: bool = False,
-    fused: bool = False,
+    fused: bool = False, sup0: Optional[np.ndarray] = None,
+    wed: Optional[csr.Wedges] = None,
 ) -> PeelSpec:
     """csr wing spec: incremental wedge-list widow/survivor updates as
     the CD step (optionally through the blocked Pallas kernel on the
@@ -1240,12 +1290,14 @@ def _wing_spec_csr(
     rule.  ``fused`` routes the FD phase through the fused
     ``kernels.fd_round`` launch (see :func:`_fd_wing_fused_impl`)."""
     m = g.m
-    wed = csr.build_wedges(g)
+    if wed is None:
+        wed = csr.build_wedges(g)
     we1 = jnp.asarray(wed.wedge_e1)
     we2 = jnp.asarray(wed.wedge_e2)
     wpj = jnp.asarray(wed.wedge_pair)
     n_pairs = wed.n_pairs
-    sup0 = csr.edge_butterflies0(wed)
+    sup0 = (csr.edge_butterflies0(wed) if sup0 is None
+            else np.asarray(sup0, dtype=np.int64))
     if sup0.size and int(sup0.max()) > 2 ** 31 - 1:
         raise OverflowError("wing supports exceed int32; shard the graph")
     state = dict(

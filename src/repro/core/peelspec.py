@@ -332,6 +332,8 @@ def run_fd(
     n_parts: int,
     stats: PeelStats,
     fd_driver: str = "device",
+    only: Optional[np.ndarray] = None,
+    per_partition: Optional[dict] = None,
 ) -> None:
     """Fine-grained decomposition over the CD partitions.
 
@@ -339,13 +341,25 @@ def run_fd(
     whole phase in one batched while_loop); otherwise partitions run in
     LPT order through ``spec.fd_partition`` (which honours
     ``fd_driver`` = "device" | "host").  Writes θ in place and charges
-    the FD round/update/recount counters."""
+    the FD round/update/recount counters.
+
+    ``only`` restricts the per-partition path to a subset of partition
+    ids (LPT-ordered among themselves) — the streaming repair driver
+    (``repro.streaming``) uses it to re-peel just the dirty partitions;
+    θ entries of skipped partitions are left untouched so carried-over
+    values survive.  ``per_partition``, when given a dict, is filled
+    with ``{i: (rounds, updates, recounts)}`` for every partition that
+    ran — the cache that lets an incremental run reassemble PeelStats
+    bit-identical to a from-scratch re-peel.  Neither knob changes any
+    dispatched program: the jitted FD entries are shared verbatim."""
     if n_parts <= 0:
         return
     if fd_driver == "vmapped":
-        if spec.fd_vmapped is None:
+        if only is not None:
             raise ValueError(
-                f"engine '{stats.engine}' has no vmapped FD driver")
+                "only= requires a per-partition fd_driver "
+                "('device' | 'host'); the vmapped driver dispatches "
+                "every partition in one launch")
         with obs.span("fd.vmapped", cat="fd.launch",
                       n_parts=int(n_parts)) as sp:
             rounds_v, nupd = spec.fd_vmapped(part, sup_init, theta, n_parts)
@@ -356,18 +370,28 @@ def run_fd(
         stats.rho_fd_max = int(rounds_v.max()) if rounds_v.size else 0
         stats.updates += int(nupd)
         return
+    if only is None:
+        ids = np.arange(n_parts)
+    else:
+        ids = np.unique(np.asarray(only, dtype=np.int64))
+        if ids.size and (ids[0] < 0 or ids[-1] >= n_parts):
+            raise ValueError(
+                f"only= ids outside [0, {n_parts}): {ids.tolist()}")
     est_w = spec.est(sup_init)
     part_work = np.array(
-        [est_w[part == i].sum() for i in range(n_parts)], dtype=np.float64
+        [est_w[part == i].sum() for i in ids], dtype=np.float64
     )
-    for i in _lpt_order(part_work):
-        with obs.span(f"fd.partition[{int(i)}]", cat="fd.launch",
-                      part=int(i)) as sp:
+    for j in _lpt_order(part_work):
+        i = int(ids[j])
+        with obs.span(f"fd.partition[{i}]", cat="fd.launch",
+                      part=i) as sp:
             rounds, nupd, nrec = spec.fd_partition(
-                int(i), part, sup_init, theta, fd_driver)
+                i, part, sup_init, theta, fd_driver)
             if sp is not None:
                 sp.update(rounds=int(rounds), updates=int(nupd),
                           recounts=int(nrec))
+        if per_partition is not None:
+            per_partition[i] = (int(rounds), int(nupd), int(nrec))
         stats.rho_fd_total += rounds
         stats.rho_fd_max = max(stats.rho_fd_max, rounds)
         stats.updates += nupd

@@ -322,6 +322,28 @@ def _build_hierarchy_impl(g, result, kind, side, meta, level_block):
         labels = _component_labels_per_level(
             gg, theta, levels, kind, level_block=level_block
         )
+    return _assemble_from_labels(
+        gg, theta, levels, labels, kind, side, prov, meta)
+
+
+def _assemble_from_labels(
+    gg: BipartiteGraph,
+    theta: np.ndarray,
+    levels: np.ndarray,
+    labels: np.ndarray,
+    kind: str,
+    side: str,
+    prov: Dict,
+    meta: Optional[Dict],
+) -> Hierarchy:
+    """Deterministic host assembly: per-level component labels → the
+    packed forest.  Split out of :func:`_build_hierarchy_impl` so the
+    streaming repair path (:mod:`repro.hierarchy.repair`) can feed it a
+    label matrix where only the dirty levels were recomputed — the
+    assembly is a pure function of ``(gg, theta, levels, labels)``, so
+    identical inputs give a bit-identical forest however the labels were
+    obtained."""
+    n_ent = gg.m if kind == "wing" else gg.n_u
 
     # ---- level-ascending node creation (collapsed chains)
     node_level = [0]

@@ -61,6 +61,41 @@ except ImportError:  # pragma: no cover - exercised on minimal containers
     sys.modules["hypothesis.strategies"] = strategies
 
 
+def pytest_collection_modifyitems(config, items):
+    """Opt-in order shuffling (``PYTEST_ORDER_SEED=<int>``): the tier-1
+    suite must be order-independent — CI runs a shuffled pass so
+    inter-test state leaks (a tracer left enabled, a shared registry)
+    surface instead of hiding behind file order."""
+    seed = os.environ.get("PYTEST_ORDER_SEED")
+    if not seed:
+        return
+    import random
+
+    random.Random(int(seed)).shuffle(items)
+    rep = config.pluginmanager.get_plugin("terminalreporter")
+    if rep is not None:
+        rep.write_line(
+            f"test order shuffled with PYTEST_ORDER_SEED={seed}")
+
+
+@pytest.fixture(autouse=True)
+def _isolate_global_obs_state():
+    """Restore the process-wide observability switches after every test.
+
+    ``obs.enable()`` flips a module-level gate and the timeline
+    collector is a module global; a test that enables tracing and then
+    fails (or simply forgets to disable) must not leak telemetry-on
+    into whichever test the shuffled order runs next — the
+    zero-overhead-off jaxpr goldens would spuriously mismatch."""
+    from repro.obs import timeline, trace
+
+    tracer_before = trace._tracer
+    collector_before = timeline._collector
+    yield
+    trace._tracer = tracer_before
+    timeline._collector = collector_before
+
+
 @pytest.fixture(scope="session")
 def obs_golden():
     """The telemetry-off reference jaxprs (zero-overhead-off oracle).

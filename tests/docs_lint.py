@@ -61,6 +61,22 @@ for doc in docs:
                 f"{os.path.relpath(doc, ROOT)}: flag `{flag}` not defined "
                 "by any src/repro/launch/ or benchmarks/ argparse")
 
+# ---------------------------------------------------------- pycache hygiene
+# committed bytecode shadows renamed modules (a sourceless .pyc imports
+# fine but runs pre-rename code — benchmarks/run.py purges them at
+# runtime); the lint stops them from ever entering the tree
+import subprocess  # noqa: E402
+
+try:
+    tracked = subprocess.run(
+        ["git", "ls-files"], cwd=ROOT, capture_output=True, text=True,
+        timeout=30).stdout.splitlines()
+except Exception:
+    tracked = []
+for path in tracked:
+    if path.endswith((".pyc", ".pyo")) or "__pycache__" in path.split("/"):
+        missing.append(f"git-tracked compiled artifact: {path}")
+
 if missing:
     print("stale references in docs:", *sorted(missing), sep="\n  ")
     sys.exit(1)

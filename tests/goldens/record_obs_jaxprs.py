@@ -163,6 +163,44 @@ def vmapped_tip_jaxpr() -> str:
         jnp.asarray(p["sup0"]))).strip()
 
 
+def device_wing_jaxpr() -> str:
+    """Per-partition wing FD while_loop on a fixed synthetic shape —
+    the program streaming's localized re-runs (``run_fd(only=...)``)
+    dispatch per dirty partition.  A jaxpr is a function of shapes and
+    statics only, so no graph artifacts are needed."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.peel import _fd_wing_device
+
+    m, n_pairs, n_kept = 140, 64, 96
+    mine = jnp.zeros((m,), bool)
+    sup0 = jnp.zeros((m,), jnp.int32)
+    alive = jnp.zeros((n_kept,), bool)
+    W0 = jnp.zeros((n_pairs,), jnp.int32)
+    we = jnp.zeros((n_kept,), jnp.int32)
+    return str(jax.make_jaxpr(
+        lambda *a: _fd_wing_device(*a, n_pairs=n_pairs, m=m))(
+        mine, sup0, alive, W0, we, we, we)).strip()
+
+
+def device_tip_jaxpr() -> str:
+    """Per-partition tip FD while_loop on a fixed synthetic shape (the
+    tip twin of :func:`device_wing_jaxpr`)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.peel import _fd_tip_device
+
+    n, n_pairs = 30, 40
+    mine = jnp.zeros((n,), bool)
+    sup0 = jnp.zeros((n,), jnp.int32)
+    pa = jnp.zeros((n_pairs,), jnp.int32)
+    return str(jax.make_jaxpr(
+        lambda *a: _fd_tip_device(*a, n=n))(
+        mine, sup0, pa, pa, pa)).strip()
+
+
 def multiserve_dispatch_jaxpr() -> str:
     """Dispatch jaxpr on a fixed synthetic bucket shape (the program is
     a function of shapes only, so no artifacts are needed)."""
@@ -200,6 +238,8 @@ CASES = {
     "fused_tip": fused_tip_jaxpr,
     "vmapped_wing": vmapped_wing_jaxpr,
     "vmapped_tip": vmapped_tip_jaxpr,
+    "device_wing": device_wing_jaxpr,
+    "device_tip": device_tip_jaxpr,
     "multiserve_dispatch": multiserve_dispatch_jaxpr,
     "cd_pair_aligned_8dev": cd_pair_aligned_jaxpr,
 }

@@ -1,0 +1,116 @@
+#!/usr/bin/env python
+"""Record the streaming-updater goldens (``stream_goldens.json``).
+
+Each case replays a fixed seeded event trace through
+:class:`repro.streaming.StreamState` and records, per epoch, integer
+digests of everything the updater maintains: a sha256 of θ, the full
+``PeelStats.as_dict()`` row, a sha256 over every packed-forest array,
+and the dirty-partition / dirty-level counts.  All of it is derived
+from integer peeling (and exact float division for densities), so the
+digests are machine-independent — unlike the jaxpr goldens they carry
+no jax-version stamp.
+
+``tests/test_streaming.py`` replays the same traces and asserts every
+digest, locking BOTH invariants at once: the incremental path stays
+bit-identical to itself across refactors, and (because the recorder
+ran against a tree whose differential harness proved incremental ≡
+from-scratch) to a full re-peel.  Re-record only when peel semantics
+intentionally change:
+
+    PYTHONPATH=src python tests/goldens/record_stream_goldens.py
+
+The case builders are imported by the test so recorded and replayed
+runs come from identical inputs.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN_PATH = os.path.join(HERE, "stream_goldens.json")
+
+FOREST_FIELDS = (
+    "node_level", "parent", "entity_node", "member_off", "member_ids",
+    "child_off", "child_ids", "tin", "tout", "ent_order", "estart",
+    "eend", "node_m", "node_nu", "node_nv",
+)
+
+# name -> (kind, engine, fd_driver, P, (n_u, n_v, m, graph_seed),
+#          epochs, batch, event_seed)
+CASES = {
+    "wing_csr_device": ("wing", "csr", "device", 8, (80, 50, 400, 5),
+                        4, 20, 200),
+    "tip_csr_device": ("tip", "csr", "device", 8, (80, 50, 400, 5),
+                       3, 16, 300),
+    "wing_dense_host": ("wing", "dense", "host", 8, (60, 40, 260, 3),
+                        3, 14, 400),
+}
+
+
+def _sha(arr) -> str:
+    import numpy as np
+
+    a = np.ascontiguousarray(arr)
+    return hashlib.sha256(
+        a.astype(np.int64, copy=False).tobytes()).hexdigest()[:16]
+
+
+def forest_digest(h) -> str:
+    """One digest over every packed-forest array (ints only — density
+    is a derived ratio of the int fields, so it adds no information)."""
+    import numpy as np
+
+    hsh = hashlib.sha256()
+    for f in FOREST_FIELDS:
+        hsh.update(f.encode())
+        hsh.update(np.ascontiguousarray(
+            getattr(h, f)).astype(np.int64, copy=False).tobytes())
+    return hsh.hexdigest()[:16]
+
+
+def replay(name: str):
+    """Run one case; yields the per-epoch golden record."""
+    from repro.core.graph import powerlaw_bipartite
+    from repro.streaming import StreamConfig, StreamState, \
+        make_random_events
+
+    kind, engine, fd_driver, P, gspec, epochs, batch, seed = CASES[name]
+    n_u, n_v, m, gseed = gspec
+    g = powerlaw_bipartite(n_u, n_v, m, seed=gseed)
+    st = StreamState.initial(
+        g, StreamConfig(kind=kind, engine=engine, P=P,
+                        fd_driver=fd_driver))
+    for e in range(epochs):
+        events = make_random_events(st.g, batch, seed=seed + e)
+        rep = st.apply_epoch(events)
+        yield dict(
+            epoch=rep.epoch,
+            net=[rep.n_inserts, rep.n_deletes],
+            m=int(st.g.m),
+            theta_sha=_sha(st.result.theta),
+            part_sha=_sha(st.result.part),
+            sup_init_sha=_sha(st.result.support_init),
+            stats=st.result.stats.as_dict(),
+            forest_sha=forest_digest(st.hierarchy),
+            partitions_dirty=rep.partitions_dirty,
+            levels_dirty=rep.levels_dirty,
+        )
+
+
+def main() -> None:
+    golden = {"schema": 1, "cases": {}}
+    for name in CASES:
+        rows = list(replay(name))
+        golden["cases"][name] = rows
+        print(f"[record-stream] {name}: {len(rows)} epochs, final "
+              f"theta_sha={rows[-1]['theta_sha']}")
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1)
+    print(f"[record-stream] wrote {len(golden['cases'])} cases -> "
+          f"{GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

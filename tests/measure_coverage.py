@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Dependency-free line-coverage measurer for the gated packages.
+
+CI gates ``repro.core`` + ``repro.hierarchy`` line coverage with
+pytest-cov (``--cov-fail-under``, see .github/workflows/ci.yml); this
+script is how the committed floor was *measured* in environments
+without pytest-cov: a ``sys.settrace`` line tracer scoped to the two
+packages, run under the tier-1 suite, with the executable-line
+denominator taken from the compiled code objects (``co_lines``) — the
+same statement universe coverage.py counts, minus its arc analysis, so
+the number tracks pytest-cov's within a couple of points.  The CI
+floor is set BELOW the measured value by a safety margin; it exists to
+catch wholesale coverage collapse (a skipped test file, an
+accidentally-disabled parametrize), not single-line drift.
+
+    PYTHONPATH=src python tests/measure_coverage.py [pytest args...]
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PACKAGES = ("src/repro/core", "src/repro/hierarchy")
+
+
+def _executable_lines(path: str) -> set:
+    """Line numbers of compiled statements (recursing into nested code
+    objects) — coverage.py's statement universe."""
+    with open(path) as f:
+        src = f.read()
+    lines: set = set()
+
+    def walk(code):
+        for _, _, ln in code.co_lines():
+            if ln is not None:
+                lines.add(ln)
+        for const in code.co_consts:
+            if hasattr(const, "co_lines"):
+                walk(const)
+
+    walk(compile(src, path, "exec"))
+    return lines
+
+
+def main() -> int:
+    targets = {}
+    for pkg in PACKAGES:
+        base = os.path.join(ROOT, pkg)
+        for dirpath, _, files in os.walk(base):
+            for fn in files:
+                if fn.endswith(".py"):
+                    p = os.path.abspath(os.path.join(dirpath, fn))
+                    targets[p] = _executable_lines(p)
+
+    hits = {p: set() for p in targets}
+
+    def tracer(frame, event, arg):
+        fn = frame.f_code.co_filename
+        if fn not in hits:
+            return None
+        if event == "line":
+            hits[fn].add(frame.f_lineno)
+        return tracer
+
+    import pytest
+
+    sys.settrace(tracer)
+    try:
+        rc = pytest.main(["-q", "-p", "no:cacheprovider"]
+                         + sys.argv[1:])
+    finally:
+        sys.settrace(None)
+
+    total_exec = total_hit = 0
+    by_pkg = {pkg: [0, 0] for pkg in PACKAGES}
+    for p, exe in sorted(targets.items()):
+        h = len(hits[p] & exe)
+        total_exec += len(exe)
+        total_hit += h
+        for pkg in PACKAGES:
+            if os.path.join(ROOT, pkg) in p:
+                by_pkg[pkg][0] += h
+                by_pkg[pkg][1] += len(exe)
+        pct = 100.0 * h / len(exe) if exe else 100.0
+        print(f"{os.path.relpath(p, ROOT):60s} {h:5d}/{len(exe):5d} "
+              f"{pct:5.1f}%")
+    for pkg, (h, e) in by_pkg.items():
+        print(f"[coverage] {pkg}: {100.0 * h / max(e, 1):.1f}% "
+              f"({h}/{e} lines)")
+    print(f"[coverage] TOTAL (gated packages): "
+          f"{100.0 * total_hit / max(total_exec, 1):.1f}% "
+          f"({total_hit}/{total_exec} lines)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())
