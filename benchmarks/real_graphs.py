@@ -1,0 +1,229 @@
+"""Real-graph benchmark: out-of-core ingest + bounded-tile counting.
+
+The rows pin the real-data path end to end on the committed KONECT
+graph (``datasets/southern_women.tsv``) and quantify the bounded-memory
+claim on a synthetic graph big enough for tiling to matter:
+
+  * ``count.real.sw.ingest``  — chunked ingest (cache bypassed with
+    ``refresh=True`` so the parse/dedup/relabel is what's timed);
+  * ``count.real.sw.tiled``   — ``csr.tiled_butterfly_init`` at a small
+    wedge budget (many tiles on purpose);
+  * ``count.real.sw.untiled`` — the flat wedge-list counts
+    (``build_wedges`` + edge/vertex butterflies), the exactness
+    reference the tiled counts are asserted equal to;
+  * ``peel.real.sw.wing``     — the sup0-injected wing peel, with the
+    θ sha256 asserted against ``tests/goldens/real_graphs.json`` — a
+    bench run that drifts from the golden FAILS, it does not emit;
+  * ``count.tiled.pl.b<B>``   — synthetic powerlaw sweep: derived
+    fields carry ``peak_tile_wedges`` (asserted ≤ budget + one
+    vertex's own wedges), ``peak_slot_bytes`` vs ``full_wedge_bytes``
+    (the memory the untiled path would need), and the tile count.
+
+``main()`` adds the nightly mode: ``--download southern_women``
+fetches the KONECT original into ``~/.cache/repro-datasets`` (one
+network hit, then cached), ingests it and asserts the SAME committed
+checksums — proving the committed copy and the upstream dataset reduce
+to the bit-identical decomposition.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import csr
+from repro.core.graph import powerlaw_bipartite
+from repro.core.peel import wing_decomposition
+from repro.data import ingest_edges
+
+from .common import emit, note_telemetry, timed
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+DATASET = os.path.join(ROOT, "datasets", "southern_women.tsv")
+GOLDENS = os.path.join(ROOT, "tests", "goldens", "real_graphs.json")
+
+# name -> (KONECT tarball URL, member file inside it)
+KONECT = {
+    "southern_women": (
+        "http://konect.cc/files/download.tsv.brunson_southern-women.tar.bz2",
+        "brunson_southern-women/out.brunson_southern-women",
+    ),
+}
+
+
+def _sha(theta) -> str:
+    return hashlib.sha256(
+        np.asarray(theta, dtype=np.int64).tobytes()).hexdigest()
+
+
+def _golden(name: str) -> dict:
+    with open(GOLDENS) as f:
+        return json.load(f)[name]
+
+
+def _assert_golden(name: str, path: str, tile_wedges: int = 64) -> None:
+    """Ingest + tile-count + peel ``path`` and fail loudly unless every
+    committed invariant for ``name`` holds."""
+    want = _golden(name)
+    with tempfile.TemporaryDirectory() as td:
+        ig = ingest_edges(path, out_dir=os.path.join(td, "ing"))
+        got = (ig.n_u, ig.n_v, ig.m)
+        expect = (want["n_u"], want["n_v"], want["m"])
+        assert got == expect, f"{name}: dims {got} != golden {expect}"
+        sup_e, _, total, _ = csr.tiled_butterfly_init(
+            ig, tile_wedges=tile_wedges)
+        assert total == want["total_butterflies"], (
+            f"{name}: total {total} != golden {want['total_butterflies']}")
+        res = wing_decomposition(ig.as_graph(), engine="csr", sup0=sup_e)
+        got_sha = _sha(res.theta)
+        assert got_sha == want["theta_wing_sha256"], (
+            f"{name}: theta sha {got_sha} != golden")
+
+
+def _bench_real(small: bool) -> None:
+    name = "sw"
+    want = _golden("southern_women")
+    with tempfile.TemporaryDirectory() as td:
+        ing_dir = os.path.join(td, "ing")
+        # warm once (also the correctness pass), then time the real work
+        ig = ingest_edges(DATASET, out_dir=ing_dir)
+        ig, t_ing = timed(ingest_edges, DATASET, out_dir=ing_dir,
+                          refresh=True, repeat=3 if small else 5)
+        emit(f"count.real.{name}.ingest", t_ing,
+             n_u=ig.n_u, n_v=ig.n_v, m=ig.m)
+
+        (sup_e, sup_u, total, stats), t_tiled = timed(
+            csr.tiled_butterfly_init, ig, tile_wedges=64,
+            repeat=3 if small else 5)
+        emit(f"count.real.{name}.tiled", t_tiled, tiles=stats.n_tiles,
+             wedges=stats.n_wedges, peak_tile_wedges=stats.peak_tile_wedges)
+
+        def _untiled():
+            w = csr.build_wedges(ig.as_graph())
+            return w, csr.edge_butterflies0(w), csr.vertex_butterflies_csr(w)
+
+        (w, sup_e0, sup_u0), t_flat = timed(_untiled,
+                                            repeat=3 if small else 5)
+        emit(f"count.real.{name}.untiled", t_flat, wedges=w.n_wedges)
+        assert np.array_equal(sup_e, sup_e0), "tiled != untiled (edges)"
+        assert np.array_equal(sup_u, sup_u0), "tiled != untiled (vertices)"
+        assert total == want["total_butterflies"], "total drifted"
+
+        g = ig.as_graph()
+        res = wing_decomposition(g, engine="csr", sup0=sup_e)  # warm jit
+        res, t_peel = timed(wing_decomposition, g, engine="csr",
+                            sup0=sup_e, repeat=3 if small else 5)
+        theta_sha = _sha(res.theta)
+        assert theta_sha == want["theta_wing_sha256"], (
+            "peel.real.sw.wing drifted from tests/goldens/real_graphs.json")
+        emit(f"peel.real.{name}.wing", t_peel, gate=True,
+             rho_cd=res.stats.rho_cd, theta_ok=1)
+        note_telemetry(f"peel.real.{name}.wing", dict(
+            theta_sha256=theta_sha, total_butterflies=int(total),
+            tiles=stats.n_tiles))
+
+
+def _bench_bounded(small: bool) -> None:
+    """The bounded-memory row: tiled counting on a graph whose flat
+    wedge list dwarfs any single tile."""
+    n_u, n_v, m = (600, 400, 6000) if small else (3000, 2000, 40000)
+    g = powerlaw_bipartite(n_u, n_v, m, seed=11)
+    w = csr.build_wedges(g)
+    # one vertex's own wedges bound how far a singleton hub tile can
+    # exceed the budget
+    per_u = np.zeros(g.n_u, dtype=np.int64)
+    np.add.at(per_u, np.minimum(w.pair_a, w.pair_b)[w.wedge_pair], 1)
+    sup_e0 = csr.edge_butterflies0(w)
+    full_bytes = int(w.n_wedges) * 8  # int64 wedge keys, the O(Σ deg²) term
+
+    for budget in ((1 << 10,) if small else (1 << 10, 1 << 14)):
+        (sup_e, _, _, stats), t = timed(
+            csr.tiled_butterfly_init, g, tile_wedges=budget, repeat=3)
+        assert np.array_equal(sup_e, sup_e0), "tiled != untiled on powerlaw"
+        assert stats.peak_tile_wedges <= budget + int(per_u.max()), (
+            f"peak tile {stats.peak_tile_wedges} exceeds budget {budget} "
+            f"+ hub max {int(per_u.max())}")
+        emit(f"count.tiled.pl.b{budget}", t, gate=True,
+             tiles=stats.n_tiles,
+             peak_tile_wedges=stats.peak_tile_wedges,
+             full_wedge_bytes=full_bytes,
+             mem_ratio=round(full_bytes / max(stats.peak_tile_wedges * 8, 1),
+                             1))
+
+    # the device-memory claim: the Pallas tile path materializes one
+    # padded slot matrix per tile (peak_slot_bytes) and dispatches it
+    # one fixed (bp, bk) block at a time — vs the O(Σ deg²) flat list
+    budget = 1 << 10
+    _ = csr.tiled_butterfly_init(g, tile_wedges=budget, use_pallas=True,
+                                 width=128)  # warm jit
+    (sup_e, _, _, stats), t = timed(
+        csr.tiled_butterfly_init, g, tile_wedges=budget, use_pallas=True,
+        width=128, repeat=2)
+    assert np.array_equal(sup_e, sup_e0), "pallas tiled != untiled"
+    assert stats.peak_slot_bytes < full_bytes, (
+        "tiling stopped bounding memory: one tile's slot matrix "
+        "outgrew the whole wedge list")
+    emit(f"count.tiled.pl.pallas.b{budget}", t, gate=True,
+         tiles=stats.n_tiles, peak_slot_bytes=stats.peak_slot_bytes,
+         full_wedge_bytes=full_bytes,
+         mem_ratio=round(full_bytes / max(stats.peak_slot_bytes, 1), 1))
+
+
+def run(small: bool = True):
+    _bench_real(small)
+    _bench_bounded(small)
+
+
+def _fetch(name: str) -> str:
+    """Download + extract the KONECT original into the local cache,
+    returning the edge-list path (a no-op when already cached)."""
+    import tarfile
+    import urllib.request
+
+    url, member = KONECT[name]
+    cache = os.path.join(os.path.expanduser("~"), ".cache",
+                         "repro-datasets")
+    os.makedirs(cache, exist_ok=True)
+    dest = os.path.join(cache, os.path.basename(member))
+    if os.path.exists(dest):
+        print(f"[real] cached: {dest}", flush=True)
+        return dest
+    tar_path = os.path.join(cache, os.path.basename(url))
+    if not os.path.exists(tar_path):
+        print(f"[real] downloading {url}", flush=True)
+        urllib.request.urlretrieve(url, tar_path)
+    with tarfile.open(tar_path, "r:bz2") as tf:
+        with tf.extractfile(member) as src, open(dest, "wb") as out:
+            out.write(src.read())
+    print(f"[real] extracted -> {dest}", flush=True)
+    return dest
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--download", default=None, metavar="NAME",
+                    choices=sorted(KONECT),
+                    help="nightly mode: fetch the KONECT original into "
+                         "~/.cache/repro-datasets and assert the "
+                         "committed θ checksums on it (no bench rows)")
+    args = ap.parse_args()
+    if args.download:
+        path = _fetch(args.download)
+        _assert_golden(args.download, path)
+        print(f"[real] {args.download}: downloaded original matches the "
+              f"committed goldens", flush=True)
+        return 0
+    print("name,us_per_call,derived")
+    run(small=not args.full)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,10 +12,11 @@ import sys
 # registry: declared up front (no heavy imports) so --only can be
 # validated before any module is loaded
 MODULES = ("counting", "wing", "tip", "hierarchy", "serve", "streaming",
-           "p_sweep", "optimizations", "scaling")
+           "real", "p_sweep", "optimizations", "scaling")
 
 _IMPORTS = dict(
     counting="counting",
+    real="real_graphs",
     wing="wing_decomposition",
     tip="tip_decomposition",
     hierarchy="hierarchy",

@@ -17,6 +17,7 @@ container-scale graphs; ``assert_exact`` guards it.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -47,8 +48,29 @@ def _choose2(x: jax.Array) -> jax.Array:
     return x * (x - 1.0) * 0.5
 
 
-def vertex_butterflies(A: jax.Array) -> jax.Array:
-    """⋈ for every row vertex of A (mask rows for tip peeling)."""
+def _dense_limit() -> int:
+    """Element budget for materializing the full n×n wedge matrix W
+    (shared knob with the dense peel engine's guard)."""
+    return int(os.environ.get("REPRO_DENSE_MAX_ELEMS", str(2 ** 28)))
+
+
+def vertex_butterflies(A: jax.Array, block: int = 512) -> jax.Array:
+    """⋈ for every row vertex of A (mask rows for tip peeling).
+
+    When the full wedge matrix W = A·Aᵀ would exceed
+    ``REPRO_DENSE_MAX_ELEMS`` elements, the reduction routes itself
+    through the row-blocked path (:func:`vertex_butterflies_blocked`,
+    O(block·n) peak) instead of failing — W is only ever consumed as
+    row sums here, so the tiling is exact and invisible to callers.
+    The routing decision is a static-shape check, so under jit it costs
+    nothing at run time; an obs ``counting.tiles`` counter records when
+    it fires."""
+    n = A.shape[0]
+    if n * n > _dense_limit():
+        from repro import obs  # local import: keep core light
+        obs.counter("counting.tiles", dict(
+            tiles=-(-n // block), block=block, rows=n))
+        return vertex_butterflies_blocked(A, block=block)
     W = wedge_counts(A)
     W = W * (1.0 - jnp.eye(W.shape[0], dtype=W.dtype))
     return jnp.sum(_choose2(W), axis=1)

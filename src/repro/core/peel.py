@@ -567,6 +567,7 @@ def tip_decomposition(
     fd_driver: str = "device",
     use_pallas: bool = False,
     fused: bool = False,
+    sup0: Optional[np.ndarray] = None,
 ) -> PeelResult:
     """PBNG tip decomposition (§3.2) — θ per U (or V) vertex.
 
@@ -628,7 +629,7 @@ def tip_decomposition(
     spec = build_peel_spec(
         g, "tip", stats, side=side, engine=engine,
         batch_recount=batch_recount, fd_driver=fd_driver,
-        use_pallas=use_pallas, fused=fused)
+        use_pallas=use_pallas, fused=fused, sup0=sup0)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
 
 
@@ -1146,6 +1147,7 @@ def wing_decomposition(
     fd_driver: str = "device",
     use_pallas: bool = False,
     fused: bool = False,
+    sup0: Optional[np.ndarray] = None,
 ) -> PeelResult:
     """PBNG wing decomposition (§3.3) — θ per edge.
 
@@ -1197,7 +1199,7 @@ def wing_decomposition(
     )
     spec = build_peel_spec(
         g, "wing", stats, engine=engine, be=be, fd_driver=fd_driver,
-        use_pallas=use_pallas, fused=fused)
+        use_pallas=use_pallas, fused=fused, sup0=sup0)
     return peelspec.decompose(spec, P, stats, fd_driver=fd_driver)
 
 

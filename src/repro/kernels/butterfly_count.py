@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["vertex_count_pallas", "matmul_pallas"]
+__all__ = ["vertex_count_pallas", "vertex_count_tile_pallas",
+           "matmul_pallas"]
 
 
 def _vertex_count_kernel(a_i_ref, a_j_ref, o_ref, acc_ref):
@@ -73,6 +74,60 @@ def vertex_count_pallas(
         scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
         interpret=interpret,
     )(A, A)
+
+
+def _vertex_count_tile_kernel(a_i_ref, a_j_ref, o_ref, acc_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = jax.lax.dot_general(
+        a_i_ref[...], a_j_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] += jnp.sum(w * (w - 1.0) * 0.5, axis=1)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...]
+
+
+def vertex_count_tile_pallas(
+    A_rows: jax.Array,
+    A: jax.Array,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Tile-accumulate mode: butterfly partials for ONE row tile.
+
+    ``A_rows`` is a (rows, k) slice of the padded adjacency ``A``; the
+    host loops row tiles (``ops.vertex_butterflies_tiled``), so peak
+    device compute state is one (bm, k) × (bn, k) block pair no matter
+    how many rows the graph has.  Unlike :func:`vertex_count_pallas`
+    the diagonal is NOT masked in-kernel (the tile does not know its
+    global row offset); the self-pair term is exactly C(d_r, 2) since
+    W[r, r] = d_r, and the caller subtracts it on the host.
+    """
+    rows, k = A_rows.shape
+    n = A.shape[0]
+    assert rows % bm == 0 and n % bn == 0, "pad tiles before calling"
+    grid = (rows // bm, n // bn)
+    return pl.pallas_call(
+        _vertex_count_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm,), jnp.float32)],
+        interpret=interpret,
+    )(A_rows, A)
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref):

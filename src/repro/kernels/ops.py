@@ -14,14 +14,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bloom_update import bloom_update_pallas
-from .butterfly_count import matmul_pallas, vertex_count_pallas
+from .butterfly_count import (
+    matmul_pallas,
+    vertex_count_pallas,
+    vertex_count_tile_pallas,
+)
 from .fd_round import fd_round_tip_pallas, fd_round_wing_pallas
 from .flash_attention import flash_attention_pallas
 from .support_update import support_update_pallas
-from .wedge_count import wedge_count_pallas
+from .wedge_count import wedge_count_pallas, wedge_count_tile_pallas
 
 __all__ = [
     "vertex_butterflies",
+    "vertex_butterflies_tiled",
     "edge_wedge_matrix",
     "bloom_update",
     "fd_round_tip",
@@ -30,6 +35,7 @@ __all__ = [
     "pack_blooms",
     "pair_wedge_counts",
     "support_update",
+    "tile_row_counts",
     "tip_slot_loss",
     "default_interpret",
 ]
@@ -60,6 +66,104 @@ def vertex_butterflies(
     Ap = _pad_to(Ap, bn, 0)
     out = vertex_count_pallas(Ap, bm=bm, bn=bn, interpret=interpret)
     return out[:n]
+
+
+def _row_bucket(n: int, mult: int) -> int:
+    """Round n up to a quarter-pow2 bucket (a multiple of ``mult``).
+
+    Tile row counts vary per tile; jitting on the raw count would
+    recompile the wrapper for every tile.  Bucketing to {1, 1.25, 1.5,
+    1.75}·2^k caps the number of compiled shapes at O(log n) while
+    wasting < 25 % rows of zero padding.
+    """
+    n = max(int(n), mult)
+    p = 1 << (n - 1).bit_length()      # smallest pow2 >= n
+    half = p // 2
+    for q in (4, 5, 6, 7):
+        cand = -(-(half * q // 4) // mult) * mult
+        if cand >= n:
+            return cand
+    return -(-p // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("bp", "bk", "interpret"))
+def _tile_row_counts_inner(slots, bp, bk, interpret):
+    s = _pad_to(_pad_to(slots, bp, 0), bk, 1)
+    return wedge_count_tile_pallas(s, bp=bp, bk=bk, interpret=interpret)
+
+
+def tile_row_counts(
+    slots: np.ndarray,
+    bp: int = 8,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Exact int32 row sums of an int32 0/1 slot matrix.
+
+    The bounded-tile ⋈init path (``core.csr.tiled_butterfly_init``)
+    calls this once per wedge tile; rows are fixed-width segments of a
+    pair's flags, reduced to int64 totals on the host.  Row counts are
+    bucketed (``_row_bucket``) so repeated tiles hit a handful of
+    compiled shapes instead of one per tile.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n = slots.shape[0]
+    nb = _row_bucket(n, bp)
+    if nb > n:
+        slots = np.pad(slots, ((0, nb - n), (0, 0)))
+    out = _tile_row_counts_inner(
+        jnp.asarray(slots, jnp.int32), bp, bk, interpret
+    )
+    return np.asarray(out)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+def _vertex_tile_inner(A_rows, Ap, bm, bn, interpret):
+    return vertex_count_tile_pallas(
+        A_rows, Ap, bm=bm, bn=bn, interpret=interpret
+    )
+
+
+def vertex_butterflies_tiled(
+    A,
+    tile_rows: int = 1024,
+    bm: int = 128,
+    bn: int = 128,
+    interpret: bool | None = None,
+) -> np.ndarray:
+    """Per-row butterfly counts with one row tile in flight at a time.
+
+    Host loop over ``tile_rows``-row slices of the padded adjacency,
+    each dispatched through the tile-accumulate kernel
+    (``vertex_count_tile_pallas``); the kernel skips diagonal masking
+    (a tile doesn't know its global row offset, and baking the offset
+    in would recompile per tile), so the exact self-pair term C(d_r, 2)
+    is subtracted here.  Every tile is padded to the same shape — one
+    compiled program total.  Returns int64 counts.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    A = np.asarray(A)
+    n = A.shape[0]
+    deg = A.sum(axis=1).astype(np.int64)
+    tile_rows = max(-(-tile_rows // bm) * bm, bm)
+    Ap = np.asarray(
+        _pad_to(_pad_to(jnp.asarray(A, jnp.float32), bn, 0), 128, 1)
+    )
+    Aj = jnp.asarray(Ap)
+    out = np.zeros(n, dtype=np.float64)
+    for r0 in range(0, n, tile_rows):
+        r1 = min(r0 + tile_rows, n)
+        tile = Ap[r0:r1]
+        if tile.shape[0] < tile_rows:
+            tile = np.pad(tile, ((0, tile_rows - tile.shape[0]), (0, 0)))
+        part = _vertex_tile_inner(
+            jnp.asarray(tile), Aj, bm, bn, interpret
+        )
+        out[r0:r1] = np.asarray(part, dtype=np.float64)[: r1 - r0]
+    self_pair = deg * (deg - 1) // 2
+    return np.rint(out).astype(np.int64) - self_pair
 
 
 @functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))

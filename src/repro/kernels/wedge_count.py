@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["wedge_count_pallas"]
+__all__ = ["wedge_count_pallas", "wedge_count_tile_pallas"]
 
 
 def _wedge_count_kernel(slots_ref, w_ref, bf_ref, acc_ref):
@@ -40,6 +40,50 @@ def _wedge_count_kernel(slots_ref, w_ref, bf_ref, acc_ref):
         w = acc_ref[...]
         w_ref[...] = w
         bf_ref[...] = w * (w - 1.0) * 0.5
+
+
+def _wedge_count_tile_kernel(slots_ref, w_ref, acc_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.sum(slots_ref[...], axis=1)
+
+    @pl.when(k == pl.num_programs(1) - 1)
+    def _done():
+        w_ref[...] = acc_ref[...]
+
+
+def wedge_count_tile_pallas(
+    slots: jax.Array, bp: int = 8, bk: int = 128, interpret: bool = False
+) -> jax.Array:
+    """Tile-accumulate mode: exact int32 per-row partial counts.
+
+    Used by the bounded-tile ⋈init path (``core.csr
+    .tiled_butterfly_init``): each row holds a fixed-width segment of
+    ONE pair's wedge flags, so a hub pair spans several rows whose
+    int32 partials the host reduces in int64 — no f32 round-trip, no
+    C(W, 2) emit, and therefore none of the 2²⁴ exactness ceiling of
+    :func:`wedge_count_pallas`.  Per-launch device working set is one
+    (bp, bk) block + the (bp,) accumulator regardless of tile size.
+
+    slots: (n_rows_pad, width) int32 0/1 flags, pre-padded to (bp, bk)
+    multiples.  Returns (n_rows_pad,) int32 row sums.
+    """
+    n, kdim = slots.shape
+    assert n % bp == 0 and kdim % bk == 0, "pad slots before calling"
+    grid = (n // bp, kdim // bk)
+    return pl.pallas_call(
+        _wedge_count_tile_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((bp, bk), lambda i, k: (i, k))],
+        out_specs=pl.BlockSpec((bp,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bp,), jnp.int32)],
+        interpret=interpret,
+    )(slots)
 
 
 def wedge_count_pallas(

@@ -32,7 +32,20 @@ def _validate(args, n_dev: int) -> None:
     if args.engine is None:
         # per-kind default: the user never chose an engine, so resolve
         # to each kind's canonical one instead of erroring on a default
-        args.engine = "beindex" if args.kind == "wing" else "csr"
+        # (real graphs default to csr — the only engine whose memory is
+        # wedge-bounded, matching the tiled ⋈init they arrive through)
+        if args.edges:
+            args.engine = "csr"
+        else:
+            args.engine = "beindex" if args.kind == "wing" else "csr"
+    if args.edges and args.dataset:
+        raise LaunchError(
+            "--edges and --dataset are exclusive graph sources")
+    if args.edges and n_dev > 1:
+        raise LaunchError(
+            "--edges feeds the tiled ⋈init into the single-device "
+            "engines; the distributed CD/FD paths take proxy graphs "
+            "(run single-device, or --dryrun for mesh checks)")
     if args.kind == "tip" and args.engine == "beindex":
         raise LaunchError(
             "tip peels vertices — there is no BE-Index tip engine; "
@@ -391,7 +404,35 @@ def _run(args) -> int:
     n_dev = len(jax.devices())
     _validate(args, n_dev)
 
-    if args.dataset:
+    sup0 = None
+    if args.edges:
+        # real-data path: out-of-core ingest → bounded-tile ⋈init →
+        # the same CD/FD engines, fed through sup0 injection (the
+        # engines never see the O(Σ deg²) wedge list at once)
+        from types import SimpleNamespace
+
+        from repro.core import csr as csrmod
+        from repro.data import ingest_edges
+
+        ig = ingest_edges(args.edges, out_dir=args.ingest_dir)
+        g = ig.as_graph()
+        print(f"[peel] ingested {args.edges}: |U|={ig.n_u} "
+              f"|V|={ig.n_v} |E|={ig.m}")
+        if args.kind == "tip" and args.side == "v":
+            # wedge centers must sit on the peeled side's opposite
+            # partition: transpose the CSR view, not the data
+            src = SimpleNamespace(n_u=ig.n_v, n_v=ig.n_u, m=ig.m,
+                                  csr_v=ig.csr_u)
+        else:
+            src = ig
+        sup_e, sup_u, total_bf, tstats = csrmod.tiled_butterfly_init(
+            src, tile_wedges=args.tile_wedges,
+            use_pallas=args.use_pallas)
+        sup0 = sup_e if args.kind == "wing" else sup_u
+        print(f"[peel] tiled init: butterflies={total_bf} "
+              f"tiles={tstats.n_tiles} wedges={tstats.n_wedges} "
+              f"peak_tile_wedges={tstats.peak_tile_wedges}")
+    elif args.dataset:
         g = paper_proxy_dataset(args.dataset)
     else:
         g = powerlaw_bipartite(args.n_u, args.n_v, args.m, seed=args.seed)
@@ -411,7 +452,7 @@ def _run(args) -> int:
             res = wing_decomposition(
                 g, P=args.parts, engine=args.engine,
                 fd_driver=args.fd_driver, use_pallas=args.use_pallas,
-                fused=args.fused_fd)
+                fused=args.fused_fd, sup0=sup0)
             result = res
             theta = res.theta
             s = res.stats
@@ -432,7 +473,7 @@ def _run(args) -> int:
             res = tip_decomposition(
                 g, side=args.side, P=args.parts, engine=args.engine,
                 fd_driver=args.fd_driver, use_pallas=args.use_pallas,
-                fused=args.fused_fd)
+                fused=args.fused_fd, sup0=sup0)
             result = res
             theta = res.theta
             s = res.stats
@@ -445,8 +486,12 @@ def _run(args) -> int:
             and getattr(result, "timeline", None) is not None):
         stats_out["timeline"] = result.timeline.summary()
         print(f"[peel] timeline: {stats_out['timeline']}")
+    import hashlib
+    theta_sha = hashlib.sha256(
+        np.asarray(theta, dtype=np.int64).tobytes()).hexdigest()
+    stats_out["theta_sha256"] = theta_sha
     print(f"[peel] theta: max={int(theta.max()) if theta.size else 0} "
-          f"levels={len(set(theta.tolist()))}")
+          f"levels={len(set(theta.tolist()))} sha256={theta_sha}")
     if args.emit_hierarchy:
         _emit_hierarchy(args, g, result if result is not None else theta,
                         kind=args.kind, stats=stats_out)
@@ -463,6 +508,24 @@ def main():
                     help="entity universe to peel: edges (wing) or "
                          "vertices (tip); flags below apply uniformly")
     ap.add_argument("--dataset", default=None)
+    ap.add_argument("--edges", default=None, metavar="PATH",
+                    help="peel a real graph: KONECT/SNAP-style edge "
+                         "list (TSV/space separated, %% or # comments, "
+                         "1- or 0-based ids, negative third column = "
+                         "deletion).  Ingested out of core (chunked "
+                         "dedup + degree-ordered relabel to a "
+                         "memory-mapped CSR), then counted in bounded "
+                         "wedge tiles (--tile-wedges) before the "
+                         "engines run.  Exclusive with --dataset")
+    ap.add_argument("--tile-wedges", type=int, default=1 << 20,
+                    help="wedge-tile budget for the --edges counting "
+                         "pass: peak host memory is O(tile) and peak "
+                         "device memory one kernel block, never the "
+                         "full O(Σ deg²) wedge list (default 2^20)")
+    ap.add_argument("--ingest-dir", default=None, metavar="DIR",
+                    help="cache directory for the --edges ingestion "
+                         "artifacts (default: <edges>.ingest next to "
+                         "the input; re-runs hit the cache)")
     ap.add_argument("--n-u", type=int, default=400)
     ap.add_argument("--n-v", type=int, default=200)
     ap.add_argument("--m", type=int, default=2000)

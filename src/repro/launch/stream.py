@@ -45,11 +45,16 @@ def _validate(args) -> None:
             "streaming localizes FD re-runs per partition; that needs "
             "the csr or dense engine (beindex has no partition-local "
             "FD entry) — pass --engine csr|dense")
-    if args.fd_driver not in ("device", "host"):
+    if args.fd_driver not in ("device", "host", "vmapped"):
         raise LaunchError(
-            "streaming requires a per-partition fd_driver: vmapped/"
-            "fused dispatch every partition in one launch and cannot "
-            "re-run a subset — pass --fd-driver device|host")
+            "streaming supports the per-partition fd_drivers (device/"
+            "host — dirty partitions re-run alone) and vmapped (the "
+            "whole Phase 2 redispatches as its one batched loop); "
+            "fused is not wired — pass --fd-driver device|host|vmapped")
+    if args.fd_driver == "vmapped" and args.engine != "csr":
+        raise LaunchError(
+            "fd_driver='vmapped' is the csr single-dispatch Phase 2 — "
+            "pass --engine csr")
     if args.kind == "wing" and args.side != "u":
         raise LaunchError("wing peels edges; there is no --side (use u)")
     if args.batch <= 0:
@@ -202,10 +207,11 @@ def main():
                     help="peel engine; streaming needs a partition-"
                          "local FD entry, so csr (default) or dense")
     ap.add_argument("--fd-driver", default="device",
-                    choices=["device", "host"],
-                    help="per-partition FD driver used for the "
-                         "localized re-runs (vmapped/fused dispatch "
-                         "all partitions at once and cannot localize)")
+                    choices=["device", "host", "vmapped"],
+                    help="FD driver for the per-epoch re-runs: device/"
+                         "host re-peel only the dirty partitions; "
+                         "vmapped (csr only) redispatches the whole "
+                         "Phase 2 as its one batched while_loop")
     ap.add_argument("--parts", type=int, default=16)
     ap.add_argument("--dataset", default=None)
     ap.add_argument("--n-u", type=int, default=400)

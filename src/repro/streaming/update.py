@@ -47,15 +47,19 @@ __all__ = ["StreamConfig", "StreamState", "EpochReport"]
 
 @dataclasses.dataclass(frozen=True)
 class StreamConfig:
-    """How the stream peels.  ``fd_driver`` must be per-partition
-    ("device" | "host") — the vmapped/fused drivers dispatch every
-    partition in one launch, so there is nothing to localize."""
+    """How the stream peels.  Per-partition ``fd_driver`` values
+    ("device" | "host") localize Phase 2 to dirty partitions;
+    ``"vmapped"`` (csr engine, single device) instead re-dispatches the
+    WHOLE Phase 2 as its one batched while_loop every epoch — a single
+    launch, trading localization for dispatch count.  θ stays
+    bit-identical either way (the differential harness covers all
+    three)."""
 
     kind: str = "wing"          # "wing" | "tip"
     side: str = "u"             # tip only: which vertex set carries θ
     engine: str = "csr"         # "csr" | "dense"
     P: int = 16
-    fd_driver: str = "device"   # "device" | "host"
+    fd_driver: str = "device"   # "device" | "host" | "vmapped"
     batch_recount: object = "adaptive"  # dense tip only (the §5.1 knob)
     use_pallas: bool = False
     level_block: int = 32
@@ -67,11 +71,26 @@ class StreamConfig:
             raise ValueError(
                 f"streaming supports engines 'csr' | 'dense', "
                 f"got {self.engine!r}")
-        if self.fd_driver not in ("device", "host"):
+        if self.fd_driver not in ("device", "host", "vmapped"):
             raise ValueError(
-                "streaming requires a per-partition fd_driver "
-                "('device' | 'host'): vmapped/fused dispatch all "
-                "partitions in one launch and cannot re-run a subset")
+                "streaming fd_driver must be 'device' | 'host' "
+                "(per-partition, localized to dirty partitions) or "
+                "'vmapped' (csr, single-device: one batched Phase-2 "
+                "launch per epoch); the fused driver has no streaming "
+                "entry")
+        if self.fd_driver == "vmapped":
+            if self.engine != "csr":
+                raise ValueError(
+                    "fd_driver='vmapped' is the csr single-dispatch "
+                    "Phase 2; streaming supports it with engine='csr' "
+                    "only")
+            import jax
+            if jax.device_count() > 1:
+                raise ValueError(
+                    "streaming fd_driver='vmapped' is single-device; "
+                    "the distributed CD/FD path is not reachable from "
+                    "StreamConfig — run the per-partition drivers or a "
+                    "single device")
         if self.side not in ("u", "v"):
             raise ValueError(self.side)
         if self.kind == "wing" and self.side != "u":
@@ -226,20 +245,32 @@ class StreamState:
         with obs.span("stream.repair", cat="stream",
                       partitions_dirty=int(dirty.size)) as rsp:
             pp_new: Dict[int, Tuple[int, int, int]] = {}
-            with obs.span("stream.fd", cat="stream"):
-                run_fd(spec, part, sup_init, theta, p_eff, stats,
-                       fd_driver=cfg.fd_driver, only=dirty,
-                       per_partition=pp_new)
-            # reassemble the full-run stats row from carried partitions
-            pp_full = {
-                j: pp_new[j] if j in pp_new else self._pp[j]
-                for j in range(p_eff)
-            }
-            rows = list(pp_full.values())
-            stats.rho_fd_total = sum(r for r, _, _ in rows)
-            stats.rho_fd_max = max((r for r, _, _ in rows), default=0)
-            stats.updates = upd_cd + sum(u for _, u, _ in rows)
-            stats.recounts = rec_cd + sum(c for _, _, c in rows)
+            if cfg.fd_driver == "vmapped":
+                # the vmapped driver is ONE batched launch over every
+                # partition — nothing to localize, so each epoch
+                # re-dispatches the whole Phase 2 and the driver itself
+                # writes the full-run stats row (rho totals set,
+                # updates accumulated on top of the CD counts)
+                with obs.span("stream.fd", cat="stream"):
+                    run_fd(spec, part, sup_init, theta, p_eff, stats,
+                           fd_driver="vmapped")
+                pp_full = {}
+            else:
+                with obs.span("stream.fd", cat="stream"):
+                    run_fd(spec, part, sup_init, theta, p_eff, stats,
+                           fd_driver=cfg.fd_driver, only=dirty,
+                           per_partition=pp_new)
+                # reassemble the full-run stats row from carried
+                # partitions
+                pp_full = {
+                    j: pp_new[j] if j in pp_new else self._pp[j]
+                    for j in range(p_eff)
+                }
+                rows = list(pp_full.values())
+                stats.rho_fd_total = sum(r for r, _, _ in rows)
+                stats.rho_fd_max = max((r for r, _, _ in rows), default=0)
+                stats.updates = upd_cd + sum(u for _, u, _ in rows)
+                stats.recounts = rec_cd + sum(c for _, _, c in rows)
             result = PeelResult(
                 theta=theta, part=part, ranges=ranges,
                 support_init=sup_init, stats=stats)

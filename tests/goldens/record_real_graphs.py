@@ -1,0 +1,65 @@
+"""Record real-dataset θ checksums — the end-to-end ingest→peel oracle.
+
+Run from the repo root at the commit whose behaviour is the contract::
+
+    PYTHONPATH=src python tests/goldens/record_real_graphs.py
+
+Each entry pins one real edge-list dataset all the way through the
+out-of-core path: chunked ingest (``data.ingest``), bounded-tile ⋈init
+(``core.csr.tiled_butterfly_init``) and a full peel, recorded as the
+sha256 of the int64 θ vector plus the graph invariants the ingest must
+reproduce.  ``tests/test_ingest.py`` replays the pipeline and compares;
+the nightly real-graph CI job asserts the same checksums on the
+downloaded KONECT originals.  Regenerating is only legitimate when
+peeling or ingestion SEMANTICS intentionally change.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import csr
+from repro.core.peel import tip_decomposition, wing_decomposition
+from repro.data import ingest_edges
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "real_graphs.json")
+DATASETS = [
+    ("southern_women",
+     os.path.join(HERE, "..", "..", "datasets", "southern_women.tsv")),
+]
+
+
+def _sha(theta) -> str:
+    return hashlib.sha256(
+        np.asarray(theta, dtype=np.int64).tobytes()).hexdigest()
+
+
+def main() -> None:
+    goldens = {}
+    for name, path in DATASETS:
+        with tempfile.TemporaryDirectory() as td:
+            ig = ingest_edges(path, out_dir=os.path.join(td, "ing"))
+            g = ig.as_graph()
+            sup_e, sup_u, total, _ = csr.tiled_butterfly_init(ig)
+            wing = wing_decomposition(g, engine="csr", sup0=sup_e)
+            tip = tip_decomposition(g, side="u", engine="csr", sup0=sup_u)
+            goldens[name] = dict(
+                n_u=ig.n_u, n_v=ig.n_v, m=ig.m,
+                total_butterflies=int(total),
+                theta_wing_sha256=_sha(wing.theta),
+                theta_tip_u_sha256=_sha(tip.theta),
+            )
+            print(name, goldens[name])
+    with open(OUT, "w") as f:
+        json.dump(goldens, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print("wrote", OUT)
+
+
+if __name__ == "__main__":
+    main()

@@ -102,3 +102,24 @@ def test_known_small_graph():
     )
     assert ref.butterfly_count_total(g) == 3
     assert np.array_equal(ref.edge_butterflies_ref(g), np.full(6, 2))
+
+
+def test_vertex_butterflies_autoroutes_oversized(monkeypatch):
+    """Past REPRO_DENSE_MAX_ELEMS the dense reduction must route itself
+    through the row-blocked path (same values) and emit the obs
+    ``counting.tiles`` counter instead of failing."""
+    from repro import obs
+
+    g = random_bipartite(40, 30, 200, seed=7)
+    A = jnp.asarray(g.adjacency())
+    want = np.asarray(counting.vertex_butterflies(A))
+    monkeypatch.setenv("REPRO_DENSE_MAX_ELEMS", "64")
+    obs.enable()
+    try:
+        got = np.asarray(counting.vertex_butterflies(A))
+        events = [e for e in obs.get_tracer().events
+                  if e["name"] == "counting.tiles"]
+    finally:
+        obs.disable()
+    assert np.array_equal(got, want)
+    assert events and events[0]["args"]["rows"] == g.n_u

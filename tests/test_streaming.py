@@ -80,6 +80,7 @@ def _assert_identical(st_state, msg):
 @pytest.mark.parametrize("kind,engine,fd_driver,side", [
     ("wing", "csr", "device", "u"),
     ("wing", "csr", "host", "u"),
+    ("wing", "csr", "vmapped", "u"),
     ("wing", "dense", "host", "u"),
     ("tip", "csr", "device", "u"),
     ("tip", "csr", "device", "v"),
@@ -215,9 +216,14 @@ def test_stream_config_validation():
     with pytest.raises(ValueError):
         StreamConfig(engine="beindex")
     with pytest.raises(ValueError):
-        StreamConfig(fd_driver="vmapped")
+        StreamConfig(fd_driver="fused")
+    with pytest.raises(ValueError):
+        # vmapped is the csr single-dispatch Phase 2 — dense has none
+        StreamConfig(engine="dense", fd_driver="vmapped")
     with pytest.raises(ValueError):
         StreamConfig(kind="wing", side="v")
+    # reachable since the vmapped plumb-through (single device, csr)
+    assert StreamConfig(fd_driver="vmapped").fd_driver == "vmapped"
 
 
 def test_run_fd_only_validation():
